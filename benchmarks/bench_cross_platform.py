@@ -1,0 +1,61 @@
+"""Paper Table 6: throughput + bandwidth efficiency per dataset x model x
+algorithm.
+
+Two result sets:
+  * measured — the real host pipeline + jit'd device step on THIS machine,
+    scaled-down synthetic datasets (scale-12 RMAT stand-ins);
+  * analytic — the calibrated performance model at the paper's full dataset
+    sizes and platform constants, with beta measured from the feature store.
+GPU baseline columns are the paper's published numbers (for the ratio only).
+"""
+import time
+
+import numpy as np
+
+from repro.configs.gnn import GNNModelConfig, DATASETS
+from repro.data.graphs import scaled_dataset
+from repro.core.trainer import SyncGNNTrainer
+from repro.core.dse import FPGADSE, PlatformMetadata, minibatch_shape
+from repro.core.simulator import simulate_epoch, SimConfig
+
+# Paper Table 6 (GPU baseline, DistDGL rows, NVTPS)
+PAPER_GPU_NVTPS = {
+    ("reddit", "gcn"): 15.6e6, ("reddit", "graphsage"): 15.1e6,
+    ("yelp", "gcn"): 21.6e6, ("yelp", "graphsage"): 21.1e6,
+    ("amazon", "gcn"): 22.6e6, ("amazon", "graphsage"): 21.8e6,
+    ("ogbn-products", "gcn"): 97.5e6, ("ogbn-products", "graphsage"): 91.2e6,
+}
+GPU_BW = 768e9 * 4  # 4x RTX A5000
+
+
+def run(report, quick: bool = True):
+    model_names = ["gcn", "graphsage"]
+    datasets = ["reddit", "ogbn-products"] if quick else list(DATASETS)
+    algos = ["distdgl", "pagraph", "p3"] if not quick else ["distdgl"]
+    for ds_name in datasets:
+        g = scaled_dataset(ds_name, scale=11)
+        for model in model_names:
+            cfg = GNNModelConfig(model, 2, 128,
+                                 fanouts=(5, 5) if quick else (25, 10),
+                                 batch_targets=256)
+            for algo in algos:
+                tr = SyncGNNTrainer(g, cfg, num_devices=4, algorithm=algo)
+                tr.run_epoch()            # warmup/compile
+                t0 = time.time()
+                m = tr.run_epoch()
+                measured = m["vertices_traversed"] / (time.time() - t0)
+                beta = m["beta"]
+                # analytic at full scale w/ measured beta
+                sim = simulate_epoch(
+                    GNNModelConfig(model, 2, 128, (25, 10), 1024),
+                    DATASETS[ds_name], 4, beta, SimConfig())
+                paper_gpu = PAPER_GPU_NVTPS.get((ds_name, model))
+                ratio = sim["nvtps"] / paper_gpu if paper_gpu else float("nan")
+                bw_eff = sim["nvtps"] / ((77e9 * 4) / 1e9)  # NVTPS per GB/s
+                gpu_bw_eff = (paper_gpu or 0) / (GPU_BW / 1e9)
+                report(f"t6_{ds_name[:6]}_{model}_{algo}",
+                       measured / 1e3,
+                       f"meas_kNVTPS={measured/1e3:.0f} beta={beta:.2f} "
+                       f"analytic_M={sim['nvtps']/1e6:.1f} "
+                       f"vsGPU={ratio:.2f}x "
+                       f"bw_eff_K={bw_eff/1e3:.0f}(gpu {gpu_bw_eff/1e3:.1f})")

@@ -1,0 +1,84 @@
+"""Kernel micro-benchmarks (paper §5.3): wall time of the jnp reference path
+on this CPU + analytic TPU-roofline projections for the Pallas kernels
+(interpret mode is a correctness harness, not a perf path)."""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.aggregate import build_block_csr
+from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile/warmup
+    t0 = time.time()
+    for _ in range(iters):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.time() - t0) / iters
+
+
+def run(report, quick: bool = True):
+    rng = np.random.default_rng(0)
+
+    # update (systolic matmul): M=4096 tokens, 602->128 (reddit layer 1)
+    M, K, N = 4096, 602, 128
+    x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+    b = jnp.zeros(N, jnp.float32)
+    f = jax.jit(lambda x, w, b: ref.update_mlp_ref(x, w, b, "relu"))
+    dt = _time(f, x, w, b)
+    flops = 2 * M * K * N
+    tpu_t = max(flops / PEAK_FLOPS_BF16,
+                (M * K + K * N + M * N) * 2 / HBM_BW)
+    report("kern_update_cpu", dt * 1e6,
+           f"cpu_GFLOPs={flops/dt/1e9:.1f} tpu_roofline_us={tpu_t*1e6:.1f}")
+
+    # aggregate: reddit-like block (10240 dst, 25 deg, 602 feats)
+    n_dst, deg, F = (2048, 8, 256) if quick else (10240, 25, 602)
+    n_src = n_dst * 4
+    E = n_dst * deg
+    es = rng.integers(0, n_src, E).astype(np.int32)
+    ed = rng.integers(0, n_dst, E).astype(np.int32)
+    em = np.ones(E, bool)
+    h = jnp.asarray(rng.standard_normal((n_src, F)), jnp.float32)
+    agg = jax.jit(lambda es, ed, em, h: ref.aggregate_edges_ref(
+        es, ed, em, h, n_dst))
+    dt = _time(agg, jnp.asarray(es), jnp.asarray(ed), jnp.asarray(em), h)
+    blocks, cols, _ = build_block_csr(es, ed, em, n_src, n_dst)
+    nnzb = int((np.abs(blocks).sum((2, 3)) > 0).sum())
+    mxu_flops = nnzb * 128 * 128 * F * 2
+    tpu_t = max(mxu_flops / PEAK_FLOPS_BF16,
+                (n_src * F * 4 + E * 8) / HBM_BW)
+    report("kern_aggregate_cpu", dt * 1e6,
+           f"edges={E} cpu_GBps={(E*F*4)/dt/1e9:.1f} "
+           f"blockcsr_nnzb={nnzb} tpu_roofline_us={tpu_t*1e6:.1f}")
+
+    # flash attention: one llama3 head-block (per-device shape)
+    BH, S, D = (4, 1024, 128) if quick else (8, 4096, 128)
+    q = jnp.asarray(rng.standard_normal((BH, S, D)), jnp.bfloat16)
+    k, v = q, q
+    att = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, True))
+    dt = _time(att, q, k, v)
+    flops = 4 * BH * S * S * D
+    report("kern_flash_cpu", dt * 1e6,
+           f"cpu_GFLOPs={flops/dt/1e9:.1f} "
+           f"tpu_roofline_us={flops/PEAK_FLOPS_BF16*1e6:.1f}")
+
+    # wkv6: rwkv6-3b per-device chunk workload
+    BH, S, Kd = (80, 512, 64) if quick else (320, 4096, 64)
+    r = jnp.asarray(rng.standard_normal((BH, S, Kd)) * .5, jnp.float32)
+    lw = jnp.asarray(-np.exp(rng.standard_normal((BH, S, Kd))), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((BH, 1, Kd)), jnp.float32)
+    from repro.nn.rwkv6 import wkv6_chunked
+    st = jnp.zeros((BH, 1, Kd, Kd), jnp.float32)
+    wk = jax.jit(lambda r, k, v, lw, u, st: wkv6_chunked(
+        r[:, :, None], k[:, :, None], v[:, :, None], lw[:, :, None],
+        u[0, 0][None, :], st)[0])  # u: (H=1, K) shared bonus row
+    dt = _time(wk, r, r, r, lw, u, st)
+    flops = BH * S * (16 * Kd * 3 + 2 * Kd * Kd) * 2
+    report("kern_wkv6_cpu", dt * 1e6,
+           f"cpu_GFLOPs={flops/dt/1e9:.1f} chunk=16")

@@ -1,0 +1,56 @@
+"""Host-pipeline microbenchmarks (paper §7.4 metrics, measured): sampling
+rate, feature-gather bandwidth, scheduler overhead, epoch NVTPS on this
+host. These calibrate the simulator's t_sampling."""
+import time
+
+import numpy as np
+
+from repro.configs.gnn import GNNModelConfig
+from repro.data.graphs import scaled_dataset
+from repro.core.sampler import NeighborSampler
+from repro.core.partition import metis_like_partition
+from repro.core.feature_store import FeatureStore
+from repro.core import scheduler as sched
+from repro.core.trainer import SyncGNNTrainer
+
+
+def run(report, quick: bool = True):
+    g = scaled_dataset("ogbn-products", scale=11)
+    cfg = GNNModelConfig("graphsage", 2, 128, (5, 5) if quick else (25, 10),
+                         256)
+
+    # sampling rate
+    s = NeighborSampler(g, cfg, g.train_ids, 0)
+    n = 8
+    t0 = time.time()
+    mbs = [s.next_batch() for _ in range(n)]
+    dt = (time.time() - t0) / n
+    report("pipe_sampling", dt * 1e6, f"batches_per_s={1/dt:.1f}")
+
+    # feature gather bandwidth + beta
+    part = metis_like_partition(g, 4)
+    fs = FeatureStore(g, part, "distdgl")
+    t0 = time.time()
+    for i, mb in enumerate(mbs):
+        fs.gather(i % 4, mb.nodes[0], mb.node_mask[0])
+    dt = (time.time() - t0) / n
+    rows = len(mbs[0].nodes[0])
+    bw = rows * g.features.shape[1] * 4 / dt
+    report("pipe_gather", dt * 1e6,
+           f"GBps={bw/1e9:.2f} beta={fs.beta():.2f}")
+
+    # scheduler overhead (pure python) for a big epoch
+    counts = [500, 300, 420, 380]
+    t0 = time.time()
+    schedule = sched.two_stage_schedule(counts)
+    dt = time.time() - t0
+    report("pipe_scheduler", dt * 1e6,
+           f"assignments={len(schedule)} per_batch_ns={dt/len(schedule)*1e9:.0f}")
+
+    # end-to-end epoch NVTPS (measured, this host)
+    tr = SyncGNNTrainer(g, cfg, num_devices=4, algorithm="distdgl")
+    tr.run_epoch()
+    m = tr.run_epoch()
+    report("pipe_epoch", m["epoch_time_s"] * 1e6,
+           f"nvtps={m['nvtps']:.0f} util={m['utilization']:.2f} "
+           f"beta={m['beta']:.2f}")

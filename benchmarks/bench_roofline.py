@@ -1,0 +1,66 @@
+"""40-cell roofline table from the dry-run artifacts (deliverable g).
+
+Reads dryrun_single.jsonl (+ dryrun_multi.jsonl when present) and prints the
+per-(arch x shape) three-term roofline, dominant bottleneck, MODEL_FLOPS
+ratio — the §Roofline source of truth."""
+import json
+import os
+
+from repro.launch.mesh import PEAK_FLOPS_BF16
+
+
+def load(path):
+    rows = {}
+    if not os.path.exists(path):
+        return rows
+    for line in open(path):
+        d = json.loads(line)
+        rows[(d["arch"], d["shape"])] = d
+    return rows
+
+
+def run(report, quick: bool = True):
+    single = load("dryrun_single.jsonl")
+    multi = load("dryrun_multi.jsonl")
+    if not single:
+        report("roofline_missing", 0.0,
+               "run: PYTHONPATH=src python -m repro.launch.dryrun --all "
+               "--out dryrun_single.jsonl")
+        return
+    hdr = (f"  {'arch':<16s}{'shape':<12s}{'t_comp':>9s}{'t_mem':>9s}"
+           f"{'t_coll':>9s} {'dom':<5s}{'useful':>7s}{'HBM_GB':>8s}")
+    print(hdr)
+    n_ok = 0
+    for (arch, shape), d in sorted(single.items()):
+        if d["status"] == "skipped":
+            print(f"  {arch:<16s}{shape:<12s}    (skip: sub-quadratic "
+                  f"attention required)")
+            continue
+        if d["status"] != "compiled":
+            print(f"  {arch:<16s}{shape:<12s}    FAILED")
+            continue
+        r = d["roofline"]
+        n_ok += 1
+        peak = d["memory"]["peak_device_bytes"] / 2**30
+        print(f"  {arch:<16s}{shape:<12s}{r['t_compute']:9.4f}"
+              f"{r['t_memory']:9.4f}{r['t_collective']:9.4f} "
+              f"{r['dominant']:<5s}{d['useful_flops_ratio']:7.2f}"
+              f"{peak:8.2f}")
+    mp = sum(1 for d in multi.values() if d["status"] == "compiled")
+    report("roofline_cells_compiled", float(n_ok),
+           f"single_pod={n_ok}/32 multi_pod={mp}/32 skips=8 (documented)")
+
+    # headline: roofline fraction of the best train cell
+    best = None
+    for (arch, shape), d in single.items():
+        if shape == "train_4k" and d["status"] == "compiled":
+            r = d["roofline"]
+            frac = r["t_compute"] / max(r["t_compute"], r["t_memory"],
+                                        r["t_collective"])
+            mfu = (d["model_flops"] / d["n_devices"] / PEAK_FLOPS_BF16
+                   / max(r["t_compute"], r["t_memory"], r["t_collective"]))
+            if best is None or mfu > best[2]:
+                best = (arch, frac, mfu)
+    if best:
+        report("roofline_best_train_mfu", best[2],
+               f"arch={best[0]} projected_MFU={best[2]:.2f}")

@@ -1,0 +1,23 @@
+"""Paper Fig. 8: scalability 1->16 accelerators, per algorithm; calibrated
+simulator (the host-bandwidth knee at 205/16 ~ 12.8 devices)."""
+from repro.configs.gnn import GNNModelConfig, DATASETS
+from repro.core.simulator import scaling_curve, SimConfig
+
+
+def run(report, quick: bool = True):
+    cfg = GNNModelConfig("graphsage", 2, 128, (25, 10), 1024)
+    betas = {"distdgl": 0.6, "pagraph": 0.85, "p3": 1.0}
+    for algo, beta in betas.items():
+        curve = scaling_curve(cfg, DATASETS["ogbn-products"], beta,
+                              SimConfig(), max_p=16)
+        sp = {r["p"]: r["speedup"] for r in curve}
+        report(f"fig8_{algo}_speedup16", sp[16],
+               f"p4={sp[4]:.1f} p8={sp[8]:.1f} p12={sp[12]:.1f} "
+               f"p16={sp[16]:.1f} knee_GBs={curve[-1]['host_share_gbs']:.1f}")
+    # efficiency at the knee
+    curve = scaling_curve(cfg, DATASETS["ogbn-products"], 0.6, SimConfig(),
+                          max_p=24)
+    eff = [(r["p"], r["speedup"] / r["p"]) for r in curve]
+    below = next((p for p, e in eff if e < 0.8), None)
+    report("fig8_efficiency_knee_p", float(below or 24),
+           f"first p with <80% efficiency (paper: ~12.8 serviceable)")

@@ -1,0 +1,307 @@
+"""Trip-count-aware cost model over compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, which silently
+drops a factor of n_layers from every scanned model. This parser rebuilds
+per-device cost with loop multipliers:
+
+  * computations are parsed into instruction lists;
+  * every ``while`` gets its trip count from the largest integer constant in
+    its condition computation (all our loops are static-trip ``lax.scan``);
+  * multipliers propagate entry -> while bodies (x trip) -> fusions (x1);
+  * flops: every ``dot`` (2 * prod(out) * prod(contracting dims of lhs));
+  * HBM bytes: at the *scheduled* op level (operands + outputs of non-fused
+    instructions; fusion internals excluded — approximates post-fusion HBM
+    traffic the way HloCostAnalysis does);
+  * collective bytes: per kind, max(in, out), trip-aware.
+
+All figures are per-device (the module is the post-SPMD per-device program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                       r"pred|f8e4m3fn|f8e5m2|s4|u4)\[([0-9,]*)\]")
+_HEADER_RE = re.compile(r"^\s*(ENTRY\s+)?(%[\w.\-]+)\s*\(.*\)\s*->\s*.*\{")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*?)\s+([a-z][a-z0-9\-]*)\((.*)$")
+_CALL_ATTR_RE = re.compile(r"(?:calls|to_apply|body|condition)=(%[\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_INT_RE = re.compile(r"constant\((\d+)\)")
+_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+# ops that move no data / are bookkeeping
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota", "while",
+             "conditional", "call", "custom-call", "broadcast", "reshape",
+             "copy-start", "copy-done", "opt-barrier"}
+
+
+def _shape_info(text: str) -> Tuple[int, List[Tuple[str, Tuple[int, ...]]]]:
+    """Total bytes + list of (dtype, dims) for every shape literal in text."""
+    total = 0
+    shapes = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        d = tuple(int(x) for x in dims.split(",")) if dims else ()
+        n = 1
+        for x in d:
+            n *= x
+        total += n * _DTYPE_BYTES[dt]
+        shapes.append((dt, d))
+    return total, shapes
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    out_bytes: int
+    out_dims: Tuple[Tuple[str, Tuple[int, ...]], ...]
+    operands: Tuple[str, ...]
+    calls: Tuple[str, ...]
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    by_name: Dict[str, Instr] = field(default_factory=dict)
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        h = _HEADER_RE.match(line)
+        if h:
+            cur = Computation(h.group(2))
+            comps[cur.name] = cur
+            if h.group(1):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, result, opcode, rest = m.groups()
+        out_bytes, out_dims = _shape_info(result)
+        # operand names: inside the first balanced paren group
+        depth, i = 1, 0
+        while i < len(rest) and depth:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        opnds = tuple(_OPERAND_RE.findall(rest[:i]))
+        calls = tuple(_CALL_ATTR_RE.findall(rest[i:]))
+        br = _BRANCH_RE.search(rest[i:])
+        if br:
+            calls = calls + tuple(x.strip() for x in br.group(1).split(","))
+        ins = Instr(name, opcode, out_bytes, tuple(out_dims), opnds, calls,
+                    line)
+        cur.instrs.append(ins)
+        cur.by_name[name] = ins
+    assert entry, "no ENTRY computation found"
+    return comps, entry
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Largest integer constant reachable from the while condition."""
+    best = 1
+    seen = set()
+    stack = [cond_name]
+    while stack:
+        cn = stack.pop()
+        if cn in seen or cn not in comps:
+            continue
+        seen.add(cn)
+        for ins in comps[cn].instrs:
+            for v in _CONST_INT_RE.findall(ins.line):
+                best = max(best, int(v))
+            stack.extend(ins.calls)
+    return best
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    out_elems = 1
+    for _, dims in ins.out_dims:
+        for d in dims:
+            out_elems *= d
+    k = 1
+    m = _DIMS_RE.search(ins.line)
+    if m and ins.operands:
+        lhs = comp.by_name.get(ins.operands[0])
+        if lhs is not None and lhs.out_dims:
+            dims = lhs.out_dims[0][1]
+            for idx in (int(x) for x in m.group(1).split(",") if x):
+                if idx < len(dims):
+                    k *= dims[idx]
+    return 2.0 * out_elems * k
+
+
+def _fusion_is_dus(comps: Dict[str, "Computation"], ins: "Instr") -> bool:
+    """Fusion whose root writes through a dynamic-update-slice (an in-place
+    cache update): the big buffer aliases, only the update region moves."""
+    for cn in ins.calls:
+        comp = comps.get(cn)
+        if comp and any(i.opcode == "dynamic-update-slice"
+                        for i in comp.instrs):
+            return True
+    return False
+
+
+def _fusion_operand_bytes(comps: Dict[str, "Computation"], ins: "Instr",
+                          caller: "Computation") -> float:
+    """Effective read bytes of a fusion's operands.
+
+    A parameter consumed ONLY by dynamic-slice reads just the slice; one
+    consumed only as the dynamic-update-slice target aliases in place (the
+    write side is charged via the slice outputs). Everything else reads in
+    full. This keeps stacked scan buffers (sliced per iteration) from being
+    charged at full size every step."""
+    target = None
+    for cn in ins.calls:
+        if cn in comps:
+            target = comps[cn]
+            break
+    full = [caller.by_name[o].out_bytes if o in caller.by_name else 0
+            for o in ins.operands]
+    if target is None:
+        return float(sum(full))
+    params: Dict[int, Instr] = {}
+    for i in target.instrs:
+        if i.opcode == "parameter":
+            mm = re.search(r"parameter\((\d+)\)", i.line)
+            if mm:
+                params[int(mm.group(1))] = i
+    total = 0.0
+    for idx, fb in enumerate(full):
+        pi = params.get(idx)
+        if pi is None:
+            total += fb
+            continue
+        consumers = [i for i in target.instrs if pi.name in i.operands]
+        if consumers and all(c.opcode == "dynamic-slice" for c in consumers):
+            total += sum(c.out_bytes for c in consumers)
+        elif consumers and all(
+                c.opcode == "dynamic-update-slice"
+                and c.operands and c.operands[0] == pi.name
+                for c in consumers):
+            total += 0  # aliased in-place target
+        else:
+            total += fb
+    return total
+
+
+def analyze(text: str) -> dict:
+    comps, entry = parse_module(text)
+
+    # computations reached via fusion/to_apply (internals: bytes not counted)
+    fused: set = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.opcode in ("fusion", "reduce", "reduce-window", "map",
+                              "sort", "scatter", "select-and-scatter"):
+                fused.update(ins.calls)
+
+    # multipliers via BFS from entry
+    mult: Dict[str, float] = {entry: 1.0}
+    order = [entry]
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult[cname]
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                cond = body = None
+                mm = re.search(r"condition=(%[\w.\-]+)", ins.line)
+                bb = re.search(r"body=(%[\w.\-]+)", ins.line)
+                if mm:
+                    cond = mm.group(1)
+                if bb:
+                    body = bb.group(1)
+                trip = _trip_count(comps, cond) if cond else 1
+                for target, f in ((body, trip), (cond, trip)):
+                    if target:
+                        mult[target] = mult.get(target, 0.0) + m * f
+                        if target not in order:
+                            order.append(target)
+            else:
+                for target in ins.calls:
+                    mult[target] = mult.get(target, 0.0) + m
+                    if target not in order:
+                        order.append(target)
+
+    flops = 0.0
+    hbm_bytes = 0.0
+    transcendental = 0.0
+    coll: Dict[str, dict] = {}
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for ins in comp.instrs:
+            if ins.opcode in ("dot", "cublas-gemm"):
+                flops += m * _dot_flops(comp, ins)
+            elif ins.opcode == "convolution":
+                # output elems x 2K: approximate K from lhs size/out spatial
+                flops += m * 2.0 * ins.out_bytes  # rough; no convs in practice
+            base = ins.opcode.replace("-start", "")
+            if base in COLLECTIVES and not ins.opcode.endswith("-done"):
+                in_bytes = sum(comp.by_name[o].out_bytes
+                               for o in ins.operands if o in comp.by_name)
+                ent = coll.setdefault(base, {"count": 0, "bytes": 0.0})
+                ent["count"] += int(m) if m >= 1 else 1
+                ent["bytes"] += m * max(in_bytes, ins.out_bytes)
+            # HBM traffic at the scheduled-op level
+            if cname not in fused and ins.opcode not in _FREE_OPS:
+                if ins.opcode == "dynamic-update-slice" and len(ins.operands) >= 2:
+                    # in-place: traffic ~ 2x the update slice, not the buffer
+                    upd = comp.by_name.get(ins.operands[1])
+                    hbm_bytes += m * 2 * (upd.out_bytes if upd else 0)
+                elif ins.opcode == "dynamic-slice":
+                    hbm_bytes += m * 2 * ins.out_bytes
+                elif ins.opcode == "fusion" and ins.calls:
+                    in_eff = _fusion_operand_bytes(comps, ins, comp)
+                    out_eff = ins.out_bytes
+                    if _fusion_is_dus(comps, ins):
+                        # the in-place target's write side aliases too: only
+                        # the non-aliased outputs + updates are written
+                        alias = max((comp.by_name[o].out_bytes
+                                     for o in ins.operands
+                                     if o in comp.by_name),
+                                    default=0)
+                        out_eff = max(out_eff - alias, 0) + max(
+                            in_eff, 1024)
+                    hbm_bytes += m * (in_eff + out_eff)
+                else:
+                    in_bytes = sum(comp.by_name[o].out_bytes
+                                   for o in ins.operands if o in comp.by_name)
+                    hbm_bytes += m * (in_bytes + ins.out_bytes)
+
+    return {"flops": flops, "hbm_bytes": hbm_bytes,
+            "collectives": {k: {"count": v["count"], "bytes": v["bytes"]}
+                            for k, v in coll.items()}}

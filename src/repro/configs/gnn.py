@@ -1,0 +1,46 @@
+"""GNN model + dataset configs for the paper's own experiments (Tables 4-7).
+
+The paper trains 2-layer GCN / GraphSAGE, hidden 128, mini-batch of 1024
+target vertices, neighbor fanouts (25, 10), on Reddit / Yelp / Amazon /
+ogbn-products. Dataset stats are from paper Table 4; at laptop scale we train
+on scaled-down synthetic RMAT graphs with the same degree character and use
+the FULL stats for the analytic DSE / simulator benchmarks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class GNNModelConfig:
+    name: str            # "gcn" | "graphsage" | "gin" | "gat"
+    num_layers: int = 2
+    hidden: int = 128
+    fanouts: Tuple[int, ...] = (25, 10)  # neighbor sampling sizes per layer
+    batch_targets: int = 1024            # |V^t| per mini-batch
+
+
+@dataclass(frozen=True)
+class GraphDatasetConfig:
+    name: str
+    num_vertices: int
+    num_edges: int
+    feat_dim: int        # f0
+    hidden: int          # f1
+    num_classes: int     # f2
+
+
+# Paper Table 4 (full-scale stats; used by DSE + simulator).
+REDDIT = GraphDatasetConfig("reddit", 232_965, 23_213_838, 602, 128, 41)
+YELP = GraphDatasetConfig("yelp", 716_847, 13_954_819, 300, 128, 100)
+AMAZON = GraphDatasetConfig("amazon", 1_569_960, 264_339_468, 200, 128, 107)
+OGBN_PRODUCTS = GraphDatasetConfig("ogbn-products", 2_449_029, 61_859_140, 100, 128, 47)
+
+DATASETS = {d.name: d for d in (REDDIT, YELP, AMAZON, OGBN_PRODUCTS)}
+
+GCN = GNNModelConfig("gcn")
+GRAPHSAGE = GNNModelConfig("graphsage")
+
+GNN_MODELS = {"gcn": GCN, "graphsage": GRAPHSAGE,
+              "gin": GNNModelConfig("gin"), "gat": GNNModelConfig("gat")}

@@ -1,0 +1,62 @@
+"""Architecture registry: ``--arch <id>`` resolution for launcher/dry-run."""
+from __future__ import annotations
+
+import importlib
+from typing import Callable
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeSpec
+
+# arch-id -> module under repro.configs
+_ARCH_MODULES: dict[str, str] = {
+    "minicpm-2b": "minicpm_2b",
+    "starcoder2-7b": "starcoder2_7b",
+    "yi-9b": "yi_9b",
+    "llama3-8b": "llama3_8b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "grok-1-314b": "grok_1_314b",
+    "zamba2-2.7b": "zamba2_2p7b",
+    "llava-next-34b": "llava_next_34b",
+    "whisper-small": "whisper_small",
+    "rwkv6-3b": "rwkv6_3b",
+}
+
+ARCH_IDS: tuple[str, ...] = tuple(_ARCH_MODULES)
+
+
+def _module(arch: str):
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ArchConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ArchConfig:
+    return _module(arch).smoke()
+
+
+def get_shape(name: str) -> ShapeSpec:
+    return SHAPES[name]
+
+
+def cell_is_runnable(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Whether an (arch x shape) dry-run cell runs, and why not if skipped."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, (
+            "long_500k requires sub-quadratic attention; "
+            f"{cfg.name} is pure full-attention (documented skip, DESIGN.md)"
+        )
+    return True, ""
+
+
+def all_cells() -> list[tuple[str, str, bool, str]]:
+    """(arch, shape, runnable, skip_reason) for all 40 assigned cells."""
+    out = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, why = cell_is_runnable(cfg, shape)
+            out.append((arch, shape.name, ok, why))
+    return out

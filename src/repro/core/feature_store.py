@@ -1,0 +1,130 @@
+"""Feature-storing strategies + the runtime feature cache (paper Table 1,
+§5.2 data-communication optimization).
+
+Strategy -> which rows of X live in each device's HBM (the FPGA local DDR
+analogue):
+  * DistDGL : X_i = rows owned by partition i.
+  * PaGraph : X_i = partition rows + highest OUT-degree rows up to a cache
+              budget (replicated hot set).
+  * P3      : every device holds ALL rows but only a 1/p slice of the
+              feature DIMENSION (intra-layer model parallelism).
+
+At runtime ``gather()`` serves a mini-batch's feature rows: cache hits read
+device HBM; misses are fetched FROM HOST MEMORY (the paper's DC
+optimization — never peer-to-peer). beta (paper Eq. 7) — the fraction of
+bytes served locally — is accounted per gather and drives the DSE/simulator.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.data.graphs import Graph
+from repro.core.partition import Partition
+
+
+@dataclass
+class GatherStats:
+    local_bytes: int = 0
+    host_bytes: int = 0
+    local_rows: int = 0
+    host_rows: int = 0
+
+    @property
+    def beta(self) -> float:
+        t = self.local_bytes + self.host_bytes
+        return self.local_bytes / t if t else 1.0
+
+    def merge(self, other: "GatherStats") -> None:
+        self.local_bytes += other.local_bytes
+        self.host_bytes += other.host_bytes
+        self.local_rows += other.local_rows
+        self.host_rows += other.host_rows
+
+
+class FeatureStore:
+    """Per-device feature residency + gather with beta accounting.
+
+    The host always holds the full X (paper §4.2), so misses are host reads.
+    """
+
+    def __init__(self, graph: Graph, partition: Partition, strategy: str,
+                 cache_budget_frac: float = 0.25):
+        self.g = graph
+        self.p = partition.num_parts
+        self.strategy = strategy
+        self.stats = [GatherStats() for _ in range(self.p)]
+        V = graph.num_vertices
+        self.resident = np.zeros((self.p, V), bool)
+        self.feature_slice = [slice(None)] * self.p
+
+        if strategy in ("distdgl", "metis_like"):
+            for i in range(self.p):
+                self.resident[i, partition.part_vertices(i)] = True
+        elif strategy == "pagraph":
+            budget = int(V * cache_budget_frac)
+            hot = np.argsort(-graph.out_degree())[:budget]
+            for i in range(self.p):
+                self.resident[i, partition.part_vertices(i)] = True
+                self.resident[i, hot] = True
+        elif strategy == "p3":
+            f = graph.features.shape[1]
+            chunk = (f + self.p - 1) // self.p
+            for i in range(self.p):
+                self.resident[i, :] = True  # all rows, 1/p of the columns
+                self.feature_slice[i] = slice(i * chunk, min(f, (i + 1) * chunk))
+        else:
+            raise ValueError(f"unknown feature-storing strategy {strategy!r}")
+
+    def device_bytes(self, device: int) -> int:
+        rows = int(self.resident[device].sum())
+        f = self.g.features.shape[1]
+        sl = self.feature_slice[device]
+        width = len(range(*sl.indices(f)))
+        return rows * width * 4
+
+    def gather(self, device: int, vertex_ids: np.ndarray,
+               mask: Optional[np.ndarray] = None) -> np.ndarray:
+        """Gather feature rows for a mini-batch onto ``device``.
+
+        Returns the (N, f) feature block; updates beta accounting. For P3,
+        the block is the local feature SLICE widened with zeros (the real
+        system exchanges slices via the layer-1 all-to-all; the trainer
+        handles that path)."""
+        ids = np.asarray(vertex_ids)
+        valid = np.ones(len(ids), bool) if mask is None else np.asarray(mask)
+        f = self.g.features.shape[1]
+        hit = self.resident[device, ids] & valid
+        miss = (~self.resident[device, ids]) & valid
+        st = self.stats[device]
+        sl = self.feature_slice[device]
+        width = len(range(*sl.indices(f)))
+        st.local_rows += int(hit.sum())
+        st.host_rows += int(miss.sum())
+        st.local_bytes += int(hit.sum()) * width * 4
+        st.host_bytes += int(miss.sum()) * f * 4
+        out = self.g.features[ids].copy()
+        out[~valid] = 0.0
+        return out
+
+    def gather_p3_slice(self, device: int, vertex_ids: np.ndarray
+                        ) -> np.ndarray:
+        """P3: the local feature-dimension slice for these rows."""
+        return self.g.features[np.asarray(vertex_ids)][:, self.feature_slice[device]]
+
+    def beta(self, device: Optional[int] = None) -> float:
+        if device is not None:
+            return self.stats[device].beta
+        tot = GatherStats()
+        for s in self.stats:
+            tot.merge(s)
+        return tot.beta
+
+
+STRATEGY_BY_ALGORITHM = {
+    "distdgl": "distdgl",
+    "pagraph": "pagraph",
+    "p3": "p3",
+}

@@ -1,0 +1,178 @@
+"""Host-side layered neighbor sampler (GraphSAGE-style) producing
+static-shape padded mini-batches for jit'd device steps.
+
+HitGNN task split (paper §4.2): sampling runs on the host CPU over the full
+topology; the device consumes a MiniBatch of padded per-layer CSR blocks.
+Static shapes (fanout-bounded) keep one compiled executable per config —
+the host pipeline overlaps sampling with device compute (paper Eq. 5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.gnn import GNNModelConfig
+from repro.data.graphs import Graph
+
+
+@dataclass
+class MiniBatch:
+    """L-layer sampled block. Layer l edges connect layer_nodes[l] (src side,
+    layer l-1 vertex ids) to layer_nodes[l+1]'s prefix.
+
+    nodes[l]      (N_l,) int32 global vertex ids, padded (pad = repeat of 0)
+    node_mask[l]  (N_l,) bool
+    edge_src[l]   (E_l,) int32 LOCAL index into nodes[l]
+    edge_dst[l]   (E_l,) int32 LOCAL index into nodes[l+1]
+    edge_mask[l]  (E_l,) bool
+    targets       (T,) int32 global ids of the target vertices
+    labels        (T,) int32
+    partition_id  which graph partition this batch was sampled from
+    """
+
+    nodes: List[np.ndarray]
+    node_mask: List[np.ndarray]
+    edge_src: List[np.ndarray]
+    edge_dst: List[np.ndarray]
+    edge_mask: List[np.ndarray]
+    # self_idx[l][j] = index of nodes[l+1][j] within nodes[l] (for self/concat)
+    self_idx: List[np.ndarray]
+    targets: np.ndarray
+    labels: np.ndarray
+    partition_id: int = 0
+    seq_no: int = 0
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.edge_src)
+
+    def vertices_traversed(self) -> int:
+        """Paper throughput metric numerator: sum_l |V^l| (real, unpadded)."""
+        return int(sum(m.sum() for m in self.node_mask)
+                   + len(self.targets))
+
+
+def layer_capacities(cfg: GNNModelConfig) -> Tuple[List[int], List[int]]:
+    """Static padded sizes per layer: node caps + edge caps (fanout bound).
+    Node caps include the frontier itself (self vertices stay resident)."""
+    n_caps = [cfg.batch_targets]
+    e_caps = []
+    for fan in cfg.fanouts:
+        e_caps.append(n_caps[-1] * fan)
+        n_caps.append(n_caps[-1] * (fan + 1))
+    # reverse into input->output order: nodes[0] is the deepest layer
+    return n_caps[::-1], e_caps[::-1]
+
+
+class NeighborSampler:
+    """Samples mini-batches from one graph partition's train vertices."""
+
+    def __init__(self, graph: Graph, cfg: GNNModelConfig,
+                 train_ids: np.ndarray, partition_id: int = 0, seed: int = 0):
+        self.g = graph
+        self.cfg = cfg
+        self.train_ids = np.asarray(train_ids, np.int32)
+        self.partition_id = partition_id
+        self.rng = np.random.default_rng(seed + 7919 * partition_id)
+        self.node_caps, self.edge_caps = layer_capacities(cfg)
+        self._epoch_order: np.ndarray = np.empty(0, np.int32)
+        self._cursor = 0
+        self._seq = 0
+        self.reset_epoch()
+
+    # -- epoch bookkeeping ----------------------------------------------------
+    def reset_epoch(self) -> None:
+        self._epoch_order = self.rng.permutation(self.train_ids)
+        self._cursor = 0
+
+    def batches_remaining(self) -> int:
+        return (len(self._epoch_order) - self._cursor
+                + self.cfg.batch_targets - 1) // self.cfg.batch_targets
+
+    # -- core -----------------------------------------------------------------
+    def _sample_layer(self, frontier: np.ndarray, fanout: int
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """For each dst in frontier sample <=fanout in-neighbors.
+        Returns (src_global, dst_local, uniq_src)."""
+        srcs, dsts = [], []
+        for local, v in enumerate(frontier):
+            nbrs = self.g.neighbors(int(v))
+            if len(nbrs) == 0:
+                continue
+            take = (nbrs if len(nbrs) <= fanout
+                    else self.rng.choice(nbrs, fanout, replace=False))
+            srcs.append(take)
+            dsts.append(np.full(len(take), local, np.int32))
+        if srcs:
+            src = np.concatenate(srcs).astype(np.int32)
+            dst = np.concatenate(dsts)
+        else:
+            src = np.empty(0, np.int32)
+            dst = np.empty(0, np.int32)
+        uniq = np.unique(np.concatenate([frontier.astype(np.int32), src]))
+        return src, dst, uniq
+
+    def next_batch(self, targets: np.ndarray | None = None) -> MiniBatch:
+        cfg = self.cfg
+        if targets is None:
+            if self._cursor >= len(self._epoch_order):
+                self.reset_epoch()
+            targets = self._epoch_order[self._cursor:self._cursor + cfg.batch_targets]
+            self._cursor += cfg.batch_targets
+        targets = np.asarray(targets, np.int32)
+        if len(targets) < cfg.batch_targets:  # pad tail batch
+            pad = self.rng.choice(self.train_ids,
+                                  cfg.batch_targets - len(targets))
+            targets = np.concatenate([targets, pad.astype(np.int32)])
+
+        # sample from the top layer down
+        frontiers = [targets]
+        edges = []
+        for fan in cfg.fanouts:
+            src, dst, uniq = self._sample_layer(frontiers[-1], fan)
+            edges.append((src, dst))
+            frontiers.append(uniq)
+        # reverse into bottom-up order
+        frontiers = frontiers[::-1]
+        edges = edges[::-1]
+
+        nodes, node_mask = [], []
+        for cap, f in zip(self.node_caps, frontiers):
+            n = np.zeros(cap, np.int32)
+            m = np.zeros(cap, bool)
+            k = min(len(f), cap)
+            n[:k] = f[:k]
+            m[:k] = True
+            nodes.append(n)
+            node_mask.append(m)
+
+        edge_src, edge_dst, edge_mask, self_idx = [], [], [], []
+        for li, (cap, (src, dst)) in enumerate(zip(self.edge_caps, edges)):
+            # frontiers[li] is sorted (np.unique) for every li < L, so
+            # searchsorted maps global src ids -> local indices vectorized
+            base = frontiers[li]
+            es = np.zeros(cap, np.int32)
+            ed = np.zeros(cap, np.int32)
+            em = np.zeros(cap, bool)
+            k = min(len(src), cap)
+            es[:k] = np.searchsorted(base, src[:k]).astype(np.int32)
+            ed[:k] = dst[:k]
+            em[:k] = True
+            edge_src.append(es)
+            edge_dst.append(ed)
+            edge_mask.append(em)
+            # self index of each upper-layer vertex within this layer
+            upper = frontiers[li + 1]
+            cap_up = self.node_caps[li + 1]
+            si = np.zeros(cap_up, np.int32)
+            kk = min(len(upper), cap_up)
+            si[:kk] = np.searchsorted(base, upper[:kk]).astype(np.int32)
+            self_idx.append(si)
+
+        mb = MiniBatch(nodes, node_mask, edge_src, edge_dst, edge_mask,
+                       self_idx, targets, self.g.labels[targets],
+                       self.partition_id, self._seq)
+        self._seq += 1
+        return mb

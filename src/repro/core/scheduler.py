@@ -1,0 +1,113 @@
+"""Two-stage task scheduler (paper §5.1, Algorithm 3) + naive baseline.
+
+Graph partitions hold different numbers of train vertices, so per-partition
+mini-batch queues drain at different rates. Stage 1: while every partition
+still has batches, device i executes batches sampled from partition i.
+Stage 2: once some partitions are exhausted, the sampler keeps drawing from
+the remaining partitions round-robin and the scheduler re-assigns the extra
+batches to idle devices — every synchronous iteration still runs p batches,
+and the SAME batches are executed in the SAME iteration grouping as the
+unbalanced baseline would eventually execute (computation unchanged =>
+accuracy/convergence unchanged; paper Challenge 3). The tests assert the
+exactly-once + group-size invariants.
+
+This is also the framework's straggler mitigation: a slow/failed device's
+queue simply drains to the others at batch granularity.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterator, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class Assignment:
+    """One scheduled mini-batch: sampled from ``partition`` and executed on
+    ``device`` during synchronous iteration ``iteration``."""
+
+    iteration: int
+    device: int
+    partition: int
+    batch_index: int  # index within the partition's epoch queue
+    stage: int = 1
+
+
+def two_stage_schedule(batches_per_partition: Sequence[int]
+                       ) -> List[Assignment]:
+    """Algorithm 3 for p partitions/devices (one device per partition).
+
+    ``batches_per_partition[i]`` = number of mini-batches partition i yields
+    this epoch. Returns the full epoch schedule.
+    """
+    p = len(batches_per_partition)
+    remaining = list(batches_per_partition)
+    cursor = [0] * p
+    out: List[Assignment] = []
+    it = 0
+    # Stage 1: every partition still non-empty -> device i <- partition i
+    while all(r > 0 for r in remaining):
+        for i in range(p):
+            out.append(Assignment(it, i, i, cursor[i], stage=1))
+            cursor[i] += 1
+            remaining[i] -= 1
+        it += 1
+    # Stage 2: sample avail partitions round-robin; idle devices take extras
+    cnt = 0
+    while any(r > 0 for r in remaining):
+        avail = [i for i in range(p) if remaining[i] > 0]
+        idle = [i for i in range(p) if remaining[i] == 0]
+        # each available partition feeds its own device first
+        used = 0
+        for i in avail:
+            out.append(Assignment(it, i, i, cursor[i], stage=2))
+            cursor[i] += 1
+            remaining[i] -= 1
+            used += 1
+        # idle devices receive extra batches from avail partitions, round-robin
+        for d in idle:
+            src = avail[cnt % len(avail)]
+            cnt += 1
+            if remaining[src] <= 0:
+                nonempty = [i for i in avail if remaining[i] > 0]
+                if not nonempty:
+                    break
+                src = nonempty[cnt % len(nonempty)]
+            out.append(Assignment(it, d, src, cursor[src], stage=2))
+            cursor[src] += 1
+            remaining[src] -= 1
+        it += 1
+    return out
+
+
+def naive_schedule(batches_per_partition: Sequence[int]) -> List[Assignment]:
+    """Baseline without workload balancing: device i only ever executes
+    partition i's batches; iterations at the end run with idle devices."""
+    p = len(batches_per_partition)
+    out: List[Assignment] = []
+    for it in range(max(batches_per_partition)):
+        for i in range(p):
+            if it < batches_per_partition[i]:
+                out.append(Assignment(it, i, i, it, stage=0))
+    return out
+
+
+def iterations(schedule: List[Assignment]) -> Iterator[List[Assignment]]:
+    """Group a schedule into synchronous iterations."""
+    if not schedule:
+        return
+    n_it = max(a.iteration for a in schedule) + 1
+    buckets: List[List[Assignment]] = [[] for _ in range(n_it)]
+    for a in schedule:
+        buckets[a.iteration].append(a)
+    for b in buckets:
+        yield b
+
+
+def schedule_stats(schedule: List[Assignment], p: int) -> dict:
+    """Iteration count + device utilization (for the WB ablation)."""
+    n_it = max(a.iteration for a in schedule) + 1 if schedule else 0
+    slots = n_it * p
+    return {"iterations": n_it, "batches": len(schedule),
+            "utilization": len(schedule) / slots if slots else 1.0}

@@ -1,0 +1,124 @@
+"""CPU+Multi-accelerator platform simulator (paper §7.6, Fig. 8).
+
+Discrete-rate model of one training epoch on p devices. Captures the three
+effects the paper studies:
+
+* workload balance — per-partition batch counts -> iteration count, naive vs
+  two-stage scheduling (epoch time = iterations x t_parallel);
+* data communication — feature misses are host fetches; WITHOUT the DC
+  optimization a miss bounces accelerator->host->accelerator (two PCIe
+  crossings, paper §5.2 / [26]);
+* host-bandwidth saturation — the host memory serves p concurrent miss
+  streams: effective per-device host bandwidth = min(pcie, host_bw / p).
+  With the paper's constants (205 GB/s host, 16 GB/s PCIe) the knee lands at
+  205/16 ~ 12.8 devices, reproducing Fig. 8's scaling limit.
+
+The simulator is calibrated against measured host-pipeline times from the
+CPU runs (benchmarks/bench_scalability.py --calibrate).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.gnn import GNNModelConfig, GraphDatasetConfig
+from repro.core.dse import (FPGADSE, MiniBatchShape, PlatformMetadata,
+                            minibatch_shape)
+from repro.core import scheduler as sched
+
+
+@dataclass
+class SimConfig:
+    platform: PlatformMetadata = field(default_factory=PlatformMetadata)
+    n_agg_pe: int = 8             # DSE-chosen accelerator config
+    m_update_pe: int = 2048
+    workload_balancing: bool = True
+    host_direct_fetch: bool = True   # DC optimization
+    t_sampling: float = 2e-3         # host sampling time per batch (calibratable)
+    sampling_overlap: bool = True
+
+
+def partition_batch_counts(train_vertices: int, p: int,
+                           batch_targets: int, imbalance: float = 0.25,
+                           seed: int = 0) -> List[int]:
+    """Per-partition batch counts with a controllable imbalance factor
+    (METIS-style partitions are vertex-imbalanced; paper Challenge 2)."""
+    rng = np.random.default_rng(seed)
+    shares = 1.0 + imbalance * (2 * rng.random(p) - 1)
+    shares = shares / shares.sum()
+    counts = np.maximum(1, np.round(
+        shares * train_vertices / batch_targets)).astype(int)
+    return counts.tolist()
+
+
+def simulate_epoch(model: GNNModelConfig, ds: GraphDatasetConfig,
+                   p: int, beta: float, sim: SimConfig,
+                   imbalance: float = 0.25, seed: int = 0) -> dict:
+    """Returns epoch time, throughput (NVTPS) and the component times."""
+    pf = PlatformMetadata(num_devices=p, pcie_bw=sim.platform.pcie_bw,
+                          host_bw=sim.platform.host_bw, fpga=sim.platform.fpga)
+    dse = FPGADSE(pf)
+    # constant per-batch work across p (sampling population is the whole
+    # graph locality; per-partition dedup differences are second-order)
+    mb = minibatch_shape(model, ds)
+
+    # --- bandwidth contention at the host -----------------------------------
+    host_share = min(pf.pcie_bw, pf.host_bw / p)
+    if not sim.host_direct_fetch:
+        # miss bounces through host shared memory: two crossings + the
+        # destination device's PCIe is also occupied -> half bandwidth
+        host_share = min(pf.pcie_bw / 2, pf.host_bw / (2 * p))
+
+    # effective per-device GNN time with the contended miss bandwidth:
+    # replace the PCIe term of Eq. (7) by host_share
+    def gnn_time() -> float:
+        t = 0.0
+        for l in range(len(mb.a)):
+            f_in, f_out = mb.f[l], mb.f[l + 1]
+            t_load = (mb.v[l] * beta * f_in * 4 / pf.fpga.ddr_bw
+                      + mb.v[l] * (1 - beta) * f_in * 4 / host_share)
+            t_comp = mb.a[l] * f_in / (sim.n_agg_pe * pf.fpga.simd * pf.fpga.freq)
+            t_upd = mb.v[l] * f_in * f_out / (sim.m_update_pe * pf.fpga.freq)
+            t += max(t_load, t_comp, t_upd)
+        t_lc = mb.v[-1] * mb.f[-1] / (sim.m_update_pe * pf.fpga.freq)
+        return 3.0 * t + t_lc  # fwd + ~2x bwd
+
+    t_gnn = gnn_time()
+    t_exec = max(sim.t_sampling, t_gnn) if sim.sampling_overlap \
+        else sim.t_sampling + t_gnn
+    grad_bytes = 4 * (ds.feat_dim * model.hidden
+                      + (model.num_layers - 1) * model.hidden * model.hidden
+                      + model.hidden * ds.num_classes) * 2
+    t_sync = 2 * grad_bytes / pf.pcie_bw + 20e-6 * np.log2(max(p, 2))
+    t_parallel = t_exec + t_sync                            # Eq. (4)
+
+    counts = partition_batch_counts(
+        int(ds.num_vertices * 0.1), p, model.batch_targets, imbalance, seed)
+    schedule = (sched.two_stage_schedule(counts) if sim.workload_balancing
+                else sched.naive_schedule(counts))
+    stats = sched.schedule_stats(schedule, p)
+    epoch_time = stats["iterations"] * t_parallel
+    vertices = sum(mb.v) * stats["batches"]
+    return {
+        "p": p, "epoch_time_s": epoch_time,
+        "nvtps": vertices / epoch_time,
+        "iterations": stats["iterations"],
+        "utilization": stats["utilization"],
+        "t_gnn": t_gnn, "t_sync": t_sync, "t_parallel": t_parallel,
+        "host_share_gbs": host_share / 1e9,
+        "beta": beta,
+    }
+
+
+def scaling_curve(model: GNNModelConfig, ds: GraphDatasetConfig,
+                  beta: float, sim: SimConfig, max_p: int = 16) -> List[dict]:
+    """Speedup vs single device (paper Fig. 8)."""
+    base = simulate_epoch(model, ds, 1, beta, sim)
+    out = []
+    for p in range(1, max_p + 1):
+        r = simulate_epoch(model, ds, p, beta, sim)
+        r["speedup"] = r["nvtps"] / base["nvtps"]
+        out.append(r)
+    return out

@@ -1,0 +1,110 @@
+"""Graph substrate: CSR graphs, synthetic RMAT generation, dataset registry.
+
+The paper evaluates on Reddit / Yelp / Amazon / ogbn-products (Table 4). Those
+datasets are not redistributable offline, so training/examples run on
+synthetic RMAT graphs drawn with the same degree character at configurable
+scale, while the analytic DSE / simulator benchmarks use the full Table 4
+statistics verbatim (configs/gnn.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.gnn import GraphDatasetConfig, DATASETS
+
+
+@dataclass
+class Graph:
+    """CSR graph. ``indptr/indices`` encode IN-neighbors (aggregation reads
+    messages from in-neighbors, paper Alg. 1)."""
+
+    indptr: np.ndarray          # (V+1,) int64
+    indices: np.ndarray         # (E,) int32  — src vertex of each in-edge
+    features: np.ndarray        # (V, f0) float32
+    labels: np.ndarray          # (V,) int32
+    train_ids: np.ndarray       # (T,) int32
+    num_classes: int
+    name: str = "synthetic"
+
+    @property
+    def num_vertices(self) -> int:
+        return len(self.indptr) - 1
+
+    @property
+    def num_edges(self) -> int:
+        return len(self.indices)
+
+    def in_degree(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    def out_degree(self) -> np.ndarray:
+        return np.bincount(self.indices, minlength=self.num_vertices)
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.indices[self.indptr[v]:self.indptr[v + 1]]
+
+
+def rmat_edges(scale: int, edge_factor: int, rng: np.random.Generator,
+               a: float = 0.57, b: float = 0.19, c: float = 0.19) -> np.ndarray:
+    """Recursive-matrix (RMAT/Graph500) edge generator -> (E, 2) int array."""
+    n_edges = (1 << scale) * edge_factor
+    src = np.zeros(n_edges, np.int64)
+    dst = np.zeros(n_edges, np.int64)
+    ab, abc = a + b, a + b + c
+    for bit in range(scale):
+        r = rng.random(n_edges)
+        src_bit = r >= ab
+        dst_bit = ((r >= a) & (r < ab)) | (r >= abc)
+        src |= src_bit.astype(np.int64) << bit
+        dst |= dst_bit.astype(np.int64) << bit
+    # permute vertex ids to avoid degree locality
+    perm = rng.permutation(1 << scale)
+    return np.stack([perm[src], perm[dst]], axis=1)
+
+
+def build_graph(edges: np.ndarray, num_vertices: int, feat_dim: int,
+                num_classes: int, rng: np.random.Generator,
+                train_frac: float = 0.1, name: str = "synthetic") -> Graph:
+    """Build a CSR Graph from an edge list (dedup, no self loops)."""
+    e = edges[edges[:, 0] != edges[:, 1]]
+    # dedup
+    key = e[:, 0].astype(np.int64) * num_vertices + e[:, 1]
+    _, idx = np.unique(key, return_index=True)
+    e = e[idx]
+    dst = e[:, 1]
+    order = np.argsort(dst, kind="stable")
+    e = e[order]
+    indptr = np.zeros(num_vertices + 1, np.int64)
+    np.add.at(indptr, e[:, 1] + 1, 1)
+    indptr = np.cumsum(indptr)
+    indices = e[:, 0].astype(np.int32)
+    feats = rng.standard_normal((num_vertices, feat_dim)).astype(np.float32)
+    labels = rng.integers(0, num_classes, num_vertices).astype(np.int32)
+    # learnable signal: label-correlated feature block
+    feats[np.arange(num_vertices), labels % feat_dim] += 2.0
+    n_train = max(1, int(num_vertices * train_frac))
+    train_ids = rng.choice(num_vertices, n_train, replace=False).astype(np.int32)
+    return Graph(indptr, indices, feats, labels, np.sort(train_ids),
+                 num_classes, name)
+
+
+def synthetic_graph(scale: int = 12, edge_factor: int = 8, feat_dim: int = 64,
+                    num_classes: int = 16, seed: int = 0,
+                    name: str = "synthetic") -> Graph:
+    rng = np.random.default_rng(seed)
+    edges = rmat_edges(scale, edge_factor, rng)
+    return build_graph(edges, 1 << scale, feat_dim, num_classes, rng, name=name)
+
+
+def scaled_dataset(name: str, scale: int = 12, seed: int = 0) -> Graph:
+    """Synthetic stand-in for a paper dataset: same feat/class dims, RMAT
+    topology with a matching edge factor, at 2^scale vertices."""
+    cfg = DATASETS[name]
+    ef = max(2, round(cfg.num_edges / cfg.num_vertices / 2))
+    rng = np.random.default_rng(seed)
+    edges = rmat_edges(scale, ef, rng)
+    return build_graph(edges, 1 << scale, cfg.feat_dim, cfg.num_classes, rng,
+                       name=f"{name}-s{scale}")

@@ -1,0 +1,55 @@
+"""Gradient compression with error feedback (distributed-optimization trick
+for slow interconnects / cross-pod sync; off by default).
+
+int8 symmetric quantization per tensor with an error-feedback accumulator:
+   q = round(g / s), s = max|g| / 127;  e' = g - q*s  (carried to next step)
+The compressed payload is what would cross the wire (8x smaller than f32 /
+4x smaller than bf16); tests assert convergence is preserved on a quadratic
+and that error feedback keeps the long-run bias at zero.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, error):
+    """Returns (quantized payload tree, new error-feedback tree)."""
+    if error is None:
+        error = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = compress(corrected)
+        deq = decompress(q, s)
+        return (q, s), corrected - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    payload = tdef.unflatten([o[0] for o in out])
+    new_err = tdef.unflatten([o[1] for o in out])
+    return payload, new_err
+
+
+def decompress_tree(payload):
+    return jax.tree.map(lambda qs: decompress(*qs), payload,
+                        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+                        and not isinstance(x[0], dict))
+
+
+def payload_bytes(payload) -> int:
+    leaves = jax.tree.leaves(payload)
+    return sum(l.size * l.dtype.itemsize for l in leaves)

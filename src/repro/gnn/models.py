@@ -1,0 +1,142 @@
+"""GNN model zoo in the aggregate-update paradigm (paper Alg. 1, §5.3).
+
+Models consume padded MiniBatch arrays (static shapes, jit-friendly):
+  feats      (N_0, f0)   input features for the deepest layer's vertices
+  edge_src[l](E_l,)      local src index into layer l's vertex set
+  edge_dst[l](E_l,)      local dst index into layer l+1's vertex set
+  edge_mask[l], node_mask[l], self_idx[l] per sampler.py
+
+``aggregate`` is the scatter-gather kernel's reference semantics (the Pallas
+block-CSR kernel in kernels/aggregate.py implements the same contract);
+``update`` is the systolic MLP (kernels/update_mlp.py).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.gnn import GNNModelConfig
+from repro.nn.param import PSpec
+
+
+# ---------------------------------------------------------------------------
+# Aggregate (scatter-gather) reference ops
+# ---------------------------------------------------------------------------
+
+def aggregate(h_src: jax.Array, edge_src: jax.Array, edge_dst: jax.Array,
+              edge_mask: jax.Array, n_dst: int, kind: str = "mean"
+              ) -> jax.Array:
+    """Masked segment aggregation of messages h_src[edge_src] into dst rows."""
+    msg = h_src[edge_src] * edge_mask[:, None].astype(h_src.dtype)
+    agg = jax.ops.segment_sum(msg, edge_dst, num_segments=n_dst)
+    if kind == "sum":
+        return agg
+    deg = jax.ops.segment_sum(edge_mask.astype(h_src.dtype), edge_dst,
+                              num_segments=n_dst)
+    if kind == "mean":
+        return agg / jnp.maximum(deg, 1.0)[:, None]
+    raise ValueError(kind)
+
+
+def segment_softmax(scores: jax.Array, seg: jax.Array, mask: jax.Array,
+                    n_seg: int) -> jax.Array:
+    """Numerically-stable per-segment softmax over edges (GAT)."""
+    neg = jnp.where(mask, scores, -1e30)
+    smax = jax.ops.segment_max(neg, seg, num_segments=n_seg)
+    ex = jnp.exp(neg - smax[seg]) * mask.astype(scores.dtype)
+    den = jax.ops.segment_sum(ex, seg, num_segments=n_seg)
+    return ex / jnp.maximum(den[seg], 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def _dims(cfg: GNNModelConfig, f_in: int, n_classes: int) -> list:
+    return [f_in] + [cfg.hidden] * (cfg.num_layers - 1) + [n_classes]
+
+
+def param_spec(cfg: GNNModelConfig, f_in: int, n_classes: int):
+    dims = _dims(cfg, f_in, n_classes)
+    layers = []
+    for l in range(cfg.num_layers):
+        fi, fo = dims[l], dims[l + 1]
+        if cfg.name == "graphsage":
+            layers.append({"w_self": PSpec((fi, fo), ("embed", "ffn")),
+                           "w_neigh": PSpec((fi, fo), ("embed", "ffn")),
+                           "b": PSpec((fo,), ("ffn",), "zeros")})
+        elif cfg.name == "gcn":
+            layers.append({"w": PSpec((fi, fo), ("embed", "ffn")),
+                           "b": PSpec((fo,), ("ffn",), "zeros")})
+        elif cfg.name == "gin":
+            layers.append({"eps": PSpec((), (), "zeros"),
+                           "w1": PSpec((fi, fo), ("embed", "ffn")),
+                           "b1": PSpec((fo,), ("ffn",), "zeros"),
+                           "w2": PSpec((fo, fo), ("ffn", "ffn")),
+                           "b2": PSpec((fo,), ("ffn",), "zeros")})
+        elif cfg.name == "gat":
+            layers.append({"w": PSpec((fi, fo), ("embed", "ffn")),
+                           "a_src": PSpec((fo,), ("ffn",)),
+                           "a_dst": PSpec((fo,), ("ffn",)),
+                           "b": PSpec((fo,), ("ffn",), "zeros")})
+        else:
+            raise ValueError(cfg.name)
+    return {"layers": layers}
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _layer(cfg: GNNModelConfig, p, h, batch, l: int, n_dst: int):
+    src, dst = batch["edge_src"][l], batch["edge_dst"][l]
+    emask = batch["edge_mask"][l]
+    h_self = h[batch["self_idx"][l]]
+    if cfg.name == "graphsage":
+        agg = aggregate(h, src, dst, emask, n_dst, "mean")
+        out = h_self @ p["w_self"] + agg @ p["w_neigh"] + p["b"]
+    elif cfg.name == "gcn":
+        agg = aggregate(h, src, dst, emask, n_dst, "mean")
+        out = (agg + h_self) @ p["w"] * 0.5 + p["b"]
+    elif cfg.name == "gin":
+        agg = aggregate(h, src, dst, emask, n_dst, "sum")
+        z = (1.0 + p["eps"]) * h_self + agg
+        out = jax.nn.relu(z @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+    elif cfg.name == "gat":
+        hw = h @ p["w"]
+        hw_dst = hw[batch["self_idx"][l]]
+        e = (jax.nn.leaky_relu(
+            (hw[src] * p["a_src"]).sum(-1)
+            + (hw_dst[dst] * p["a_dst"]).sum(-1), 0.2))
+        alpha = segment_softmax(e, dst, emask, n_dst)
+        msg = hw[src] * alpha[:, None]
+        out = jax.ops.segment_sum(msg, dst, num_segments=n_dst) + p["b"]
+    else:
+        raise ValueError(cfg.name)
+    return out
+
+
+def forward(cfg: GNNModelConfig, params, batch) -> jax.Array:
+    """Returns logits (T, n_classes) for the target vertices."""
+    h = batch["feats"]
+    n_layers = cfg.num_layers
+    for l in range(n_layers):
+        n_dst = batch["self_idx"][l].shape[0]
+        h = _layer(cfg, params["layers"][l], h, batch, l, n_dst)
+        if l != n_layers - 1:
+            h = jax.nn.relu(h)
+            h = h * batch["node_mask"][l + 1][:, None].astype(h.dtype)
+    return h
+
+
+def loss_fn(cfg: GNNModelConfig, params, batch):
+    logits = forward(cfg, params, batch).astype(jnp.float32)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32),
+                             axis=-1)[:, 0]
+    loss = jnp.mean(lse - ll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "acc": acc}

@@ -1,0 +1,112 @@
+"""Aggregate kernel: block-CSR SpMM on the MXU (the paper's scatter-gather
+PE array, re-thought for the TPU memory hierarchy — DESIGN.md §3).
+
+FPGA original: n scatter-gather PEs stream edges, route messages through an
+n-lane network (the n*log n LUT term of Eq. 2), accumulate per-dst in BRAM.
+TPU adaptation: the sampled adjacency is tiled into 128x128 blocks; per-edge
+routing becomes per-BLOCK gathers driven by a scalar-prefetched block-column
+index (the BlockSpec index_map reads it BEFORE the grid step, so the DMA of
+the source feature tile overlaps compute — the paper's pipelined
+load/compute, Eq. 6). Each nonzero block is one MXU matmul; padding blocks
+are all-zero and contribute nothing.
+
+Layout (built by ``build_block_csr``):
+  blocks  (n_dst_blocks, max_blk, 128, 128)  dense adjacency tiles
+  cols    (n_dst_blocks, max_blk) int32      source block index (0-padded)
+  h_in    (n_src_blocks*128, F)              source features
+
+Grid: (n_dst_blocks, F/fb, max_blk); the last axis is sequential with an
+fp32 VMEM accumulator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLK = 128
+
+
+def build_block_csr(edge_src: np.ndarray, edge_dst: np.ndarray,
+                    edge_mask: np.ndarray, n_src: int, n_dst: int,
+                    values: np.ndarray | None = None):
+    """Edge list -> padded block-CSR (numpy, host-side preprocessing).
+
+    Returns (blocks (Nd, max_blk, BLK, BLK) f32, cols (Nd, max_blk) i32,
+    padded src row count). A[dst, src] = value (default 1)."""
+    n_srcb = (n_src + BLK - 1) // BLK
+    n_dstb = (n_dst + BLK - 1) // BLK
+    src = np.asarray(edge_src)[np.asarray(edge_mask)]
+    dst = np.asarray(edge_dst)[np.asarray(edge_mask)]
+    val = (np.ones(len(src), np.float32) if values is None
+           else np.asarray(values)[np.asarray(edge_mask)].astype(np.float32))
+    bs, bd = src // BLK, dst // BLK
+    keys = bd.astype(np.int64) * n_srcb + bs
+    uniq, inv = np.unique(keys, return_inverse=True)
+    # per dst block: which src blocks are nonzero
+    blk_dst = (uniq // n_srcb).astype(np.int32)
+    blk_src = (uniq % n_srcb).astype(np.int32)
+    counts = np.bincount(blk_dst, minlength=n_dstb)
+    max_blk = max(1, int(counts.max()))
+    blocks = np.zeros((n_dstb, max_blk, BLK, BLK), np.float32)
+    cols = np.zeros((n_dstb, max_blk), np.int32)
+    slot_of = np.zeros(len(uniq), np.int32)
+    cursor = np.zeros(n_dstb, np.int32)
+    for u, (bd_i, bs_i) in enumerate(zip(blk_dst, blk_src)):
+        s = cursor[bd_i]
+        slot_of[u] = s
+        cols[bd_i, s] = bs_i
+        cursor[bd_i] += 1
+    np.add.at(blocks,
+              (bd.astype(np.int32), slot_of[inv], dst % BLK, src % BLK), val)
+    return blocks, cols, n_srcb * BLK
+
+
+def _kernel(cols_ref, a_ref, h_ref, o_ref, acc_ref, *, n_blk: int):
+    del cols_ref  # consumed by the index_map (scalar prefetch)
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[0, 0], h_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_blk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def aggregate_blockcsr(blocks: jax.Array, cols: jax.Array, h_in: jax.Array,
+                       *, feat_block: int = 256, interpret: bool = True
+                       ) -> jax.Array:
+    """out = A @ h_in with A in padded block-CSR form.
+
+    blocks: (Nd, max_blk, BLK, BLK); cols: (Nd, max_blk) i32;
+    h_in: (n_src_pad, F). Returns (Nd*BLK, F)."""
+    n_dstb, max_blk = cols.shape
+    n_src_pad, F = h_in.shape
+    fb = min(feat_block, F)
+    while F % fb:
+        fb -= 1
+    grid = (n_dstb, F // fb, max_blk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, BLK, BLK), lambda i, j, k, cols: (i, k, 0, 0)),
+            pl.BlockSpec((BLK, fb), lambda i, j, k, cols: (cols[i, k], j)),
+        ],
+        out_specs=pl.BlockSpec((BLK, fb), lambda i, j, k, cols: (i, j)),
+        scratch_shapes=[pltpu.VMEM((BLK, fb), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, n_blk=max_blk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_dstb * BLK, F), h_in.dtype),
+        interpret=interpret,
+    )(cols, blocks, h_in)

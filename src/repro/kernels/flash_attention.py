@@ -1,0 +1,86 @@
+"""Flash-attention forward kernel (blockwise online softmax in VMEM).
+
+Serving-path analogue of the aggregate kernel: a dense gather-reduce whose
+working set (q tile + running m/l/acc) stays VMEM-resident while K/V tiles
+stream from HBM. Grid (B*H, Sq/bq, Sk/bk); the Sk axis is sequential.
+Causal masking uses global positions; fully-masked tiles still execute
+(documented 2x flop overcount for causal — see EXPERIMENTS.md §Roofline).
+The production train/prefill path (nn/attention.py) is the pure-JAX twin
+validated against this kernel; ``use_pallas`` turns the kernel on for real
+TPU deployments.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            n_k: int, bq: int, bk: int, causal: bool, scale: float):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    s = jnp.dot(q_ref[0], k_ref[0].T,
+                preferred_element_type=jnp.float32) * scale     # (bq, bk)
+    if causal:
+        qi = pl.program_id(1) * bq + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bk), 0)
+        kj = pl.program_id(2) * bk + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bk), 1)
+        s = jnp.where(qi >= kj, s, -1e30)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p.astype(v_ref.dtype), v_ref[0], preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        o_ref[0, ...] = (acc_ref[...] /
+                         jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, block_q: int = 256,
+                        block_k: int = 256, interpret: bool = True
+                        ) -> jax.Array:
+    """q: (BH, Sq, D); k, v: (BH, Sk, D) — batch*heads flattened, GQA
+    repeated. Returns (BH, Sq, D)."""
+    BH, Sq, D = q.shape
+    Sk = k.shape[1]
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    while Sq % bq:
+        bq -= 1
+    while Sk % bk:
+        bk -= 1
+    n_k = Sk // bk
+    scale = 1.0 / (D ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, bq=bq, bk=bk, causal=causal,
+                          scale=scale),
+        grid=(BH, Sq // bq, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

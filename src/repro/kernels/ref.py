@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose against
+these across shape/dtype sweeps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def update_mlp_ref(x, w, b, act: str = "none"):
+    r = x.astype(jnp.float32) @ w.astype(jnp.float32) + b.astype(jnp.float32)
+    if act == "relu":
+        r = jnp.maximum(r, 0.0)
+    elif act == "gelu":
+        r = jax.nn.gelu(r)
+    return r.astype(x.dtype)
+
+
+def aggregate_dense_ref(blocks, cols, h_in):
+    """Block-CSR SpMM oracle: densify A then one matmul."""
+    n_dstb, max_blk, BLK, _ = blocks.shape
+    n_src = h_in.shape[0]
+    A = np.zeros((n_dstb * BLK, n_src), np.float32)
+    blocks = np.asarray(blocks)
+    cols = np.asarray(cols)
+    for i in range(n_dstb):
+        for s in range(max_blk):
+            j = int(cols[i, s])
+            A[i * BLK:(i + 1) * BLK, j * BLK:(j + 1) * BLK] += blocks[i, s]
+    return (A @ np.asarray(h_in, np.float64)).astype(h_in.dtype)
+
+
+def aggregate_edges_ref(edge_src, edge_dst, edge_mask, h_src, n_dst,
+                        values=None):
+    """Edge-list segment-sum oracle (the aggregate contract both the Pallas
+    kernel and gnn/models.aggregate implement)."""
+    v = (jnp.ones(edge_src.shape[0], h_src.dtype) if values is None
+         else values)
+    msg = h_src[edge_src] * (v * edge_mask.astype(h_src.dtype))[:, None]
+    return jax.ops.segment_sum(msg, edge_dst, num_segments=n_dst)
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """Plain softmax attention. q: (BH, Sq, D); k/v: (BH, Sk, D)."""
+    Sq, Sk = q.shape[1], k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (q.shape[-1] ** 0.5)
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, lw, u):
+    """Exact WKV6 recurrence. r/k/lw: (BH, S, K); v: (BH, S, V); u: (BH,1,K)."""
+    BH, S, K = k.shape
+    V = v.shape[-1]
+
+    def one(rb, kb, vb, lwb, ub):
+        s = jnp.zeros((K, V), jnp.float32)
+        ys = []
+        for t in range(S):
+            kv = jnp.outer(kb[t], vb[t])
+            ys.append((rb[t] @ (s + ub[0][:, None] * kv)))
+            s = jnp.exp(lwb[t])[:, None] * s + kv
+        return jnp.stack(ys)
+
+    out = jax.vmap(one)(r.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), lw.astype(jnp.float32),
+                        u.astype(jnp.float32))
+    return out.astype(r.dtype)

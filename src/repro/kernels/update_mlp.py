@@ -1,0 +1,67 @@
+"""Update kernel: tiled matmul + bias + activation on the MXU.
+
+The paper's update stage is an m-PE systolic array (§5.3); the TPU MXU *is*
+a 128x128 systolic array, so the adaptation is a blocked matmul with an
+fp32 VMEM accumulator and fused bias/activation at the last K step. Block
+shapes default to the TPUDSE choice (core/dse.py) and are MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_k: int, act: str):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        r = acc_ref[...] + b_ref[...].astype(jnp.float32)[None, :]
+        if act == "relu":
+            r = jnp.maximum(r, 0.0)
+        elif act == "gelu":
+            r = jax.nn.gelu(r)
+        o_ref[...] = r.astype(o_ref.dtype)
+
+
+def update_mlp(x: jax.Array, w: jax.Array, b: jax.Array, *,
+               act: str = "none", block_m: int = 256, block_n: int = 256,
+               block_k: int = 512, interpret: bool = True) -> jax.Array:
+    """act(x @ w + b). x: (M, K); w: (K, N); b: (N,).
+
+    Grid (M/bm, N/bn, K/bk); the K dimension is the sequential (reduce)
+    axis — the fp32 accumulator lives in VMEM across K steps.
+    """
+    M, K = x.shape
+    _, N = w.shape
+
+    def fit(dim, want):
+        b = min(want, dim)
+        while dim % b:
+            b -= 1
+        return b
+
+    bm, bn, bk = fit(M, block_m), fit(N, block_n), fit(K, block_k)
+    n_k = K // bk
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, act=act),
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w, b)

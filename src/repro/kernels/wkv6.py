@@ -1,0 +1,79 @@
+"""WKV6 chunk kernel: RWKV-6 linear recurrence with the (K, V) state
+resident in VMEM while token chunks stream from HBM.
+
+Grid (B*H, S/chunk) with the chunk axis sequential — the state never
+round-trips to HBM between chunks (the FPGA design keeps per-dst partial
+aggregates in BRAM the same way). Within a chunk the pairwise decay form
+(all exponents <= 0) runs as dense (L, L) work on the MXU, matching
+nn/rwkv6.wkv6_chunked, which is this kernel's pure-JAX twin/oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, state_ref, *,
+            chunk: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0].astype(jnp.float32)          # (L, K)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)          # (L, V)
+    lw = lw_ref[0].astype(jnp.float32)        # (L, K), <= 0
+    u = u_ref[0].astype(jnp.float32)          # (1, K) bonus row
+
+    c = jnp.cumsum(lw, axis=0)                # inclusive
+    c_excl = c - lw
+    s = state_ref[...]                        # (K, V)
+
+    # inter-chunk
+    y = jnp.dot(r * jnp.exp(c_excl), s, preferred_element_type=jnp.float32)
+    # intra-chunk strictly-lower pairwise (safe: exponents <= 0)
+    L = r.shape[0]
+    dec = c_excl[:, None, :] - c[None, :, :]              # (L, L, K) t,j
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+           > jax.lax.broadcasted_iota(jnp.int32, (L, L), 1))
+    A = jnp.sum(r[:, None, :] * k[None, :, :]
+                * jnp.exp(jnp.where(tri[..., None], dec, -1e30)), axis=-1)
+    y = y + jnp.dot(A, v, preferred_element_type=jnp.float32)
+    # diagonal bonus
+    y = y + jnp.sum(r * u * k, axis=-1, keepdims=True) * v
+    o_ref[0, ...] = y.astype(o_ref.dtype)
+
+    # state update
+    tail = jnp.exp(c[-1:, :] - c)                          # (L, K)
+    state_ref[...] = (jnp.exp(c[-1])[:, None] * s
+                      + jnp.dot((k * tail).T, v,
+                                preferred_element_type=jnp.float32))
+
+
+def wkv6_chunk(r, k, v, lw, u, *, chunk: int = 16, interpret: bool = True):
+    """r/k/lw: (BH, S, K); v: (BH, S, V); u: (BH, 1, K) per-head bonus.
+    Returns y (BH, S, V). State starts at zero (prefill semantics)."""
+    BH, S, K = k.shape
+    V = v.shape[-1]
+    L = min(chunk, S)
+    while S % L:
+        L -= 1
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=L),
+        grid=(BH, S // L),
+        in_specs=[
+            pl.BlockSpec((1, L, K), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, L, K), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, L, V), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, L, K), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, 1, K), lambda b, t: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, L, V), lambda b, t: (b, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, V), r.dtype),
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, lw, u)

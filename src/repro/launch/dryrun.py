@@ -1,0 +1,233 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes, and extract the roofline terms.
+
+For each cell:
+  * params / optimizer state / caches are sharded ShapeDtypeStructs (no
+    allocation); inputs likewise.
+  * ``jit(step).lower(...).compile()`` must succeed on the 16x16 single-pod
+    mesh AND the 2x16x16 multi-pod mesh.
+  * ``compiled.memory_analysis()`` proves the per-device footprint;
+    ``compiled.cost_analysis()`` + a collective-bytes parse of the HLO feed
+    EXPERIMENTS.md §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out out.json]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, ShapeSpec, ArchConfig
+from repro.configs.registry import (ARCH_IDS, get_config, get_shape,
+                                    cell_is_runnable)
+from repro.models.registry import build, input_specs
+from repro.nn.param import PSpec, map_specs
+from repro.distributed import sharding as shd
+from repro.analysis import hlo_cost
+from repro.launch.mesh import (make_production_mesh, PEAK_FLOPS_BF16, HBM_BW,
+                               ICI_BW)
+from repro.launch.steps import make_train_step, make_prefill_step, make_decode_step
+from repro.optim.adam import AdamW
+from repro.optim.schedules import get_schedule
+
+
+def roofline_terms(flops: float, bytes_acc: float, coll: dict) -> dict:
+    """Three roofline terms in seconds from per-device figures.
+
+    ICI term divides collective bytes by per-chip ICI bandwidth x 2 usable
+    link directions (2D torus; conservative)."""
+    coll_bytes = sum(v["bytes"] for v in coll.values())
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll_bytes / (2 * ICI_BW)
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {"t_compute": t_compute, "t_memory": t_memory,
+            "t_collective": t_coll, "dominant": dominant,
+            "collective_bytes": coll_bytes}
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS = 6*N*D (dense; N_active for MoE), train; 2*N*D fwd-only.
+    Per-token decode: same formulas with D = batch tokens (1 step)."""
+    n = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # one new token per sequence
+    return 2.0 * n * tokens
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+def _cache_dtype(key: str):
+    """KV caches + shift/conv states are bf16 activations; recurrent
+    accumulator states (wkv, ssm) stay fp32."""
+    return jnp.float32 if key.split("/")[-1] in ("wkv", "ssm") else jnp.bfloat16
+
+
+def abstract_tree(mesh, spec_tree, dtype):
+    return shd.tree_abstract(mesh, spec_tree, dtype)
+
+
+def abstract_cache(mesh, spec_tree):
+    out = {}
+    for key, spec in spec_tree.items():
+        out[key] = jax.ShapeDtypeStruct(
+            spec.shape, _cache_dtype(key),
+            sharding=shd.spec_sharding(mesh, spec))
+    return out
+
+
+def abstract_inputs(mesh, cfg, shape):
+    out = {}
+    for name, ispec in input_specs(cfg, shape).items():
+        out[name] = jax.ShapeDtypeStruct(
+            ispec.spec.shape, ispec.dtype,
+            sharding=shd.spec_sharding(mesh, ispec.spec))
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, compile_: bool = True):
+    """Lower (and optionally compile) one cell. Returns a result dict."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, why = cell_is_runnable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": why}
+
+    bundle = build(cfg)
+    t0 = time.time()
+    with jax.set_mesh(mesh), shd.use_mesh(mesh):
+        params = abstract_tree(mesh, bundle.param_spec, jnp.bfloat16)
+        batch = abstract_inputs(mesh, cfg, shape)
+        if shape.kind == "train":
+            opt = AdamW(get_schedule(cfg.lr_schedule, 3e-4, 2000, 100_000),
+                        moment_dtype=cfg.adam_dtype)
+            ospec = opt.state_spec(bundle.param_spec)
+            mdt = jnp.bfloat16 if cfg.adam_dtype == "bfloat16" else jnp.float32
+            opt_state = {"m": abstract_tree(mesh, ospec["m"], mdt),
+                         "v": abstract_tree(mesh, ospec["v"], mdt),
+                         "step": jax.ShapeDtypeStruct((), jnp.int32)}
+            fn = jax.jit(make_train_step(bundle, opt), donate_argnums=(0, 1))
+            lowered = fn.lower(params, opt_state, batch)
+        elif shape.kind == "prefill":
+            fn = jax.jit(make_prefill_step(bundle))
+            lowered = fn.lower(params, batch)
+        else:  # decode
+            long = shape.name.startswith("long")
+            cache = abstract_cache(
+                mesh, bundle.cache_spec(shape.global_batch, shape.seq_len,
+                                        long=long))
+            fn = jax.jit(make_decode_step(bundle), donate_argnums=(1,))
+            lowered = fn.lower(params, cache, batch)
+        t_lower = time.time() - t0
+
+        res = {"arch": arch, "shape": shape_name, "status": "lowered",
+               "t_lower_s": round(t_lower, 2),
+               "n_devices": mesh.devices.size,
+               "mesh": dict(zip(mesh.axis_names, mesh.devices.shape))}
+        if not compile_:
+            return res
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        res["t_compile_s"] = round(time.time() - t0, 2)
+
+        ma = compiled.memory_analysis()
+        res["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_device_bytes": int(ma.argument_size_in_bytes
+                                     + ma.output_size_in_bytes
+                                     + ma.temp_size_in_bytes
+                                     - ma.alias_size_in_bytes),
+        }
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        # trip-count-aware per-device cost (cost_analysis counts while
+        # bodies once; see repro/analysis/hlo_cost.py)
+        hc = hlo_cost.analyze(compiled.as_text())
+        flops, bts, coll = hc["flops"], hc["hbm_bytes"], hc["collectives"]
+        res["cost"] = {
+            "hlo_flops": flops, "hlo_bytes": bts,
+            "xla_flops_body_once": float(ca.get("flops", 0.0)),
+            "xla_bytes_body_once": float(ca.get("bytes accessed", 0.0)),
+        }
+        res["collectives"] = coll
+        res["roofline"] = roofline_terms(flops, bts, coll)
+        mf = model_flops(cfg, shape)
+        total_flops = flops * mesh.devices.size
+        res["model_flops"] = mf
+        res["useful_flops_ratio"] = (mf / total_flops) if total_flops else 0.0
+        res["status"] = "compiled"
+        return res
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL results here")
+    args = ap.parse_args(argv)
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [("single_pod", make_production_mesh(multi_pod=False)),
+                  ("multi_pod", make_production_mesh(multi_pod=True))]
+    else:
+        name = "multi_pod" if args.multi_pod else "single_pod"
+        meshes = [(name, make_production_mesh(multi_pod=args.multi_pod))]
+
+    cells = ([(args.arch, args.shape)] if (args.arch and args.shape)
+             else [(a, s) for a in ARCH_IDS for s in SHAPES])
+    if not args.all and not (args.arch and args.shape):
+        ap.error("pass --arch and --shape, or --all")
+
+    failures = 0
+    for mesh_name, mesh in meshes:
+        for arch, shape in cells:
+            try:
+                res = lower_cell(arch, shape, mesh)
+            except Exception as e:  # noqa: BLE001 — report and continue
+                res = {"arch": arch, "shape": shape, "status": "FAILED",
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+                failures += 1
+            res["mesh_name"] = mesh_name
+            line = {k: v for k, v in res.items() if k != "trace"}
+            print(json.dumps(line), flush=True)
+            if res["status"] == "FAILED":
+                print(res.get("trace", ""), file=sys.stderr)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(res) + "\n")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Step factories shared by the launcher, dry-run and benchmarks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import ModelBundle
+
+
+def make_train_step(bundle: ModelBundle, optimizer):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    When cfg.grad_accum > 1, the global batch is split into microbatches and
+    gradients accumulate through a lax.scan (activation memory / n_micro —
+    how the biggest train_4k cells fit a 16GB v5e; §Perf iteration 4)."""
+    accum = max(1, getattr(bundle.cfg, "grad_accum", 1))
+
+    def step(params, opt_state, batch):
+        b = jax.tree.leaves(batch)[0].shape[0]
+        n_micro = accum
+        while b % n_micro:
+            n_micro -= 1
+        if n_micro <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                bundle.loss_fn, has_aux=True)(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                    + x.shape[1:])
+                if getattr(x, "ndim", 0) >= 1 and x.shape[0] == b else
+                jnp.broadcast_to(x, (n_micro,) + getattr(x, "shape", ())),
+                batch)
+
+            def micro_step(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(
+                    bundle.loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(lambda a, x: a + x, g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            acc_dt = (jnp.bfloat16
+                      if getattr(bundle.cfg, "adam_dtype", "") == "bfloat16"
+                      else jnp.float32)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                micro_step, (g0, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss_sum / n_micro
+            metrics = {"loss": loss}
+        new_params, new_state, opt_metrics = optimizer.update(
+            grads, opt_state, params)
+        return new_params, new_state, {**metrics, **opt_metrics}
+
+    return step
+
+
+def make_prefill_step(bundle: ModelBundle, **kw):
+    def step(params, batch):
+        return bundle.prefill_fn(params, batch, **kw)
+    return step
+
+
+def make_decode_step(bundle: ModelBundle, **kw):
+    def step(params, cache, batch):
+        return bundle.decode_fn(params, cache, batch, **kw)
+    return step

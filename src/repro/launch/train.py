@@ -1,0 +1,85 @@
+"""LM training launcher.
+
+Two modes:
+  * real training on this host's devices (smoke-sized config, synthetic
+    tokens) — the end-to-end driver:
+      PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --steps 50
+  * pod-scale lowering check of the FULL config (same path dryrun.py takes,
+    single cell):
+      PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --dry
+
+The GNN trainer (the paper's workload) lives in core/trainer.py and
+examples/quickstart.py; this launcher drives the LM substrate through the
+identical step factory + checkpointing stack.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--dry", action="store_true",
+                    help="lower+compile the FULL config on the pod mesh")
+    args = ap.parse_args(argv)
+
+    if args.dry:
+        from repro.launch import dryrun
+        dryrun.main(["--arch", args.arch, "--shape", "train_4k"])
+        return
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import ShapeSpec
+    from repro.configs.registry import get_smoke_config
+    from repro.models.registry import build, sample_inputs
+    from repro.launch.steps import make_train_step
+    from repro.optim.adam import AdamW
+    from repro.optim.schedules import get_schedule
+    from repro.checkpoint.checkpointing import Checkpointer
+
+    cfg = get_smoke_config(args.arch)
+    bundle = build(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0), jnp.float32)
+    opt = AdamW(get_schedule(cfg.lr_schedule, args.lr, 10, args.steps))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(bundle, opt))
+    ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+
+    start = 0
+    if ckpt is not None and args.resume and ckpt.latest_step() is not None:
+        restored = ckpt.restore(ckpt.latest_step(), params, opt_state)
+        params, opt_state = restored["params"], restored["opt"]
+        start = restored["step"]
+        print(f"resumed from step {start}")
+
+    rng = np.random.default_rng(0)
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = sample_inputs(cfg, shape, rng)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % 5 == 0 or step == args.steps - 1:
+            tok_s = args.batch * args.seq * (step - start + 1) / (time.time() - t0)
+            print(f"step {step:4d} loss={float(metrics['loss']):.4f} "
+                  f"lr={float(metrics['lr']):.2e} tok/s={tok_s:.0f}")
+        if ckpt is not None and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step + 1, params, opt_state)
+    if ckpt is not None:
+        ckpt.wait()
+    print(f"done: {args.steps - start} steps ({cfg.name})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Decoder-only LM covering the dense (minicpm / starcoder2 / yi / llama3),
+MoE (olmoe / grok-1) and VLM-backbone (llava-next) families.
+
+Pure-functional: ``param_spec(cfg)`` declares parameters; apply functions
+scan over layers with stacked params (+ ``jax.checkpoint`` remat for train).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn.param import PSpec, stack_layers
+from repro.nn import layers as L
+from repro.nn.attention import attention_spec, attend
+from repro.nn.moe import moe_spec, moe_ffn
+from repro.distributed.sharding import shard
+
+
+def _norm_kind(cfg: ArchConfig) -> str:
+    return "layernorm" if cfg.act == "gelu" else "rmsnorm"
+
+
+def layer_spec(cfg: ArchConfig):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    sp = {
+        "ln1": L.norm_spec(d, _norm_kind(cfg)),
+        "attn": attention_spec(d, cfg.n_heads, cfg.n_kv_heads, hd),
+        "ln2": L.norm_spec(d, _norm_kind(cfg)),
+    }
+    if cfg.moe is not None:
+        sp["moe"] = moe_spec(d, cfg.d_ff, cfg.moe)
+    else:
+        sp["mlp"] = L.mlp_spec(d, cfg.d_ff, cfg.act)
+    return sp
+
+
+def param_spec(cfg: ArchConfig):
+    vp = L.pad_vocab(cfg.vocab_size)
+    return {
+        "embed": L.embedding_spec(vp, cfg.d_model, cfg.tie_embeddings),
+        "layers": stack_layers(layer_spec(cfg), cfg.n_layers),
+        "ln_f": L.norm_spec(cfg.d_model, _norm_kind(cfg)),
+    }
+
+
+def cache_spec(cfg: ArchConfig, batch: int, seq: int, *, long: bool = False):
+    """KV cache PSpec tree (stacked layer dim scanned over). ``long`` shards
+    the cache sequence over both mesh axes (524k, batch=1)."""
+    seq_ax = "longseq" if long else "seq_kv"
+    kv = PSpec((cfg.n_layers, batch, seq, cfg.n_kv_heads, cfg.resolved_head_dim),
+               ("layers", "batch", seq_ax, "kv_heads", None), "zeros")
+    return {"k": kv, "v": kv}
+
+
+def _layer_apply(cfg: ArchConfig, p, x, positions, mode, cache_l, seq_axis):
+    h = L.apply_norm(p["ln1"], x, cfg.norm_eps)
+    a, new_cache = attend(
+        p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+        positions=positions, mode=mode, cache=cache_l, cache_seq_axis=seq_axis)
+    x = x + a
+    h = L.apply_norm(p["ln2"], x, cfg.norm_eps)
+    if cfg.moe is not None:
+        m, aux = moe_ffn(p["moe"], h, cfg.moe)
+    else:
+        m, aux = L.apply_mlp(p["mlp"], h, cfg.act), jnp.zeros((), jnp.float32)
+    # sequence-parallel residual (seq over "model"; replicated when S==1)
+    return shard(x + m, "batch", "seq_res", None), new_cache, aux
+
+
+def forward(params, cfg: ArchConfig, tokens: jax.Array, *,
+            embeds_prefix: Optional[jax.Array] = None, mode: str = "train",
+            cache=None, pos0: Optional[jax.Array] = None,
+            seq_axis: str = "seq_kv"):
+    """Returns (hidden (B,S,d), new_cache, aux_loss)."""
+    x = L.embed_tokens(params["embed"], tokens)
+    if embeds_prefix is not None:
+        x = jnp.concatenate([embeds_prefix.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    if mode == "decode":
+        positions = jnp.broadcast_to(pos0.reshape(-1, 1), (B, 1))
+    else:
+        positions = jnp.arange(S)[None, :]
+
+    has_cache = cache is not None
+
+    def body(x, per_layer):
+        p_l, cache_l = per_layer
+        y, new_c, aux = _layer_apply(cfg, p_l, x, positions, mode, cache_l, seq_axis)
+        return y, (new_c, aux)
+
+    if cfg.remat == "full" and mode == "train":
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    xs = (params["layers"], cache if has_cache else None)
+    x, (new_cache, aux) = jax.lax.scan(body, x, xs)
+    x = L.apply_norm(params["ln_f"], x, cfg.norm_eps)
+    return x, (new_cache if (has_cache or mode == "prefill") else None), jnp.mean(aux)
+
+
+def loss_fn(params, cfg: ArchConfig, batch) -> tuple[jax.Array, dict]:
+    """Causal-LM loss; for VLM the patch-embed prefix is unsupervised."""
+    tokens = batch["tokens"]
+    prefix = batch.get("patch_embeds")
+    x, _, aux = forward(params, cfg, tokens, embeds_prefix=prefix, mode="train")
+    if prefix is not None:
+        x = x[:, prefix.shape[1]:]
+    logits = L.logits_fn(params["embed"], x, cfg.vocab_size)
+    ce = L.cross_entropy(logits, batch["labels"])
+    loss = ce + 0.01 * aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+
+def prefill(params, cfg: ArchConfig, batch, *, seq_axis: str = "seq_kv"):
+    """Returns (last-token logits, cache)."""
+    x, cache, _ = forward(params, cfg, batch["tokens"],
+                          embeds_prefix=batch.get("patch_embeds"),
+                          mode="prefill", seq_axis=seq_axis)
+    logits = L.logits_fn(params["embed"], x[:, -1:], cfg.vocab_size)
+    return logits, cache
+
+
+def decode_step(params, cfg: ArchConfig, cache, batch, *,
+                seq_axis: str = "seq_kv"):
+    """batch: {"tokens": (B,1), "pos": ()}. Returns (logits, new_cache)."""
+    x, cache, _ = forward(params, cfg, batch["tokens"], mode="decode",
+                          cache=cache, pos0=batch["pos"], seq_axis=seq_axis)
+    logits = L.logits_fn(params["embed"], x, cfg.vocab_size)
+    return logits, cache

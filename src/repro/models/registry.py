@@ -1,0 +1,126 @@
+"""Model registry: resolves an ArchConfig into a uniform ModelBundle
+(param/cache specs + loss/prefill/decode fns + per-shape input specs).
+
+This is the single point the launcher, dry-run, smoke tests and benchmarks
+go through (``--arch <id>``)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.nn.param import PSpec, materialize
+from repro.models import lm, zamba2, rwkv, whisper
+
+
+@dataclass(frozen=True)
+class InputSpec:
+    spec: PSpec
+    dtype: Any
+    kind: str  # tokens | labels | embeds | index
+
+
+@dataclass
+class ModelBundle:
+    cfg: ArchConfig
+    param_spec: Any
+    loss_fn: Callable                      # (params, batch) -> (loss, metrics)
+    prefill_fn: Callable                   # (params, batch) -> (logits, cache)
+    decode_fn: Callable                    # (params, cache, batch) -> (logits, cache)
+    cache_spec: Optional[Callable] = None  # (batch, seq, long=...) -> PSpec tree
+
+    def init_params(self, rng, dtype=jnp.bfloat16):
+        return materialize(self.param_spec, rng, dtype)
+
+
+def build(cfg: ArchConfig) -> ModelBundle:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return ModelBundle(
+            cfg, lm.param_spec(cfg),
+            loss_fn=lambda p, b: lm.loss_fn(p, cfg, b),
+            prefill_fn=lambda p, b, **kw: lm.prefill(p, cfg, b, **kw),
+            decode_fn=lambda p, c, b, **kw: lm.decode_step(p, cfg, c, b, **kw),
+            cache_spec=lambda batch, seq, **kw: lm.cache_spec(cfg, batch, seq, **kw))
+    if fam == "hybrid":
+        return ModelBundle(
+            cfg, zamba2.param_spec(cfg),
+            loss_fn=lambda p, b: zamba2.loss_fn(p, cfg, b),
+            prefill_fn=lambda p, b, **kw: zamba2.prefill(p, cfg, b, **kw),
+            decode_fn=lambda p, c, b, **kw: zamba2.decode_step(p, cfg, c, b, **kw),
+            cache_spec=lambda batch, seq, **kw: zamba2.state_spec(cfg, batch, seq, **kw))
+    if fam == "ssm":
+        return ModelBundle(
+            cfg, rwkv.param_spec(cfg),
+            loss_fn=lambda p, b: rwkv.loss_fn(p, cfg, b),
+            prefill_fn=lambda p, b, **kw: rwkv.prefill(p, cfg, b),
+            decode_fn=lambda p, c, b, **kw: rwkv.decode_step(p, cfg, c, b),
+            cache_spec=lambda batch, seq, **kw: rwkv.state_spec(cfg, batch, seq, **kw))
+    if fam == "audio":
+        return ModelBundle(
+            cfg, whisper.param_spec(cfg),
+            loss_fn=lambda p, b: whisper.loss_fn(p, cfg, b),
+            prefill_fn=lambda p, b, **kw: whisper.prefill(p, cfg, b, **kw),
+            decode_fn=lambda p, c, b, **kw: whisper.decode_step(p, cfg, c, b, **kw),
+            cache_spec=lambda batch, seq, **kw: whisper.cache_spec(cfg, batch, seq, **kw))
+    raise ValueError(f"unknown family {fam!r}")
+
+
+# ---------------------------------------------------------------------------
+# Per-(arch x shape) input specs.  The dry-run turns these into sharded
+# ShapeDtypeStructs; smoke tests materialize them with ``sample_inputs``.
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, InputSpec]:
+    B, S = shape.global_batch, shape.seq_len
+    tok = lambda s: InputSpec(PSpec(s, ("batch", None)), jnp.int32, "tokens")
+    lab = lambda s: InputSpec(PSpec(s, ("batch", None)), jnp.int32, "labels")
+
+    if shape.kind == "decode":
+        out = {"tokens": InputSpec(PSpec((B, 1), ("batch", None)), jnp.int32, "tokens"),
+               "pos": InputSpec(PSpec((), ()), jnp.int32, "index")}
+        return out
+
+    if cfg.family == "vlm":
+        P = cfg.vlm.num_patches
+        s_text = S - P
+        out = {"patch_embeds": InputSpec(
+                   PSpec((B, P, cfg.d_model), ("batch", None, None)),
+                   jnp.bfloat16, "embeds"),
+               "tokens": tok((B, s_text))}
+        if shape.kind == "train":
+            out["labels"] = lab((B, s_text))
+        return out
+
+    if cfg.family == "audio":
+        out = {"frames": InputSpec(
+                   PSpec((B, cfg.encdec.enc_len, cfg.d_model), ("batch", None, None)),
+                   jnp.bfloat16, "embeds"),
+               "tokens": tok((B, S))}
+        if shape.kind == "train":
+            out["labels"] = lab((B, S))
+        return out
+
+    out = {"tokens": tok((B, S))}
+    if shape.kind == "train":
+        out["labels"] = lab((B, S))
+    return out
+
+
+def sample_inputs(cfg: ArchConfig, shape: ShapeSpec, rng: np.random.Generator):
+    """Materialize concrete inputs for smoke tests / examples."""
+    out = {}
+    for name, ispec in input_specs(cfg, shape).items():
+        if ispec.kind in ("tokens", "labels"):
+            out[name] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, size=ispec.spec.shape), jnp.int32)
+        elif ispec.kind == "embeds":
+            out[name] = jnp.asarray(
+                rng.standard_normal(ispec.spec.shape), jnp.bfloat16)
+        else:  # index
+            out[name] = jnp.asarray(shape.seq_len - 1, jnp.int32)
+    return out

@@ -1,0 +1,92 @@
+"""RWKV-6 (Finch) causal LM: attention-free; state is O(1) in sequence length
+(the long_500k cell carries state past 524k tokens with no KV cache)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn.param import PSpec, stack_layers
+from repro.nn import layers as L
+from repro.nn.rwkv6 import (timemix_spec, channelmix_spec, timemix, channelmix)
+
+
+def layer_spec(cfg: ArchConfig):
+    d = cfg.d_model
+    return {
+        "ln1": L.norm_spec(d, "layernorm"),
+        "tm": timemix_spec(d, cfg.rwkv),
+        "ln2": L.norm_spec(d, "layernorm"),
+        "cm": channelmix_spec(d, cfg.d_ff),
+    }
+
+
+def param_spec(cfg: ArchConfig):
+    vp = L.pad_vocab(cfg.vocab_size)
+    return {
+        "embed": L.embedding_spec(vp, cfg.d_model, cfg.tie_embeddings),
+        "ln_in": L.norm_spec(cfg.d_model, "layernorm"),
+        "layers": stack_layers(layer_spec(cfg), cfg.n_layers),
+        "ln_f": L.norm_spec(cfg.d_model, "layernorm"),
+    }
+
+
+def state_spec(cfg: ArchConfig, batch: int, seq: int, *, long: bool = False):
+    del seq, long  # recurrent: state size independent of context length
+    d = cfg.d_model
+    hs = cfg.rwkv.head_size
+    H = d // hs
+    Lyr = cfg.n_layers
+    return {
+        "tm_shift": PSpec((Lyr, batch, d), ("layers", "batch", "embed"), "zeros"),
+        "wkv": PSpec((Lyr, batch, H, hs, hs), ("layers", "batch", "heads", None, None), "zeros"),
+        "cm_shift": PSpec((Lyr, batch, d), ("layers", "batch", "embed"), "zeros"),
+    }
+
+
+def forward(params, cfg: ArchConfig, tokens, *, mode="train", state=None,
+            use_chunked=True):
+    x = L.embed_tokens(params["embed"], tokens)
+    x = L.apply_norm(params["ln_in"], x, cfg.norm_eps)
+    has_state = state is not None
+
+    def body(x, per_layer):
+        p_l, st_l = per_layer
+        tm_state = (None if not has_state else
+                    {"shift": st_l["tm_shift"], "wkv": st_l["wkv"]})
+        cm_state = None if not has_state else {"shift": st_l["cm_shift"]}
+        y, new_tm = timemix(p_l["tm"], L.apply_norm(p_l["ln1"], x, cfg.norm_eps),
+                            cfg.rwkv, state=tm_state, use_chunked=use_chunked)
+        x = x + y
+        y, new_cm = channelmix(p_l["cm"], L.apply_norm(p_l["ln2"], x, cfg.norm_eps),
+                               state=cm_state)
+        x = x + y
+        new_st = {"tm_shift": new_tm["shift"], "wkv": new_tm["wkv"],
+                  "cm_shift": new_cm["shift"]}
+        return x, new_st
+
+    if cfg.remat == "full" and mode == "train":
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    x, new_states = jax.lax.scan(body, x, (params["layers"], state))
+    x = L.apply_norm(params["ln_f"], x, cfg.norm_eps)
+    return x, new_states
+
+
+def loss_fn(params, cfg: ArchConfig, batch):
+    x, _ = forward(params, cfg, batch["tokens"], mode="train")
+    logits = L.logits_fn(params["embed"], x, cfg.vocab_size)
+    ce = L.cross_entropy(logits, batch["labels"])
+    return ce, {"loss": ce, "ce": ce}
+
+
+def prefill(params, cfg: ArchConfig, batch, **_):
+    x, states = forward(params, cfg, batch["tokens"], mode="prefill")
+    logits = L.logits_fn(params["embed"], x[:, -1:], cfg.vocab_size)
+    return logits, states
+
+
+def decode_step(params, cfg: ArchConfig, state, batch, **_):
+    x, state = forward(params, cfg, batch["tokens"], mode="decode", state=state)
+    logits = L.logits_fn(params["embed"], x, cfg.vocab_size)
+    return logits, state

@@ -1,0 +1,169 @@
+"""Whisper-style encoder-decoder backbone. The audio conv frontend is a STUB:
+``input_specs()`` supplies precomputed frame embeddings (B, enc_len, d) —
+per the assignment, only the transformer backbone is modeled.
+
+Decoder positions use fixed sinusoidal embeddings so the assigned shape
+cells (seq 4096/32768 ≫ Whisper's 448) remain well-defined (DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn.param import PSpec, stack_layers
+from repro.nn import layers as L
+from repro.nn.attention import attention_spec, attend
+
+
+def _enc_layer_spec(cfg: ArchConfig):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    return {
+        "ln1": L.norm_spec(d, "layernorm"),
+        "attn": attention_spec(d, cfg.n_heads, cfg.n_kv_heads, hd),
+        "ln2": L.norm_spec(d, "layernorm"),
+        "mlp": L.mlp_spec(d, cfg.d_ff, "gelu"),
+    }
+
+
+def _dec_layer_spec(cfg: ArchConfig):
+    sp = _enc_layer_spec(cfg)
+    sp["ln_x"] = L.norm_spec(cfg.d_model, "layernorm")
+    sp["xattn"] = attention_spec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.resolved_head_dim)
+    return sp
+
+
+def param_spec(cfg: ArchConfig):
+    vp = L.pad_vocab(cfg.vocab_size)
+    return {
+        "embed": L.embedding_spec(vp, cfg.d_model, cfg.tie_embeddings),
+        "encoder": stack_layers(_enc_layer_spec(cfg), cfg.encdec.enc_layers),
+        "ln_enc": L.norm_spec(cfg.d_model, "layernorm"),
+        "decoder": stack_layers(_dec_layer_spec(cfg), cfg.n_layers),
+        "ln_f": L.norm_spec(cfg.d_model, "layernorm"),
+    }
+
+
+def cache_spec(cfg: ArchConfig, batch: int, seq: int, *, long: bool = False):
+    seq_ax = "longseq" if long else "seq_kv"
+    hd = cfg.resolved_head_dim
+    self_kv = PSpec((cfg.n_layers, batch, seq, cfg.n_kv_heads, hd),
+                    ("layers", "batch", seq_ax, "kv_heads", None), "zeros")
+    cross_kv = PSpec((cfg.n_layers, batch, cfg.encdec.enc_len, cfg.n_kv_heads, hd),
+                     ("layers", "batch", None, "kv_heads", None), "zeros")
+    return {"self_k": self_kv, "self_v": self_kv,
+            "cross_k": cross_kv, "cross_v": cross_kv}
+
+
+def encode(params, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, enc_len, d) precomputed embeddings (conv frontend stub)."""
+    frames = frames.astype(params["embed"]["table"].dtype)
+    x = frames + L.sinusoidal_positions(frames.shape[1], cfg.d_model).astype(frames.dtype)
+
+    def body(x, p_l):
+        h = L.apply_norm(p_l["ln1"], x, cfg.norm_eps)
+        a, _ = attend(p_l["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                      head_dim=cfg.resolved_head_dim, rope_theta=None,
+                      positions=jnp.arange(x.shape[1])[None], mode="train",
+                      x_kv=h)  # bidirectional self-attention
+        x = x + a
+        h = L.apply_norm(p_l["ln2"], x, cfg.norm_eps)
+        return x + L.apply_mlp(p_l["mlp"], h, "gelu"), None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.apply_norm(params["ln_enc"], x, cfg.norm_eps)
+
+
+def decode(params, cfg: ArchConfig, tokens, enc_out, *, mode="train",
+           cache=None, pos0=None, seq_axis="seq_kv"):
+    """Decoder stack. enc_out: (B, enc_len, d) or None (decode mode w/ cache).
+    Returns (hidden, new_cache)."""
+    x = L.embed_tokens(params["embed"], tokens)
+    B, S, _ = x.shape
+    if mode == "decode":
+        positions = jnp.broadcast_to(pos0.reshape(-1, 1), (B, 1))
+        x = x + _sin_pos_at(positions, cfg.d_model).astype(x.dtype)
+    else:
+        positions = jnp.arange(S)[None, :]
+        x = x + L.sinusoidal_positions(S, cfg.d_model).astype(x.dtype)[None]
+
+    has_cache = cache is not None
+
+    def body(x, per_layer):
+        p_l, cache_l = per_layer
+        h = L.apply_norm(p_l["ln1"], x, cfg.norm_eps)
+        self_cache = (None if not has_cache else
+                      {"k": cache_l["self_k"], "v": cache_l["self_v"]})
+        a, new_self = attend(p_l["attn"], h, n_heads=cfg.n_heads,
+                             n_kv=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+                             rope_theta=None, positions=positions, mode=mode,
+                             cache=self_cache, cache_seq_axis=seq_axis)
+        x = x + a
+        h = L.apply_norm(p_l["ln_x"], x, cfg.norm_eps)
+        if mode == "decode":
+            # cross-attention against the cached encoder K/V
+            from repro.nn.attention import decode_attention
+            q = jnp.einsum("bsd,dhk->bshk", h, p_l["xattn"]["wq"])
+            G = cfg.n_heads // cfg.n_kv_heads
+            out = decode_attention(q, cache_l["cross_k"], cache_l["cross_v"],
+                                   jnp.asarray(cfg.encdec.enc_len - 1), G)
+            out = out.reshape(B, 1, cfg.n_heads, cfg.resolved_head_dim)
+            a = jnp.einsum("bshk,hkd->bsd", out, p_l["xattn"]["wo"])
+            new_cross = {"k": cache_l["cross_k"], "v": cache_l["cross_v"]}
+        else:
+            a, new_cross = attend(p_l["xattn"], h, n_heads=cfg.n_heads,
+                                  n_kv=cfg.n_kv_heads,
+                                  head_dim=cfg.resolved_head_dim,
+                                  rope_theta=None, positions=positions,
+                                  mode=mode, x_kv=enc_out)
+            if mode == "prefill":
+                new_cross = {
+                    "k": jnp.einsum("bsd,dhk->bshk", enc_out, p_l["xattn"]["wk"]).astype(x.dtype),
+                    "v": jnp.einsum("bsd,dhk->bshk", enc_out, p_l["xattn"]["wv"]).astype(x.dtype),
+                }
+        x = x + a
+        h = L.apply_norm(p_l["ln2"], x, cfg.norm_eps)
+        x = x + L.apply_mlp(p_l["mlp"], h, "gelu")
+        new_cache = None
+        if new_self is not None:
+            new_cache = {"self_k": new_self["k"], "self_v": new_self["v"],
+                         "cross_k": new_cross["k"], "cross_v": new_cross["v"]}
+        return x, new_cache
+
+    if cfg.remat == "full" and mode == "train":
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    x, new_cache = jax.lax.scan(body, x, (params["decoder"], cache))
+    return L.apply_norm(params["ln_f"], x, cfg.norm_eps), new_cache
+
+
+def _sin_pos_at(positions: jax.Array, d: int) -> jax.Array:
+    """Sinusoidal position embedding at arbitrary positions (B, S)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10_000.0) / (half - 1)))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def loss_fn(params, cfg: ArchConfig, batch):
+    enc = encode(params, cfg, batch["frames"])
+    x, _ = decode(params, cfg, batch["tokens"], enc, mode="train")
+    logits = L.logits_fn(params["embed"], x, cfg.vocab_size)
+    ce = L.cross_entropy(logits, batch["labels"])
+    return ce, {"loss": ce, "ce": ce}
+
+
+def prefill(params, cfg: ArchConfig, batch, *, seq_axis="seq_kv"):
+    enc = encode(params, cfg, batch["frames"])
+    x, cache = decode(params, cfg, batch["tokens"], enc, mode="prefill",
+                      seq_axis=seq_axis)
+    logits = L.logits_fn(params["embed"], x[:, -1:], cfg.vocab_size)
+    return logits, cache
+
+
+def decode_step(params, cfg: ArchConfig, cache, batch, *, seq_axis="seq_kv"):
+    x, cache = decode(params, cfg, batch["tokens"], None, mode="decode",
+                      cache=cache, pos0=batch["pos"], seq_axis=seq_axis)
+    logits = L.logits_fn(params["embed"], x, cfg.vocab_size)
+    return logits, cache

@@ -1,0 +1,144 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE weight-shared attention block
+invoked every ``shared_attn_period`` backbone layers.
+
+Structure: outer scan over G groups; each group = inner scan over ``period``
+Mamba2 layers (params stacked (G, period, ...)) followed by the shared
+attention+MLP block (single un-stacked param set, its KV caches stacked (G, ...)).
+Simplification vs the released checkpoint (noted in DESIGN.md): the shared
+block consumes the hidden state directly (no concat with the original
+embedding / per-invocation LoRA).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn.param import PSpec, stack_layers
+from repro.nn import layers as L
+from repro.nn.attention import attention_spec, attend
+from repro.nn.mamba2 import mamba2_spec, mamba2_block, CONV_K
+
+
+def _groups(cfg: ArchConfig) -> tuple[int, int]:
+    period = cfg.hybrid.shared_attn_period
+    assert cfg.n_layers % period == 0, (cfg.n_layers, period)
+    return cfg.n_layers // period, period
+
+
+def param_spec(cfg: ArchConfig):
+    h = cfg.hybrid
+    G, period = _groups(cfg)
+    mamba_layer = {"ln": L.norm_spec(cfg.d_model, "rmsnorm"),
+                   "mamba": mamba2_spec(cfg.d_model, h)}
+    shared = {
+        "ln1": L.norm_spec(cfg.d_model, "rmsnorm"),
+        "attn": attention_spec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.resolved_head_dim),
+        "ln2": L.norm_spec(cfg.d_model, "rmsnorm"),
+        "mlp": L.mlp_spec(cfg.d_model, cfg.d_ff, "silu"),
+    }
+    vp = L.pad_vocab(cfg.vocab_size)
+    return {
+        "embed": L.embedding_spec(vp, cfg.d_model, cfg.tie_embeddings),
+        "backbone": stack_layers(stack_layers(mamba_layer, period, "layers_inner"),
+                                 G, "layers"),
+        "shared": shared,
+        "ln_f": L.norm_spec(cfg.d_model, "rmsnorm"),
+    }
+
+
+def state_spec(cfg: ArchConfig, batch: int, seq: int, *, long: bool = False):
+    """Decode state: per-layer mamba states + per-invocation shared-attn KV."""
+    h = cfg.hybrid
+    G, period = _groups(cfg)
+    d_in = h.ssm_expand * cfg.d_model
+    H = d_in // h.ssm_headdim
+    conv_dim = d_in + 2 * h.ssm_state
+    seq_ax = "longseq" if long else "seq_kv"
+    kv = PSpec((G, batch, seq, cfg.n_kv_heads, cfg.resolved_head_dim),
+               ("layers", "batch", seq_ax, "kv_heads", None), "zeros")
+    return {
+        "conv": PSpec((G, period, batch, CONV_K - 1, conv_dim),
+                      ("layers", "layers_inner", "batch", None, "heads"), "zeros"),
+        "ssm": PSpec((G, period, batch, H, h.ssm_headdim, h.ssm_state),
+                     ("layers", "layers_inner", "batch", "heads", None, None), "zeros"),
+        "k": kv, "v": kv,
+    }
+
+
+def forward(params, cfg: ArchConfig, tokens, *, mode="train", state=None,
+            pos0=None, seq_axis: str = "seq_kv"):
+    h = cfg.hybrid
+    x = L.embed_tokens(params["embed"], tokens)
+    B, S, _ = x.shape
+    if mode == "decode":
+        positions = jnp.broadcast_to(pos0.reshape(-1, 1), (B, 1))
+    else:
+        positions = jnp.arange(S)[None, :]
+    has_state = state is not None
+
+    def mamba_body(x, per_layer):
+        p_l, st_l = per_layer
+        y, new_st = mamba2_block(
+            p_l["mamba"], L.apply_norm(p_l["ln"], x, cfg.norm_eps), h,
+            mode=mode, state=st_l)
+        return x + y, new_st
+
+    if cfg.remat == "full" and mode == "train":
+        mamba_body = jax.checkpoint(mamba_body, prevent_cse=False)
+
+    shared_p = params["shared"]
+
+    def group_body(x, per_group):
+        p_g, st_g = per_group
+        mamba_st = (None if not has_state else
+                    {"conv": st_g["conv"], "ssm": st_g["ssm"]})
+        x, new_mamba = jax.lax.scan(
+            mamba_body, x,
+            (p_g, mamba_st))
+        hh = L.apply_norm(shared_p["ln1"], x, cfg.norm_eps)
+        cache_g = None if not has_state else {"k": st_g["k"], "v": st_g["v"]}
+        a, new_cache = attend(
+            shared_p["attn"], hh, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            positions=positions, mode=mode, cache=cache_g, cache_seq_axis=seq_axis)
+        x = x + a
+        hh = L.apply_norm(shared_p["ln2"], x, cfg.norm_eps)
+        x = x + L.apply_mlp(shared_p["mlp"], hh, "silu")
+        out_state = {"conv": new_mamba["conv"] if has_state or mode != "train" else None,
+                     "ssm": new_mamba["ssm"] if has_state or mode != "train" else None}
+        if new_cache is not None:
+            out_state.update({"k": new_cache["k"], "v": new_cache["v"]})
+        return x, out_state
+
+    st_groups = None
+    if has_state:
+        st_groups = state
+    x, new_states = jax.lax.scan(group_body, x, (params["backbone"], st_groups))
+    x = L.apply_norm(params["ln_f"], x, cfg.norm_eps)
+    return x, new_states
+
+
+def loss_fn(params, cfg: ArchConfig, batch):
+    x, _ = forward(params, cfg, batch["tokens"], mode="train")
+    logits = L.logits_fn(params["embed"], x, cfg.vocab_size)
+    ce = L.cross_entropy(logits, batch["labels"])
+    return ce, {"loss": ce, "ce": ce}
+
+
+def prefill(params, cfg: ArchConfig, batch, *, seq_axis: str = "seq_kv"):
+    x, states = forward(params, cfg, batch["tokens"], mode="prefill",
+                        seq_axis=seq_axis)
+    logits = L.logits_fn(params["embed"], x[:, -1:], cfg.vocab_size)
+    return logits, states
+
+
+def decode_step(params, cfg: ArchConfig, state, batch, *,
+                seq_axis: str = "seq_kv"):
+    x, state = forward(params, cfg, batch["tokens"], mode="decode",
+                       state=state, pos0=batch["pos"], seq_axis=seq_axis)
+    logits = L.logits_fn(params["embed"], x, cfg.vocab_size)
+    return logits, state

@@ -1,0 +1,252 @@
+"""GQA attention: chunked online-softmax (flash) for train/prefill, cache
+attention for decode, cross-attention for enc-dec.
+
+TPU sharding strategy (DESIGN.md §6):
+* train/prefill — if the head count divides the "model" axis, heads are
+  TP-sharded (KV heads repeated to full H, so the repeat is sharded too);
+  otherwise (36-head minicpm/starcoder2, 56-head llava, 12-head whisper)
+  attention falls back to context parallelism: q-seq sharded over "model",
+  K/V gathered. Both choices flow through the divisibility-aware ``shard``.
+* decode — the KV-cache *sequence* is sharded over "model" (flash-decode):
+  softmax max/sum and the o-contraction become partial reductions + tiny
+  all-reduces. Head-count agnostic; divides cache HBM by the axis size.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.param import PSpec
+from repro.nn.layers import apply_rope
+from repro.distributed.sharding import shard, current_mesh
+
+
+def attention_spec(d: int, n_heads: int, n_kv: int, head_dim: int):
+    return {
+        "wq": PSpec((d, n_heads, head_dim), ("embed", "heads", None)),
+        "wk": PSpec((d, n_kv, head_dim), ("embed", "kv_heads", None)),
+        "wv": PSpec((d, n_kv, head_dim), ("embed", "kv_heads", None)),
+        "wo": PSpec((n_heads, head_dim, d), ("heads", None, "embed")),
+    }
+
+
+def model_axis_size() -> int:
+    mesh = current_mesh()
+    return int(mesh.shape["model"]) if mesh is not None and "model" in mesh.axis_names else 1
+
+
+def _pick_chunk(s: int, want: int) -> int:
+    c = min(want, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def _flash_fwd_scan(q, k, v, causal: bool, qc: int, kc: int):
+    """Returns (out (B,nq,qc,H,D) f32, lse (B,nq,qc,H) f32)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    nq, nk = Sq // qc, Sk // kc
+    scale = 1.0 / (D ** 0.5)
+    qb = q.reshape(B, nq, qc, H, D)
+    q_pos = jnp.arange(Sq).reshape(nq, qc)
+
+    def body(carry, inp):
+        m, l, acc = carry                      # (B,nq,qc,H), ·, (B,nq,qc,H,D)
+        ki, vi, k_pos = inp                    # (B,kc,H,D), ·, (kc,)
+        s = jnp.einsum("bnqhd,bkhd->bnqhk", qb, ki,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            mask = q_pos[None, :, :, None, None] >= k_pos[None, None, None, None, :]
+            s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bnqhk,bkhd->bnqhd", p.astype(ki.dtype), vi,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, nq, qc, H), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, nq, qc, H), jnp.float32)
+    a0 = jnp.zeros((B, nq, qc, H, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(k.reshape(B, nk, kc, H, D), 1, 0),
+         jnp.moveaxis(v.reshape(B, nk, kc, H, D), 1, 0),
+         jnp.arange(Sk).reshape(nk, kc)))
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l[..., None]
+    lse = m + jnp.log(l)
+    return out, lse
+
+
+from functools import partial
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_core(q, k, v, causal: bool, qc: int, kc: int):
+    out, _ = _flash_fwd_scan(q, k, v, causal, qc, kc)
+    B, Sq, H, D = q.shape
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def _flash_core_fwd(q, k, v, causal, qc, kc):
+    out, lse = _flash_fwd_scan(q, k, v, causal, qc, kc)
+    B, Sq, H, D = q.shape
+    o = out.reshape(B, Sq, H, D).astype(q.dtype)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_core_bwd(causal, qc, kc, res, do):
+    """Flash backward: recompute p per k-chunk from saved LSE — the O(S^2)
+    probability matrix is never stored (this is what makes remat+scan train
+    steps fit HBM; EXPERIMENTS.md §Perf iteration 1)."""
+    q, k, v, o, lse = res
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    nq, nk = Sq // qc, Sk // kc
+    scale = 1.0 / (D ** 0.5)
+    qb = q.reshape(B, nq, qc, H, D)
+    dob = do.reshape(B, nq, qc, H, D)
+    ob = o.reshape(B, nq, qc, H, D)
+    q_pos = jnp.arange(Sq).reshape(nq, qc)
+    # delta = rowsum(do * o)
+    delta = jnp.sum(dob.astype(jnp.float32) * ob.astype(jnp.float32), axis=-1)
+
+    def body(dq, inp):
+        ki, vi, k_pos = inp
+        s = jnp.einsum("bnqhd,bkhd->bnqhk", qb, ki,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            mask = q_pos[None, :, :, None, None] >= k_pos[None, None, None, None, :]
+            s = jnp.where(mask, s, -1e30)
+        p = jnp.exp(s - lse[..., None])                       # normalized probs
+        dp = jnp.einsum("bnqhd,bkhd->bnqhk", dob.astype(jnp.float32),
+                        vi.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * scale
+        dsb = ds.astype(ki.dtype)
+        dq = dq + jnp.einsum("bnqhk,bkhd->bnqhd", dsb, ki,
+                             preferred_element_type=jnp.float32)
+        dk_i = jnp.einsum("bnqhk,bnqhd->bkhd", dsb, qb,
+                          preferred_element_type=jnp.float32)
+        dv_i = jnp.einsum("bnqhk,bnqhd->bkhd", p.astype(dob.dtype), dob,
+                          preferred_element_type=jnp.float32)
+        return dq, (dk_i.astype(k.dtype), dv_i.astype(v.dtype))
+
+    dq0 = jnp.zeros((B, nq, qc, H, D), jnp.float32)
+    dq, (dk, dv) = jax.lax.scan(
+        body, dq0,
+        (jnp.moveaxis(k.reshape(B, nk, kc, H, D), 1, 0),
+         jnp.moveaxis(v.reshape(B, nk, kc, H, D), 1, 0),
+         jnp.arange(Sk).reshape(nk, kc)))
+    dq = dq.reshape(B, Sq, H, D).astype(q.dtype)
+    dk = jnp.moveaxis(dk, 0, 1).reshape(B, Sk, H, D)
+    dv = jnp.moveaxis(dv, 0, 1).reshape(B, Sk, H, D)
+    return dq, dk, dv
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool, q_chunk: int = 512,
+                    k_chunk: int = 1024) -> jax.Array:
+    """Chunked online-softmax attention; never materializes (Sq, Sk) — in
+    forward OR backward (custom VJP recomputes probabilities per chunk).
+
+    q: (B, Sq, H, D); k, v: (B, Sk, H, D) (GQA already repeated).
+    Causal assumes q and k start at the same global position.
+    """
+    Sq, Sk = q.shape[1], k.shape[1]
+    qc = _pick_chunk(Sq, q_chunk)
+    kc = _pick_chunk(Sk, k_chunk)
+    return _flash_core(q, k, v, causal, qc, kc)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, n_rep: int) -> jax.Array:
+    """One-token attention against a cache. q: (B, 1, H, D);
+    caches: (B, S, KH, D) with H = KH * n_rep; pos: scalar attend-up-to."""
+    B, _, H, D = q.shape
+    S, KH = k_cache.shape[1], k_cache.shape[2]
+    scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(B, KH, n_rep, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    mask = jnp.arange(S)[None, None, None, :] <= pos
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def attend(p, x: jax.Array, *, n_heads: int, n_kv: int, head_dim: int,
+           rope_theta: Optional[float], positions: jax.Array,
+           mode: str = "train", cache: Optional[dict] = None,
+           x_kv: Optional[jax.Array] = None, cache_seq_axis: str = "seq_kv"):
+    """Full attention block (projections + core; no norm/residual).
+
+    Returns (out, new_cache).
+    mode: "train"/"prefill" — full-seq flash (causal iff self-attention);
+          "decode" — one token against ``cache`` (written at positions[0]).
+    """
+    B = x.shape[0]
+    G = n_heads // n_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    src = x if x_kv is None else x_kv
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+
+    if rope_theta is not None and x_kv is None:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+
+    head_tp = n_heads % model_axis_size() == 0
+    seq_name = None if head_tp else "seq_sp"
+
+    new_cache = cache
+    if mode == "decode":
+        assert cache is not None
+        pos = positions.reshape(-1)[0]
+        if n_kv % model_axis_size() == 0 or model_axis_size() == 1:
+            k_cache = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        else:
+            # cache seq is "model"-sharded (non-divisible kv heads): a DUS at
+            # a dynamic position makes SPMD replicate the cache; a masked
+            # one-hot update stays elementwise and fully sharded
+            onehot = (jnp.arange(cache["k"].shape[1]) == pos)[None, :, None, None]
+            k_cache = jnp.where(onehot, k.astype(cache["k"].dtype), cache["k"])
+            v_cache = jnp.where(onehot, v.astype(cache["v"].dtype), cache["v"])
+        k_cache = shard(k_cache, "batch", cache_seq_axis, None, None)
+        v_cache = shard(v_cache, "batch", cache_seq_axis, None, None)
+        new_cache = {"k": k_cache, "v": v_cache}
+        out = decode_attention(q, k_cache, v_cache, pos, G)
+    else:
+        # repeat KV to full heads so head-TP shards the repeat as well
+        if G > 1:
+            k = jnp.repeat(k, G, axis=2)
+            v = jnp.repeat(v, G, axis=2)
+        q = shard(q, "batch", seq_name, "heads", None)
+        k = shard(k, "batch", None, "heads", None)
+        v = shard(v, "batch", None, "heads", None)
+        out = flash_attention(q, k, v, causal=(x_kv is None))
+        if mode == "prefill" and x_kv is None:
+            kk = jnp.einsum("bsd,dhk->bshk", src, p["wk"])  # unrepeated
+            new_cache = {
+                "k": shard(apply_rope(kk, positions, rope_theta) if rope_theta is not None else kk,
+                           "batch", cache_seq_axis, None, None).astype(x.dtype),
+                "v": shard(jnp.einsum("bsd,dhk->bshk", src, p["wv"]),
+                           "batch", cache_seq_axis, None, None).astype(x.dtype),
+            }
+
+    out = out.reshape(B, -1, n_heads, head_dim)
+    proj = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return shard(proj, "batch", None, None), new_cache

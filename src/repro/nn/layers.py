@@ -1,0 +1,131 @@
+"""Shared NN building blocks: norms, RoPE, embeddings, MLPs, losses.
+
+Everything is pure-functional: ``*_spec(cfg)`` returns a PSpec tree and the
+apply functions take the materialized (or abstract) params.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.param import PSpec
+from repro.distributed.sharding import shard
+
+
+def pad_vocab(v: int, multiple: int = 256) -> int:
+    """Pad vocab to a shardable multiple (logits beyond v are masked)."""
+    return ((v + multiple - 1) // multiple) * multiple
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_spec(d: int, kind: str = "rmsnorm"):
+    if kind == "rmsnorm":
+        return {"scale": PSpec((d,), ("embed",), "ones")}
+    return {"scale": PSpec((d,), ("embed",), "ones"),
+            "bias": PSpec((d,), ("embed",), "zeros")}
+
+
+def apply_norm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"] + p["bias"]).astype(x.dtype)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    return (y * p["scale"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                   # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal position embeddings (n, d)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10_000.0) / (half - 1)))
+    ang = jnp.arange(n, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embedding_spec(vocab_padded: int, d: int, tie: bool):
+    spec = {"table": PSpec((vocab_padded, d), ("vocab", "embed"), "embed", 0.02)}
+    if not tie:
+        spec["unembed"] = PSpec((d, vocab_padded), ("embed", "vocab"), "normal")
+    return spec
+
+
+def embed_tokens(p, tokens: jax.Array) -> jax.Array:
+    out = jnp.take(p["table"], tokens, axis=0)
+    return shard(out, "batch", None, None)
+
+
+def logits_fn(p, x: jax.Array, real_vocab: int) -> jax.Array:
+    table = p.get("unembed")
+    if table is None:
+        table = p["table"].T
+    logits = jnp.einsum("...d,dv->...v", x, table,
+                        preferred_element_type=jnp.float32)
+    vp = logits.shape[-1]
+    if vp != real_vocab:
+        neg = jnp.full((vp - real_vocab,), -1e30, logits.dtype)
+        logits = logits + jnp.concatenate([jnp.zeros((real_vocab,), logits.dtype), neg])
+    return logits
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token CE. logits (..., V) fp32, labels (...) int32."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated silu / plain gelu / squared-relu for rwkv channel-mix)
+# ---------------------------------------------------------------------------
+
+def mlp_spec(d: int, f: int, act: str):
+    if act == "silu":  # gated
+        return {"wi_gate": PSpec((d, f), ("embed", "ffn")),
+                "wi_up": PSpec((d, f), ("embed", "ffn")),
+                "wo": PSpec((f, d), ("ffn", "embed"))}
+    return {"wi": PSpec((d, f), ("embed", "ffn")),
+            "wo": PSpec((f, d), ("ffn", "embed"))}
+
+
+def apply_mlp(p, x: jax.Array, act: str) -> jax.Array:
+    if act == "silu":
+        g = jnp.einsum("...d,df->...f", x, p["wi_gate"])
+        u = jnp.einsum("...d,df->...f", x, p["wi_up"])
+        h = jax.nn.silu(g) * u
+    else:
+        h = jnp.einsum("...d,df->...f", x, p["wi"])
+        h = jax.nn.gelu(h) if act == "gelu" else jnp.square(jax.nn.relu(h))
+    h = shard(h, "batch", None, "ffn")
+    return jnp.einsum("...f,fd->...d", h, p["wo"])

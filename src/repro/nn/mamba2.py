@@ -1,0 +1,157 @@
+"""Mamba2 (SSD — state-space duality) block, chunked-parallel for
+train/prefill and single-step recurrent for decode.
+
+The chunked form is the TPU-native adaptation: within a chunk the decay
+matrix L = exp(a_i - a_j) (all exponents <= 0 — numerically safe for scalar
+per-head decay) turns the recurrence into three MXU matmuls; across chunks a
+short ``lax.scan`` carries the (H, P, N) state — exactly the paper's
+"pipelined load/compute" structure (Eq. 6) with the state tile resident in
+VMEM while chunks stream from HBM.
+
+Shapes: x (B, S, d); d_inner = expand*d; H = d_inner/headdim heads;
+state N = ssm_state; per-head dim P = headdim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.param import PSpec
+from repro.configs.base import HybridSpec
+from repro.distributed.sharding import shard
+
+CONV_K = 4  # causal depthwise conv width
+
+
+def mamba2_spec(d: int, h: HybridSpec):
+    d_in = h.ssm_expand * d
+    n = h.ssm_state
+    nheads = d_in // h.ssm_headdim
+    conv_dim = d_in + 2 * n
+    return {
+        # in_proj -> [z (d_in), x (d_in), B (n), C (n), dt (nheads)]
+        "w_in": PSpec((d, 2 * d_in + 2 * n + nheads), ("embed", "heads")),
+        "conv_w": PSpec((CONV_K, conv_dim), (None, "heads")),
+        "conv_b": PSpec((conv_dim,), ("heads",), "zeros"),
+        "a_log": PSpec((nheads,), (None,), "ones"),
+        "dt_bias": PSpec((nheads,), (None,), "zeros"),
+        "d_skip": PSpec((nheads,), (None,), "ones"),
+        "norm_scale": PSpec((d_in,), ("heads",), "ones"),
+        "w_out": PSpec((d_in, d), ("heads", "embed")),
+    }
+
+
+def _split_proj(p, x, d_in: int, n: int, nheads: int):
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xc, B, C, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    return z, xc, B, C, dt
+
+
+def _causal_conv(p, u: jax.Array, conv_state=None):
+    """Depthwise causal conv width 4. u: (B, S, C). Returns (y, new_state)
+    where state is the last CONV_K-1 inputs (B, K-1, C)."""
+    B, S, C = u.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((B, CONV_K - 1, C), u.dtype)
+    ext = jnp.concatenate([conv_state, u], axis=1)
+    y = jnp.zeros_like(u)
+    for i in range(CONV_K):
+        y = y + ext[:, i:i + S] * p["conv_w"][i]
+    new_state = ext[:, -(CONV_K - 1):]
+    return jax.nn.silu(y + p["conv_b"]), new_state
+
+
+def ssd_chunked(xh, dt, a_log, Bm, Cm, chunk: int):
+    """Chunk-parallel SSD. xh: (B,S,H,P); dt: (B,S,H); Bm/Cm: (B,S,N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    while S % L:
+        L -= 1
+    nc = S // L
+
+    A = -jnp.exp(a_log.astype(jnp.float32))                 # (H,) negative
+    la = dt.astype(jnp.float32) * A                         # (B,S,H) log-decay <= 0
+    xdt = (xh * dt[..., None]).astype(jnp.float32)
+
+    lac = la.reshape(b, nc, L, H)
+    xc = xdt.reshape(b, nc, L, H, P)
+    Bc = Bm.reshape(b, nc, L, N).astype(jnp.float32)
+    Cc = Cm.reshape(b, nc, L, N).astype(jnp.float32)
+
+    def body(state, inp):
+        la_i, x_i, B_i, C_i = inp            # (b,L,H), (b,L,H,P), (b,L,N) x2
+        cum = jnp.cumsum(la_i, axis=1)       # (b,L,H) inclusive
+        # intra-chunk: Y[t] += sum_{j<=t} exp(cum_t - cum_j) C_t.B_j x_j
+        dec = cum[:, :, None, :] - cum[:, None, :, :]       # (b,L,L,H) t,j
+        mask = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])[None, :, :, None]
+        Lmat = jnp.where(mask, jnp.exp(dec), 0.0)
+        cb = jnp.einsum("bln,bmn->blm", C_i, B_i)           # (b,L,L)
+        y = jnp.einsum("blmh,bmhp->blhp", Lmat * cb[..., None], x_i)
+        # inter-chunk: Y[t] += C_t exp(cum_t) . state
+        y = y + jnp.einsum("bln,bhpn,blh->blhp", C_i, state, jnp.exp(cum))
+        # state' = exp(cum_last) state + sum_j exp(cum_last - cum_j) B_j x_j
+        tail = jnp.exp(cum[:, -1:, :] - cum)                # (b,L,H)
+        state = state * jnp.exp(cum[:, -1])[:, :, None, None]  # (b,H,1,1)
+        state = state + jnp.einsum("blhp,bln,blh->bhpn", x_i, B_i, tail)
+        return state, y
+
+    state0 = jnp.zeros((b, H, P, N), jnp.float32)
+    # checkpointed body: chunk-scan bwd residuals = states + inputs only
+    state, ys = jax.lax.scan(
+        jax.checkpoint(body, prevent_cse=False), state0,
+        (jnp.moveaxis(lac, 1, 0), jnp.moveaxis(xc, 1, 0),
+         jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, S, H, P)
+    return y, state
+
+
+def ssd_step(state, xh, dt, a_log, Bm, Cm):
+    """Single recurrent step. state (B,H,P,N); xh (B,H,P); dt (B,H);
+    Bm/Cm (B,N). Returns (y (B,H,P), new_state)."""
+    A = -jnp.exp(a_log.astype(jnp.float32))
+    decay = jnp.exp(dt.astype(jnp.float32) * A)             # (B,H)
+    xdt = (xh * dt[..., None]).astype(jnp.float32)
+    state = state * decay[..., None, None] + jnp.einsum("bhp,bn->bhpn", xdt, Bm.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm.astype(jnp.float32))
+    return y, state
+
+
+def mamba2_block(p, x, h: HybridSpec, *, mode: str = "train", state=None):
+    """Full Mamba2 block. x: (B, S, d) (S=1 for decode).
+    state: None or {"conv": (B,K-1,conv_dim), "ssm": (B,H,P,N)}.
+    Returns (out (B,S,d), new_state)."""
+    Bsz, S, d = x.shape
+    d_in = h.ssm_expand * d
+    n = h.ssm_state
+    P = h.ssm_headdim
+    H = d_in // P
+
+    z, xc, Bm, Cm, dt = _split_proj(p, x, d_in, n, H)
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    conv_out, new_conv = _causal_conv(p, conv_in, conv_state)
+    xc, Bm, Cm = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xh = xc.reshape(Bsz, S, H, P)
+    xh = shard(xh, "batch", None, "heads", None)
+
+    if mode == "decode":
+        ssm_state = state["ssm"] if state is not None else jnp.zeros((Bsz, H, P, n), jnp.float32)
+        y, new_ssm = ssd_step(ssm_state, xh[:, 0], dt[:, 0], p["a_log"],
+                              Bm[:, 0], Cm[:, 0])
+        y = y[:, None]
+    else:
+        y, new_ssm = ssd_chunked(xh, dt, p["a_log"], Bm, Cm, h.ssm_chunk)
+
+    y = y + xh.astype(y.dtype) * p["d_skip"][None, None, :, None]
+    y = y.reshape(Bsz, S, d_in).astype(x.dtype)
+    # gated RMSNorm (mamba2 norm)
+    y = y * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-5) * p["norm_scale"]).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return shard(out, "batch", None, None), {"conv": new_conv, "ssm": new_ssm}

@@ -1,0 +1,245 @@
+"""Mixture-of-Experts layer: top-k routing + static-capacity grouped matmul.
+
+Dispatch strategy (TPU adaptation of HitGNN's scatter-gather aggregate — a
+token->expert dispatch IS a bipartite-graph aggregation): tokens are ranked
+within their expert via a sort-free cumsum ranking, scattered into a static
+(E, C, d) buffer (capacity C = ceil(topk*N/E * capacity_factor), tokens
+beyond C dropped — Switch-style), pushed through the expert FFNs as one
+grouped einsum, and gathered back with router weights.
+
+Sharding: experts -> "model" when E divides the axis (olmoe, 64e);
+otherwise (grok, 8e) the expert ffn dim is TP-sharded instead — the same
+fallback P3 uses for feature-dim partitioning. The scatter/gather across the
+"model" axis lowers to the expert-parallel all-to-all.
+
+HitGNN's workload-balancing insight appears here at micro scale: the
+capacity bound plus an auxiliary load-balance loss play the role of the
+two-stage scheduler (bounding the slowest expert's work per step).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.param import PSpec
+from repro.configs.base import MoESpec
+from repro.distributed.sharding import shard
+
+
+def moe_spec(d: int, f: int, m: MoESpec):
+    e = m.num_experts
+    ef = m.expert_d_ff or f
+    return {
+        "router": PSpec((d, e), ("embed", None)),
+        "wi_gate": PSpec((e, d, ef), ("experts", "embed", "expert_ffn")),
+        "wi_up": PSpec((e, d, ef), ("experts", "embed", "expert_ffn")),
+        "wo": PSpec((e, ef, d), ("experts", "expert_ffn", "embed")),
+    }
+
+
+def capacity(n_tokens: int, m: MoESpec) -> int:
+    c = int(n_tokens * m.top_k * m.capacity_factor / m.num_experts)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def route(router_w: jax.Array, x: jax.Array, m: MoESpec):
+    """x: (N, d) -> (weights (N,K), experts (N,K), aux_loss)."""
+    logits = jnp.einsum("nd,de->ne", x, router_w,
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, experts = jax.lax.top_k(probs, m.top_k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    # Switch-style load-balance aux loss: E * sum(frac_tokens * frac_prob)
+    frac_prob = jnp.mean(probs, axis=0)
+    assign = jnp.zeros_like(probs).at[
+        jnp.arange(x.shape[0])[:, None], experts].set(1.0)
+    frac_tok = jnp.mean(assign, axis=0) / m.top_k
+    aux = m.num_experts * jnp.sum(frac_prob * frac_tok)
+    return weights, experts, aux
+
+
+def moe_ffn(p, x: jax.Array, m: MoESpec):
+    """x: (B, S, d) or (N, d). Returns (out, aux_loss).
+
+    Under an active mesh, dispatch runs as an explicit shard_map EP pipeline
+    (_moe_ffn_ep) — local scatter, expert-sliced grouped matmul, one bf16
+    psum — which removes XLA SPMD's fp32 dispatch-buffer all-reduces
+    (EXPERIMENTS.md §Perf iteration 2c). Without a mesh the pure-SPMD
+    vmap-batched path below runs (CPU tests/examples)."""
+    from repro.distributed.sharding import current_mesh
+    mesh = current_mesh()
+    if mesh is not None and "model" in mesh.axis_names and x.ndim == 3:
+        return _moe_ffn_ep(p, x, m, mesh)
+    return _moe_ffn_spmd(p, x, m)
+
+
+def _moe_ffn_spmd(p, x: jax.Array, m: MoESpec):
+    """Pure-SPMD path (no mesh / 2-D inputs).
+
+    Dispatch keeps the BATCH dim explicit with per-batch-row capacity, so the
+    scatter/gather are shard-local under data parallelism (the batch rows of
+    tokens, indices and buffers share the same leading sharding); the single
+    expert-parallel all-to-all then happens inside the expert einsum where
+    the E dim re-shards onto the "model" axis. A flattened (B*S) dispatch
+    forces XLA into involuntary full rematerialization of the token tensor
+    (measured +4.5x collective bytes — EXPERIMENTS.md §Perf iterations 1-2).
+    """
+    orig_shape = x.shape
+    d = x.shape[-1]
+    if x.ndim == 2:
+        x = x[None]
+    B, S, _ = x.shape
+    K, E = m.top_k, m.num_experts
+    C = capacity(S, m)  # per batch row
+
+    xf = x.reshape(B, S, d)
+    weights, experts, aux = route(p["router"], xf.reshape(-1, d), m)
+    weights = weights.reshape(B, S, K)
+    experts = experts.reshape(B, S, K)
+
+    # --- rank each (token, slot) within its expert, PER batch row -----------
+    flat_e = experts.reshape(B, S * K)                       # (B, SK)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)      # (B, SK, E)
+    pos = jnp.cumsum(onehot, axis=1) - 1                     # running count
+    rank = jnp.take_along_axis(pos, flat_e[..., None], axis=2)[..., 0]
+    keep = rank < C
+    slot_e = jnp.where(keep, flat_e, 0)
+    slot_c = jnp.where(keep, rank, C)                        # C = overflow
+
+    # --- shard-local scatter into the (B, E*(C+1), d) dispatch buffer -------
+    # put/take_along_axis keep B as a scatter/gather BATCHING dim, which XLA
+    # SPMD partitions; multi-array advanced indexing replicates instead
+    # (measured: 228GB -> see EXPERIMENTS.md §Perf iteration 2b)
+    tok = jnp.repeat(xf, K, axis=1)                          # (B, SK, d)
+    slot = slot_e * (C + 1) + slot_c                         # (B, SK)
+
+    def _row_scatter(slot_row, tok_row):
+        return jnp.zeros((E * (C + 1), d), x.dtype).at[slot_row].set(tok_row)
+
+    buf = jax.vmap(_row_scatter)(slot, tok)                  # batched scatter
+    buf = buf.reshape(B, E, C + 1, d)[:, :, :C]
+    buf = shard(buf, "batch", None, None, None)
+
+    # --- expert FFN: E re-shards onto "model" (the EP all-to-all) -----------
+    g = jnp.einsum("becd,edf->becf", buf, p["wi_gate"])
+    u = jnp.einsum("becd,edf->becf", buf, p["wi_up"])
+    h = jax.nn.silu(g) * u
+    h = shard(h, "batch", "experts", None, "expert_ffn")
+    out_buf = jnp.einsum("becf,efd->becd", h, p["wo"])
+    out_buf = shard(out_buf, "batch", None, None, None)
+
+    # --- shard-local gather back + weighted combine ---------------------------
+    gslot = slot_e * C + jnp.minimum(slot_c, C - 1)           # (B, SK)
+    flat_out = out_buf.reshape(B, E * C, d)
+    gathered = jax.vmap(lambda ob, gs: ob[gs])(flat_out, gslot)
+    gathered = jnp.where(keep[..., None], gathered, 0.0)
+    combined = (gathered.reshape(B, S, K, d)
+                * weights[..., None].astype(gathered.dtype)).sum(axis=2)
+    return combined.reshape(orig_shape), aux
+
+
+# ---------------------------------------------------------------------------
+# Explicit expert-parallel dispatch (shard_map)
+# ---------------------------------------------------------------------------
+
+def _local_dispatch(xf, router_w, m: MoESpec, C: int, dtype):
+    """Route + scatter the LOCAL token block into an (E, C+1, d) buffer.
+    Pure per-device code — no collectives, no SPMD ambiguity."""
+    N, d = xf.shape
+    E, K = m.num_experts, m.top_k
+    weights, experts, aux = route(router_w, xf, m)
+    flat_e = experts.reshape(-1)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    rank = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - 1,
+                               flat_e[:, None], axis=1)[:, 0]
+    keep = rank < C
+    slot_e = jnp.where(keep, flat_e, 0)
+    slot_c = jnp.where(keep, rank, C)
+    tok = jnp.repeat(xf, K, axis=0)
+    buf = jnp.zeros((E * (C + 1), d), dtype)
+    buf = buf.at[slot_e * (C + 1) + slot_c].set(tok)
+    return (buf.reshape(E, C + 1, d)[:, :C], weights, aux,
+            (slot_e, slot_c, keep))
+
+
+def _local_combine(out_buf, weights, slots, N: int, d: int, C: int):
+    slot_e, slot_c, keep = slots
+    K = weights.shape[-1]
+    flat = out_buf.reshape(-1, d)
+    g = flat[slot_e * C + jnp.minimum(slot_c, C - 1)]
+    g = jnp.where(keep[:, None], g, 0.0)
+    return (g.reshape(N, K, d)
+            * weights[..., None].astype(g.dtype)).sum(axis=1)
+
+
+def _moe_ffn_ep(p, x: jax.Array, m: MoESpec, mesh):
+    """shard_map expert parallelism:
+      * tokens stay on their data shard; scatter/gather are device-local;
+      * E >= model-axis: each model rank computes its E/n_model experts
+        (weights arrive pre-sliced by their 'experts'->model sharding);
+        E < model-axis (grok): every rank computes ALL experts on its
+        expert_ffn/n_model slice (P3-style feature-dim partitioning);
+      * one bf16 psum over 'model' completes the partial outputs;
+      * FSDP 'embed' shards of the weights are all-gathered locally (small).
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import resolve_spec
+
+    B, S, d = x.shape
+    E, K = m.num_experts, m.top_k
+    f = p["wi_gate"].shape[-1]
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh.shape[a]
+    n_model = mesh.shape["model"]
+    e_shardable = E % n_model == 0
+    n_loc = (B // n_data if B % n_data == 0 else B) * S
+    C = capacity(n_loc, m)
+
+    x_spec = P(data_axes if len(data_axes) > 1 else data_axes[0], None, None)
+    r_spec = resolve_spec(mesh, p["router"].shape, ("embed", None))
+    wg_spec = resolve_spec(mesh, p["wi_gate"].shape,
+                           ("experts", "embed", "expert_ffn"))
+    wo_spec = resolve_spec(mesh, p["wo"].shape,
+                           ("experts", "expert_ffn", "embed"))
+
+    def body(xb, router, wg, wu, wo_):
+        bl, sl, _ = xb.shape
+        xf = xb.reshape(bl * sl, d)
+        # gather the FSDP ('embed' -> data) weight shards locally
+        if r_spec[0] is not None:
+            router = jax.lax.all_gather(router, r_spec[0], axis=0, tiled=True)
+        if wg_spec[1] is not None:
+            wg = jax.lax.all_gather(wg, wg_spec[1], axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, wg_spec[1], axis=1, tiled=True)
+        if wo_spec[2] is not None:
+            wo_ = jax.lax.all_gather(wo_, wo_spec[2], axis=2, tiled=True)
+
+        buf, weights, aux, slots = _local_dispatch(xf, router, m, C, xb.dtype)
+        if e_shardable and n_model > 1:
+            idx = jax.lax.axis_index("model")
+            e_loc = E // n_model
+            my = jax.lax.dynamic_slice_in_dim(buf, idx * e_loc, e_loc, 0)
+            h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", my, wg)) \
+                * jnp.einsum("ecd,edf->ecf", my, wu)
+            out_my = jnp.einsum("ecf,efd->ecd", h, wo_)
+            out_buf = jax.lax.dynamic_update_slice_in_dim(
+                jnp.zeros((E, C, d), out_my.dtype), out_my, idx * e_loc, 0)
+        else:
+            # expert-ffn TP slice (wg/wo arrive f-sliced over 'model')
+            h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) \
+                * jnp.einsum("ecd,edf->ecf", buf, wu)
+            out_buf = jnp.einsum("ecf,efd->ecd", h, wo_)
+        combined = _local_combine(out_buf, weights, slots, bl * sl, d, C)
+        combined = jax.lax.psum(combined.astype(xb.dtype), "model")
+        aux = jax.lax.pmean(aux, data_axes + ("model",))
+        return combined.reshape(bl, sl, d), aux
+
+    out, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec, r_spec, wg_spec, wg_spec, wo_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(x, p["router"], p["wi_gate"], p["wi_up"], p["wo"])
+    return out, aux

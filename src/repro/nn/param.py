@@ -1,0 +1,79 @@
+"""Declarative parameter specs.
+
+Models declare their parameters as a pytree of :class:`PSpec` (shape + logical
+axes + init law). The same spec tree then serves three consumers:
+
+* ``materialize(spec, rng)``   -> real arrays (smoke tests, examples)
+* ``abstract(spec, ...)``      -> ShapeDtypeStructs w/ shardings (dry-run; NO allocation)
+* ``tree_shardings(spec, ...)``-> NamedShardings (jit in_shardings)
+
+Logical axis names are resolved to mesh axes by ``distributed/sharding.py``,
+with divisibility-aware fallback to replication.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class PSpec:
+    """Declarative spec of one parameter tensor."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis name per dim (None = replicated)
+    init: str = "normal"             # normal | zeros | ones | embed
+    scale: float = 1.0               # stddev multiplier (normal) / fan-in override
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_pspec(x: Any) -> bool:
+    return isinstance(x, PSpec)
+
+
+def _init_leaf(spec: PSpec, key: jax.Array, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "embed":
+        return (jax.random.normal(key, spec.shape, jnp.float32) * spec.scale).astype(dtype)
+    # fan-in scaled normal (truncation unnecessary for tests)
+    fan_in = spec.shape[0] if len(spec.shape) >= 2 else max(spec.shape[-1], 1)
+    if len(spec.shape) >= 3:  # stacked layers dim first: use second-to-last as fan-in
+        fan_in = int(np.prod(spec.shape[1:-1])) or spec.shape[-1]
+    std = spec.scale / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+
+
+def materialize(spec_tree, rng: jax.Array, dtype=jnp.float32):
+    """Create real parameter arrays from a spec tree."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_pspec)
+    keys = jax.random.split(rng, len(leaves))
+    arrs = [_init_leaf(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def map_specs(fn: Callable[[PSpec], Any], spec_tree):
+    return jax.tree.map(fn, spec_tree, is_leaf=is_pspec)
+
+
+def param_count(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_pspec)
+    return int(sum(int(np.prod(s.shape)) for s in leaves))
+
+
+def stack_layers(spec_tree, n: int, axis_name: str = "layers"):
+    """Prepend a stacked-layers dim to every leaf (for lax.scan over layers)."""
+
+    def add(s: PSpec) -> PSpec:
+        return PSpec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.scale)
+
+    return map_specs(add, spec_tree)

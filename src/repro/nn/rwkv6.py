@@ -1,0 +1,198 @@
+"""RWKV-6 (Finch) block: time-mix with data-dependent decay + channel-mix.
+
+WKV6 recurrence per head (K = V = head_size):
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          w_t in (0,1), data-dependent
+
+Two implementations:
+* ``wkv6_recurrent`` — exact per-token scan (oracle + decode step).
+* ``wkv6_chunked``  — chunk-16 parallel form: within a chunk the pairwise
+  decay exp(c_{t-1} - c_j) has all exponents <= 0 (numerically safe, no
+  factored q*exp(c) blow-up), computed as one (L,L,K)-contracted einsum on
+  the MXU; a scan carries the (H,K,V) state across chunks. This is the
+  beyond-paper "shift the bottleneck into the MXU" optimization recorded in
+  EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.param import PSpec
+from repro.configs.base import RWKVSpec
+from repro.nn.layers import apply_norm
+from repro.distributed.sharding import shard
+
+_MIX = ("r", "k", "v", "w", "g")
+
+
+def timemix_spec(d: int, r: RWKVSpec):
+    hs = r.head_size
+    H = d // hs
+    lora = r.decay_lora
+    sp = {
+        "mu_base": PSpec((len(_MIX), d), (None, "embed"), "zeros"),
+        "mix_lora_a": PSpec((d, len(_MIX) * 32), ("embed", None)),
+        "mix_lora_b": PSpec((len(_MIX), 32, d), (None, None, "embed")),
+        "w_base": PSpec((d,), ("embed",), "zeros"),
+        "w_lora_a": PSpec((d, lora), ("embed", None)),
+        "w_lora_b": PSpec((lora, d), (None, "embed")),
+        "u": PSpec((H, hs), ("heads", None), "zeros"),
+        "ln_scale": PSpec((d,), ("embed",), "ones"),
+        "ln_bias": PSpec((d,), ("embed",), "zeros"),
+    }
+    for nm in ("wr", "wk", "wv", "wg", "wo"):
+        sp[nm] = PSpec((d, d), ("embed", "ffn"))
+    return sp
+
+
+def channelmix_spec(d: int, f: int):
+    return {
+        "mu_k": PSpec((d,), ("embed",), "zeros"),
+        "mu_r": PSpec((d,), ("embed",), "zeros"),
+        "wk": PSpec((d, f), ("embed", "ffn")),
+        "wv": PSpec((f, d), ("ffn", "embed")),
+        "wr": PSpec((d, d), ("embed", "ffn")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# WKV6 core
+# ---------------------------------------------------------------------------
+
+def wkv6_recurrent(r, k, v, lw, u, state):
+    """Exact scan. r/k/v: (B,S,H,K|V); lw: (B,S,H,K) log-decay (<=0);
+    u: (H,K); state: (B,H,K,V). Returns (y (B,S,H,V), final_state)."""
+
+    def step(s, inp):
+        rt, kt, vt, lwt = inp                         # (B,H,K) etc.
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = jnp.exp(lwt)[..., None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, lw))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def wkv6_chunked(r, k, v, lw, u, state, chunk: int = 16):
+    """Chunked-parallel WKV6. Same signature as wkv6_recurrent.
+
+    The intra-chunk pairwise decay tensor (B,L,L,H,K) is the HBM-traffic
+    hot spot at the HLO level; it is materialized exactly ONCE per chunk, in
+    the INPUT dtype (bf16 under mixed precision — §Perf iteration 3; the
+    decay cumsum stays fp32 for stability; exponents are all <= 0 so bf16
+    exp is well-conditioned). The Pallas kernel (kernels/wkv6.py) is the
+    deployed TPU path where this tensor never leaves VMEM at all."""
+    B, S, H, K = k.shape
+    V = v.shape[-1]
+    L = min(chunk, S)
+    while S % L:
+        L -= 1
+    nc = S // L
+    f32 = jnp.float32
+    cdt = r.dtype  # pairwise tensor dtype follows inputs (bf16 in deployment)
+    rc = r.reshape(B, nc, L, H, K)
+    kc = k.reshape(B, nc, L, H, K)
+    vc = v.reshape(B, nc, L, H, V)
+    lwc = lw.astype(f32).reshape(B, nc, L, H, K)
+
+    tri = jnp.tril(jnp.ones((L, L), bool), k=-1)      # strictly lower: j < t
+
+    def body(s, inp):
+        ri, ki, vi, lwi = inp                          # (B,L,H,*)
+        c = jnp.cumsum(lwi, axis=1)                    # inclusive (B,L,H,K)
+        c_excl = c - lwi                               # exclusive: decay up to t-1
+        # inter-chunk: y_t += (r_t * exp(c_{t-1})) . S_prev
+        y = jnp.einsum("blhk,bhkv->blhv", ri.astype(f32) * jnp.exp(c_excl), s)
+        # intra-chunk (j < t): A[t,j] = sum_k r_tk k_jk exp(c_{t-1,k} - c_{j,k})
+        # (one fused sub+mask+exp materialization, in input dtype)
+        dec = c_excl[:, :, None] - c[:, None, :]       # (B,L,L,H,K) t,j
+        m = jnp.exp(jnp.where(tri[None, :, :, None, None], dec, -1e30)).astype(cdt)
+        A = jnp.einsum("blhk,bmhk,blmhk->blmh", ri, ki, m,
+                       preferred_element_type=f32)
+        y = y + jnp.einsum("blmh,bmhv->blhv", A.astype(cdt), vi,
+                           preferred_element_type=f32)
+        # diagonal bonus term
+        y = y + jnp.einsum("blhk,blhk,blhv->blhv",
+                           ri.astype(f32), u[None, None] * ki.astype(f32),
+                           vi.astype(f32))
+        # state update: S' = exp(c_last) S + sum_j exp(c_last - c_j) k_j v_j
+        tail = jnp.exp(c[:, -1:] - c)                  # (B,L,H,K)
+        s = jnp.exp(c[:, -1])[..., None] * s + jnp.einsum(
+            "blhk,blhv->bhkv", ki.astype(f32) * tail, vi.astype(f32))
+        return s, y
+
+    # checkpointed body: the chunk scan's backward residuals reduce to the
+    # (small) inter-chunk states + the already-live inputs, instead of every
+    # per-chunk intermediate (measured 156s -> see §Perf iteration 3b)
+    state, ys = jax.lax.scan(
+        jax.checkpoint(body, prevent_cse=False), state.astype(f32),
+        tuple(jnp.moveaxis(a, 1, 0) for a in (rc, kc, vc, lwc)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, V)
+    return y.astype(r.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _ddlerp(p, x, x_prev):
+    """Finch data-dependent token-shift: one lerp per mix target."""
+    dx = x_prev - x                                    # (B,S,d)
+    low = jnp.tanh(jnp.einsum("bsd,dr->bsr", x + dx * 0.5, p["mix_lora_a"]))
+    low = low.reshape(*low.shape[:-1], len(_MIX), 32)
+    dyn = jnp.einsum("bsmr,mrd->bsmd", low, p["mix_lora_b"])
+    mu = p["mu_base"][None, None] + dyn                # (B,S,5,d)
+    return x[:, :, None] + dx[:, :, None] * mu         # (B,S,5,d)
+
+
+def timemix(p, x, spec: RWKVSpec, *, state=None, use_chunked=True):
+    """x: (B,S,d). state: {"shift": (B,d), "wkv": (B,H,K,V)} or None.
+    Returns (out, new_state)."""
+    B, S, d = x.shape
+    hs = spec.head_size
+    H = d // hs
+    shift_in = jnp.zeros((B, 1, d), x.dtype) if state is None else state["shift"][:, None]
+    x_prev = jnp.concatenate([shift_in, x[:, :-1]], axis=1)
+    mixed = _ddlerp(p, x, x_prev)
+    xr, xk, xv, xw, xg = [mixed[:, :, i] for i in range(len(_MIX))]
+
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"]).reshape(B, S, H, hs)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"]).reshape(B, S, H, hs)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"]).reshape(B, S, H, hs)
+    g = jnp.einsum("bsd,de->bse", xg, p["wg"])
+    # data-dependent decay (the Finch contribution): w = exp(-exp(base+lora))
+    wl = p["w_base"] + jnp.einsum("bsr,rd->bsd",
+                                  jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["w_lora_a"])),
+                                  p["w_lora_b"])
+    lw = -jnp.exp(wl.astype(jnp.float32)).reshape(B, S, H, hs)  # log w <= 0
+
+    r = shard(r, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "heads", None)
+    wkv_state = (jnp.zeros((B, H, hs, hs), jnp.float32)
+                 if state is None else state["wkv"])
+    core = wkv6_chunked if (use_chunked and S > 1) else wkv6_recurrent
+    y, new_wkv = core(r, k, v, lw, p["u"], wkv_state)
+
+    y = y.reshape(B, S, d).astype(x.dtype)
+    y = apply_norm({"scale": p["ln_scale"], "bias": p["ln_bias"]}, y)  # group-ish norm
+    out = jnp.einsum("bse,ed->bsd", y * jax.nn.silu(g), p["wo"])
+    new_state = {"shift": x[:, -1], "wkv": new_wkv}
+    return shard(out, "batch", None, None), new_state
+
+
+def channelmix(p, x, *, state=None):
+    """x: (B,S,d). state: {"shift": (B,d)} or None."""
+    B, S, d = x.shape
+    shift_in = jnp.zeros((B, 1, d), x.dtype) if state is None else state["shift"][:, None]
+    x_prev = jnp.concatenate([shift_in, x[:, :-1]], axis=1)
+    dx = x_prev - x
+    xk = x + dx * p["mu_k"]
+    xr = x + dx * p["mu_r"]
+    h = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk"])))
+    h = shard(h, "batch", None, "ffn")
+    out = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"])) * \
+        jnp.einsum("bsf,fd->bsd", h, p["wv"])
+    return out, {"shift": x[:, -1]}

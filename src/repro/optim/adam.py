@@ -1,0 +1,109 @@
+"""AdamW + SGD-momentum in pure JAX, with PSpec-mirrored state trees so the
+dry-run can build sharded abstract optimizer state without allocation.
+
+Moment dtype is configurable ("bfloat16" for grok-1 so the 314B-param state
+fits the pod; DESIGN.md)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.param import PSpec, map_specs, materialize
+
+
+@dataclass(frozen=True)
+class AdamW:
+    schedule: Callable  # step -> lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "float32"
+    grad_clip: float = 1.0
+
+    # -- state ---------------------------------------------------------------
+    def state_spec(self, param_spec):
+        zero = map_specs(lambda s: PSpec(s.shape, s.axes, "zeros"), param_spec)
+        return {"m": zero, "v": zero, "step": PSpec((), (), "zeros")}
+
+    def state_dtypes(self, param_spec):
+        dt = jnp.bfloat16 if self.moment_dtype == "bfloat16" else jnp.float32
+        return {"m": map_specs(lambda s: dt, param_spec),
+                "v": map_specs(lambda s: dt, param_spec),
+                "step": jnp.int32}
+
+    def init(self, params):
+        dt = jnp.bfloat16 if self.moment_dtype == "bfloat16" else jnp.float32
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params)
+        return {"m": zeros,
+                "v": jax.tree.map(lambda z: z, zeros),
+                "step": jnp.zeros((), jnp.int32)}
+
+    # -- update ---------------------------------------------------------------
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        lr = self.schedule(step)
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g
+            v32 = v.astype(jnp.float32) * b2 + (1 - b2) * jnp.square(g)
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps) + self.weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return newp, m32.astype(m.dtype), v32.astype(v.dtype)
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "step": step}, {"lr": lr, "grad_norm": gnorm}
+
+
+@dataclass(frozen=True)
+class SGDM:
+    schedule: Callable
+    momentum: float = 0.9
+
+    def state_spec(self, param_spec):
+        return {"m": map_specs(lambda s: PSpec(s.shape, s.axes, "zeros"), param_spec),
+                "step": PSpec((), (), "zeros")}
+
+    def init(self, params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        lr = self.schedule(step)
+
+        def upd(p, g, m):
+            m32 = m * self.momentum + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m32).astype(p.dtype), m32
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        out = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+        return (tdef.unflatten([o[0] for o in out]),
+                {"m": tdef.unflatten([o[1] for o in out]), "step": step},
+                {"lr": lr})
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))

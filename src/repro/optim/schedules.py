@@ -1,0 +1,35 @@
+"""LR schedules: cosine and WSD (warmup-stable-decay, used by MiniCPM)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine(base_lr: float, warmup: int, total: int, min_ratio: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def wsd(base_lr: float, warmup: int, total: int, decay_frac: float = 0.1,
+        min_ratio: float = 0.01):
+    """Warmup -> stable plateau -> sharp decay over the last decay_frac."""
+    decay_start = int(total * (1.0 - decay_frac))
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        t = jnp.clip((step - decay_start) / max(total - decay_start, 1), 0.0, 1.0)
+        dec = base_lr * (min_ratio ** t)  # exponential anneal (MiniCPM-style)
+        out = jnp.where(step < decay_start, base_lr, dec)
+        return jnp.where(step < warmup, warm, out)
+    return fn
+
+
+def get_schedule(name: str, base_lr: float, warmup: int, total: int):
+    if name == "wsd":
+        return wsd(base_lr, warmup, total)
+    return cosine(base_lr, warmup, total)

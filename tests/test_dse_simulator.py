@@ -1,0 +1,87 @@
+"""DSE engine vs paper Table 5/Fig 7 + simulator vs Fig 8 (paper-claims
+validation; EXPERIMENTS.md §Paper-claims)."""
+import numpy as np
+import pytest
+
+from repro.configs.gnn import GRAPHSAGE, GCN, DATASETS
+from repro.core.dse import (FPGADSE, TPUDSE, minibatch_shape,
+                            PlatformMetadata)
+from repro.core.simulator import simulate_epoch, scaling_curve, SimConfig
+
+
+def _avg_throughput(dse, n, m, beta=0.8):
+    mbs = [minibatch_shape(GRAPHSAGE, ds) for ds in DATASETS.values()]
+    return float(np.mean([dse.throughput(n, m, mb, beta) for mb in mbs]))
+
+
+def test_table5_utilization_calibration():
+    dse = FPGADSE()
+    u1 = dse.utilization(8, 2048)
+    u2 = dse.utilization(16, 1024)
+    assert abs(u1["dsp"] - 0.90) < 0.02 and abs(u1["lut"] - 0.72) < 0.03
+    assert abs(u2["dsp"] - 0.56) < 0.02 and abs(u2["lut"] - 0.65) < 0.03
+
+
+def test_table5_counterintuitive_choice():
+    """Paper's headline DSE result: (8,2048) out-throughputs (16,1024)
+    because the optimized aggregation shifts the bottleneck to update."""
+    dse = FPGADSE()
+    assert _avg_throughput(dse, 8, 2048) > _avg_throughput(dse, 16, 1024)
+
+
+def test_dse_search_respects_resources():
+    dse = FPGADSE()
+    mb = minibatch_shape(GRAPHSAGE, DATASETS["reddit"])
+    best = dse.search(mb, beta=0.8)
+    assert dse.resources_ok(best["n"], best["m"])
+    assert best["throughput"] > 0
+
+
+def test_tpu_dse_respects_vmem():
+    dse = TPUDSE()
+    mb = minibatch_shape(GRAPHSAGE, DATASETS["ogbn-products"])
+    best = dse.search(mb)
+    assert best["vmem"] <= dse.meta.vmem_bytes
+    assert best["row_block"] % 128 == 0 and best["feat_block"] % 128 == 0
+
+
+def test_fig8_near_linear_then_knee():
+    curve = scaling_curve(GRAPHSAGE, DATASETS["ogbn-products"], beta=0.8,
+                          sim=SimConfig(), max_p=16)
+    sp = {r["p"]: r["speedup"] for r in curve}
+    # near-linear to 12 (paper: "almost linearly up to 16")
+    assert sp[8] > 6.4
+    assert sp[12] > 9.0
+    assert sp[16] > 12.0
+    # host-bandwidth knee: per-iteration time grows once host memory is
+    # shared past 205/16 ~ 12.8 devices (iteration-count quantization makes
+    # raw efficiency noisy, so assert on t_parallel directly)
+    t8 = simulate_epoch(GRAPHSAGE, DATASETS["ogbn-products"], 8, 0.8,
+                        SimConfig(), imbalance=0.0)["t_parallel"]
+    t16 = simulate_epoch(GRAPHSAGE, DATASETS["ogbn-products"], 16, 0.8,
+                         SimConfig(), imbalance=0.0)["t_parallel"]
+    t20 = simulate_epoch(GRAPHSAGE, DATASETS["ogbn-products"], 20, 0.8,
+                         SimConfig(), imbalance=0.0)["t_parallel"]
+    assert t16 >= t8
+    assert t20 > t8  # contention visible well past the knee
+
+
+def test_ablation_ordering_base_wb_wbdc():
+    """Table 7 shape: base < +WB < +WB+DC (with a miss-heavy beta)."""
+    ds = DATASETS["ogbn-products"]
+    kw = dict(imbalance=0.35, seed=1)
+    base = simulate_epoch(GRAPHSAGE, ds, 4, 0.5,
+                          SimConfig(workload_balancing=False,
+                                    host_direct_fetch=False), **kw)
+    wb = simulate_epoch(GRAPHSAGE, ds, 4, 0.5,
+                        SimConfig(workload_balancing=True,
+                                  host_direct_fetch=False), **kw)
+    wbdc = simulate_epoch(GRAPHSAGE, ds, 4, 0.5, SimConfig(), **kw)
+    assert base["nvtps"] < wb["nvtps"] < wbdc["nvtps"]
+
+
+def test_throughput_monotone_in_beta():
+    dse = FPGADSE()
+    mb = minibatch_shape(GCN, DATASETS["reddit"])
+    t = [dse.throughput(8, 2048, mb, b) for b in (0.2, 0.5, 0.8, 1.0)]
+    assert all(a <= b * 1.0001 for a, b in zip(t, t[1:]))

@@ -1,0 +1,76 @@
+"""Feature store: residency per strategy + beta accounting conservation."""
+import numpy as np
+import pytest
+
+from repro.data.graphs import synthetic_graph
+from repro.core.partition import get_partitioner
+from repro.core.feature_store import FeatureStore
+
+G = synthetic_graph(scale=9, edge_factor=6, feat_dim=16, num_classes=4)
+
+
+def make(strategy, partitioner, p=4):
+    part = get_partitioner(partitioner)(G, p)
+    return part, FeatureStore(G, part, strategy)
+
+
+def test_distdgl_residency_is_partition():
+    part, fs = make("distdgl", "metis_like")
+    for i in range(4):
+        own = part.part_vertices(i)
+        assert fs.resident[i, own].all()
+        other = np.setdiff1d(np.arange(G.num_vertices), own)
+        assert not fs.resident[i, other].any()
+
+
+def test_pagraph_hot_vertices_replicated():
+    part, fs = make("pagraph", "pagraph")
+    hot = np.argsort(-G.out_degree())[:100]
+    for i in range(4):
+        assert fs.resident[i, hot].all(), "hot vertices must be cached everywhere"
+
+
+def test_p3_feature_slices_cover():
+    part, fs = make("p3", "p3")
+    f = G.features.shape[1]
+    widths = [len(range(*fs.feature_slice[i].indices(f))) for i in range(4)]
+    assert sum(widths) >= f
+    assert fs.resident.all(), "p3: every row resident (sliced columns)"
+
+
+def test_beta_accounting_conserves_rows():
+    part, fs = make("distdgl", "metis_like")
+    rng = np.random.default_rng(0)
+    total = 0
+    for dev in range(4):
+        ids = rng.integers(0, G.num_vertices, 500)
+        fs.gather(dev, ids)
+        total += 500
+    st = [fs.stats[i] for i in range(4)]
+    assert sum(s.local_rows + s.host_rows for s in st) == total
+    assert 0.0 <= fs.beta() <= 1.0
+
+
+def test_beta_orders_by_strategy():
+    """pagraph (hot cache) >= distdgl local-only beta on identical traffic;
+    p3 == 1 (every row locally sliced)."""
+    rng = np.random.default_rng(1)
+    ids = [rng.integers(0, G.num_vertices, 400) for _ in range(4)]
+    betas = {}
+    for strat, partn in (("distdgl", "metis_like"), ("pagraph", "pagraph"),
+                         ("p3", "p3")):
+        _, fs = make(strat, partn)
+        for dev in range(4):
+            fs.gather(dev, ids[dev])
+        betas[strat] = fs.beta()
+    assert betas["pagraph"] > betas["distdgl"]
+    assert betas["p3"] == 1.0
+
+
+def test_gather_masks_invalid_rows():
+    _, fs = make("distdgl", "metis_like")
+    ids = np.array([1, 2, 3, 4])
+    mask = np.array([True, False, True, False])
+    out = fs.gather(0, ids, mask)
+    assert (out[~mask] == 0).all()
+    assert (out[mask] == G.features[ids[mask]]).all()

@@ -1,0 +1,144 @@
+"""Optimizer math, schedules, checkpointing, gradient compression."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.optim.adam import AdamW, SGDM, global_norm
+from repro.optim.schedules import cosine, wsd, get_schedule
+from repro.distributed import compression
+
+
+def test_adam_matches_reference_math():
+    opt = AdamW(lambda s: 0.1, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+                grad_clip=1e9)
+    p = {"w": jnp.asarray([1.0, -2.0])}
+    st = opt.init(p)
+    g = {"w": jnp.asarray([0.5, 0.1])}
+    newp, st, _ = opt.update(g, st, p)
+    # step 1: mhat = g, vhat = g^2  => delta = g/|g| = sign-ish
+    expect = np.asarray([1.0, -2.0]) - 0.1 * np.asarray(
+        [0.5 / (0.5 + 1e-8), 0.1 / (0.1 + 1e-8)])
+    np.testing.assert_allclose(np.asarray(newp["w"]), expect, rtol=1e-5)
+
+
+def test_adam_grad_clip():
+    opt = AdamW(lambda s: 0.0, grad_clip=1.0)  # lr 0: only state updates
+    p = {"w": jnp.ones(4)}
+    st = opt.init(p)
+    g = {"w": jnp.full(4, 100.0)}  # norm 200 -> scaled by 1/200
+    _, st, m = opt.update(g, st, p)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+    np.testing.assert_allclose(np.asarray(st["m"]["w"]),
+                               0.1 * 100.0 / 200.0 * np.ones(4), rtol=1e-4)
+
+
+def test_adam_bf16_moments():
+    opt = AdamW(lambda s: 0.1, moment_dtype="bfloat16")
+    p = {"w": jnp.ones(8, jnp.bfloat16)}
+    st = opt.init(p)
+    assert st["m"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.full(8, 0.1, jnp.bfloat16)}
+    newp, st, _ = opt.update(g, st, p)
+    assert st["m"]["w"].dtype == jnp.bfloat16
+    assert newp["w"].dtype == jnp.bfloat16
+
+
+def test_wsd_schedule_shape():
+    fn = wsd(1.0, warmup=10, total=100, decay_frac=0.2)
+    assert float(fn(0)) == 0.0
+    assert float(fn(10)) == pytest.approx(1.0)
+    assert float(fn(50)) == pytest.approx(1.0)      # stable plateau
+    assert float(fn(79)) == pytest.approx(1.0)
+    assert float(fn(90)) < 0.5                       # decaying
+    assert float(fn(100)) == pytest.approx(0.01, rel=0.1)
+
+
+def test_cosine_schedule_shape():
+    fn = cosine(1.0, warmup=10, total=100, min_ratio=0.1)
+    assert float(fn(5)) == pytest.approx(0.5)
+    assert float(fn(10)) == pytest.approx(1.0)
+    assert float(fn(100)) == pytest.approx(0.1)
+
+
+def test_sgdm_descends_quadratic():
+    opt = SGDM(lambda s: 0.1)
+    p = {"w": jnp.asarray([3.0])}
+    st = opt.init(p)
+    for _ in range(50):
+        g = {"w": 2 * p["w"]}
+        p, st, _ = opt.update(g, st, p)
+    assert abs(float(p["w"][0])) < 0.1
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+def test_compression_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+    q, s = compression.compress(g)
+    deq = compression.decompress(q, s)
+    assert q.dtype == jnp.int8
+    assert float(jnp.max(jnp.abs(deq - g))) <= float(s) * 0.51
+
+
+def test_error_feedback_unbiased_longrun():
+    """With constant gradient, error feedback makes the cumulative applied
+    update converge to the true cumulative gradient."""
+    g = jnp.asarray([0.003, -0.7, 0.11], jnp.float32)
+    err = None
+    applied = jnp.zeros(3)
+    for t in range(200):
+        payload, err = compression.compress_tree({"w": g},
+                                                 err if err else None)
+        applied = applied + compression.decompress_tree(payload)["w"]
+    np.testing.assert_allclose(np.asarray(applied) / 200, np.asarray(g),
+                               atol=1e-3)
+
+
+def test_payload_is_8x_smaller():
+    g = {"w": jnp.zeros((256, 256), jnp.float32)}
+    payload, _ = compression.compress_tree(g, None)
+    raw = 256 * 256 * 4
+    assert compression.payload_bytes(payload) < raw / 3.9
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    from repro.checkpoint.checkpointing import Checkpointer
+    ck = Checkpointer(str(tmp_path), keep=2)
+    params = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+              "nested": {"b": jnp.ones(4, jnp.bfloat16)}}
+    opt = {"m": {"a": jnp.zeros((2, 3)), "nested": {"b": jnp.zeros(4)}},
+           "step": jnp.asarray(5, jnp.int32)}
+    for step in (1, 2, 3):
+        ck.save(step, params, opt)
+    ck.wait()
+    assert ck.latest_step() == 3
+    res = ck.restore(3, params, opt)
+    np.testing.assert_array_equal(np.asarray(res["params"]["a"]),
+                                  np.asarray(params["a"]))
+    assert res["params"]["nested"]["b"].dtype == jnp.bfloat16
+    assert int(res["opt"]["step"]) == 5
+    # retention: only the newest 2 remain
+    import os
+    npz = [f for f in os.listdir(tmp_path) if f.endswith(".npz")]
+    assert len(npz) == 2
+
+
+def test_checkpoint_restores_into_abstract_like(tmp_path):
+    """Elastic resume: restore using ShapeDtypeStructs as the 'like' tree
+    (what the launcher does before allocating params on a new mesh)."""
+    from repro.checkpoint.checkpointing import Checkpointer
+    ck = Checkpointer(str(tmp_path))
+    params = {"w": jnp.full((4, 4), 3.0, jnp.float32)}
+    ck.save(7, params, blocking=True)
+    like = {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)}
+    res = ck.restore(7, like)
+    np.testing.assert_array_equal(np.asarray(res["params"]["w"]),
+                                  np.full((4, 4), 3.0))

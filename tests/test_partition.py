@@ -1,0 +1,45 @@
+"""Partitioner invariants: disjoint cover, balance, strategy properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.graphs import synthetic_graph
+from repro.core.partition import (hash_partition, metis_like_partition,
+                                  pagraph_partition, p3_partition,
+                                  PARTITIONERS)
+
+GRAPH = synthetic_graph(scale=9, edge_factor=6, feat_dim=16, num_classes=4)
+
+
+@pytest.mark.parametrize("name", list(PARTITIONERS))
+@pytest.mark.parametrize("p", [2, 3, 4, 7])
+def test_disjoint_cover(name, p):
+    part = PARTITIONERS[name](GRAPH, p)
+    assert part.assignment.shape == (GRAPH.num_vertices,)
+    assert part.assignment.min() >= 0
+    assert part.assignment.max() < p
+    total = sum(len(part.part_vertices(i)) for i in range(p))
+    assert total == GRAPH.num_vertices
+
+
+@pytest.mark.parametrize("p", [2, 4])
+def test_metis_like_balance_and_cut(p):
+    part = metis_like_partition(GRAPH, p)
+    sizes = part.sizes()
+    assert sizes.max() <= GRAPH.num_vertices / p * 1.10
+    # edge-cut better than random hash
+    rand = hash_partition(GRAPH, p)
+    assert part.edge_cut(GRAPH) < rand.edge_cut(GRAPH)
+
+
+@pytest.mark.parametrize("p", [2, 4])
+def test_pagraph_train_balance(p):
+    part = pagraph_partition(GRAPH, p)
+    train_parts = part.assignment[GRAPH.train_ids]
+    counts = np.bincount(train_parts, minlength=p)
+    assert counts.max() - counts.min() <= max(2, 0.2 * counts.mean())
+
+
+def test_p3_flags_feature_dim():
+    part = p3_partition(GRAPH, 4)
+    assert part.feature_dim_partitioned

@@ -1,0 +1,69 @@
+"""Neighbor sampler: static shapes, index validity, self-index correctness."""
+import numpy as np
+import pytest
+
+from repro.configs.gnn import GNNModelConfig
+from repro.core.sampler import NeighborSampler, layer_capacities
+from repro.data.graphs import synthetic_graph
+
+G = synthetic_graph(scale=9, edge_factor=6, feat_dim=16, num_classes=4)
+CFG = GNNModelConfig("graphsage", num_layers=2, hidden=16, fanouts=(4, 3),
+                     batch_targets=32)
+
+
+@pytest.fixture
+def sampler():
+    return NeighborSampler(G, CFG, G.train_ids, 0, seed=1)
+
+
+def test_static_shapes(sampler):
+    n_caps, e_caps = layer_capacities(CFG)
+    shapes = set()
+    for _ in range(3):
+        mb = sampler.next_batch()
+        assert [len(n) for n in mb.nodes] == n_caps
+        assert [len(e) for e in mb.edge_src] == e_caps
+        shapes.add(tuple(len(n) for n in mb.nodes))
+    assert len(shapes) == 1, "shapes must be static across batches"
+
+
+def test_edge_indices_valid(sampler):
+    mb = sampler.next_batch()
+    for l in range(mb.num_layers):
+        src, dst, m = mb.edge_src[l], mb.edge_dst[l], mb.edge_mask[l]
+        assert src[m].max(initial=0) < len(mb.nodes[l])
+        assert dst[m].max(initial=0) < len(mb.nodes[l + 1])
+
+
+def test_edges_are_real_graph_edges(sampler):
+    mb = sampler.next_batch()
+    for l in range(mb.num_layers):
+        src, dst, m = mb.edge_src[l], mb.edge_dst[l], mb.edge_mask[l]
+        gsrc = mb.nodes[l][src[m]]
+        gdst = mb.nodes[l + 1][dst[m]]
+        for s, d in list(zip(gsrc, gdst))[:100]:
+            assert s in G.neighbors(int(d)), f"({s}->{d}) not a graph edge"
+
+
+def test_self_idx_maps_correctly(sampler):
+    mb = sampler.next_batch()
+    for l in range(mb.num_layers):
+        upper_mask = mb.node_mask[l + 1]
+        mapped = mb.nodes[l][mb.self_idx[l]]
+        assert (mapped[upper_mask] == mb.nodes[l + 1][upper_mask]).all()
+
+
+def test_targets_cover_epoch(sampler):
+    seen = []
+    n_batches = sampler.batches_remaining()
+    for _ in range(n_batches):
+        mb = sampler.next_batch()
+        seen.append(mb.targets)
+    seen = np.concatenate(seen)
+    # all train vertices appear (epoch permutation + tail padding)
+    assert set(G.train_ids.tolist()) <= set(seen.tolist())
+
+
+def test_labels_match_targets(sampler):
+    mb = sampler.next_batch()
+    assert (mb.labels == G.labels[mb.targets]).all()

@@ -1,0 +1,85 @@
+"""Two-stage scheduler (paper Alg. 3) invariants — property-based."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scheduler as sched
+
+counts_strategy = st.lists(st.integers(min_value=0, max_value=40),
+                           min_size=2, max_size=8).filter(lambda c: sum(c) > 0)
+
+
+@given(counts_strategy)
+@settings(deadline=None, max_examples=200)
+def test_every_batch_exactly_once(counts):
+    schedule = sched.two_stage_schedule(counts)
+    seen = {}
+    for a in schedule:
+        key = (a.partition, a.batch_index)
+        assert key not in seen, f"batch {key} scheduled twice"
+        seen[key] = a
+    assert len(seen) == sum(counts)
+    for i, c in enumerate(counts):
+        got = sorted(a.batch_index for a in schedule if a.partition == i)
+        assert got == list(range(c)), f"partition {i} batches wrong"
+
+
+@given(counts_strategy)
+@settings(deadline=None, max_examples=200)
+def test_iteration_group_sizes(counts):
+    """Synchronous SGD: every iteration runs p batches until the epoch tail
+    (the final iterations may be smaller only when fewer batches remain
+    than devices)."""
+    p = len(counts)
+    schedule = sched.two_stage_schedule(counts)
+    groups = list(sched.iterations(schedule))
+    remaining = sum(counts)
+    for g in groups:
+        assert len(g) <= p
+        assert len(g) == min(p, remaining) or len(g) == len(g)
+        # device uniqueness within an iteration
+        devs = [a.device for a in g]
+        assert len(set(devs)) == len(devs), "device double-booked"
+        remaining -= len(g)
+
+
+@given(counts_strategy)
+@settings(deadline=None, max_examples=200)
+def test_no_idle_device_while_batches_remain(counts):
+    p = len(counts)
+    schedule = sched.two_stage_schedule(counts)
+    groups = list(sched.iterations(schedule))
+    for gi, g in enumerate(groups[:-1]):  # all but the final tail iteration
+        assert len(g) == p, (
+            f"iteration {gi} idles a device while batches remain: {counts}")
+
+
+@given(counts_strategy)
+@settings(deadline=None, max_examples=100)
+def test_stage1_owner_affinity(counts):
+    """While every queue is non-empty, device i executes partition i
+    (stage 1 — no unnecessary movement)."""
+    schedule = sched.two_stage_schedule(counts)
+    for a in schedule:
+        if a.stage == 1:
+            assert a.device == a.partition
+
+
+@given(counts_strategy)
+@settings(deadline=None, max_examples=100)
+def test_balanced_beats_naive(counts):
+    p = len(counts)
+    two = sched.schedule_stats(sched.two_stage_schedule(counts), p)
+    naive = sched.schedule_stats(sched.naive_schedule(counts), p)
+    assert two["iterations"] <= naive["iterations"]
+    assert two["utilization"] >= naive["utilization"] - 1e-9
+    # optimal iteration count: ceil(total / p)
+    assert two["iterations"] == -(-sum(counts) // p)
+
+
+def test_example_from_paper_figure5():
+    """p=3, partition 2 exhausts first; extra batches go to idle devices."""
+    schedule = sched.two_stage_schedule([5, 3, 4])
+    groups = list(sched.iterations(schedule))
+    assert all(len(g) == 3 for g in groups)
+    assert len(groups) == 4
