@@ -1,0 +1,11 @@
+PYTHONPATH := src
+
+.PHONY: verify test bench
+
+test:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only pipeline
+
+verify: test bench

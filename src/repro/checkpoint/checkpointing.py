@@ -35,6 +35,8 @@ class Checkpointer:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._pending: list[threading.Thread] = []
+        self._latest_lock = threading.Lock()
+        self._latest_step = -1
 
     # -- save -----------------------------------------------------------------
     def save(self, step: int, params, opt_state=None, extra: Optional[dict] = None,
@@ -65,10 +67,17 @@ class Checkpointer:
             os.replace(path + ".tmp.npz", path + ".npz")
             with open(path + ".json", "w") as f:
                 json.dump(meta, f)
-            latest = os.path.join(self.dir, "latest.json")
-            with open(latest + ".tmp", "w") as f:
-                json.dump({"step": int(step)}, f)
-            os.replace(latest + ".tmp", latest)
+            # concurrent async saves: per-step tmp name (a shared tmp path
+            # lets one thread's os.replace erase another's) and a monotonic
+            # guard so a slow older save never rolls "latest" backwards
+            with self._latest_lock:
+                if int(step) >= self._latest_step:
+                    self._latest_step = int(step)
+                    latest = os.path.join(self.dir, "latest.json")
+                    tmp = f"{latest}.tmp{int(step)}"
+                    with open(tmp, "w") as f:
+                        json.dump({"step": int(step)}, f)
+                    os.replace(tmp, latest)
             self._gc()
 
         t = threading.Thread(target=write, daemon=True)

@@ -19,6 +19,13 @@ class GNNModelConfig:
     hidden: int = 128
     fanouts: Tuple[int, ...] = (25, 10)  # neighbor sampling sizes per layer
     batch_targets: int = 1024            # |V^t| per mini-batch
+    # Which aggregation datapath the forward uses (gnn/models.py):
+    #   "reference" — jnp segment_sum scatter-gather (runs everywhere)
+    #   "pallas"    — block-CSR SpMM kernel (kernels/aggregate.py); the
+    #                 layout is precomputed host-side by the trainer's
+    #                 pipeline stage. GAT always uses the reference path
+    #                 (edge softmax weights are device-computed).
+    aggregate_backend: str = "reference"
 
 
 @dataclass(frozen=True)

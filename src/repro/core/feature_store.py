@@ -104,8 +104,12 @@ class FeatureStore:
         st.local_rows += int(hit.sum())
         st.host_rows += int(miss.sum())
         st.local_bytes += int(hit.sum()) * width * 4
-        st.host_bytes += int(miss.sum()) * f * 4
-        out = self.g.features[ids].copy()
+        st.host_bytes += int(miss.sum()) * width * 4
+        if width == f:
+            out = self.g.features[ids].copy()
+        else:  # P3: local slice only, zero-widened to full feature dim
+            out = np.zeros((len(ids), f), np.float32)
+            out[:, sl] = self.g.features[ids, sl]
         out[~valid] = 0.0
         return out
 
@@ -113,6 +117,27 @@ class FeatureStore:
                         ) -> np.ndarray:
         """P3: the local feature-dimension slice for these rows."""
         return self.g.features[np.asarray(vertex_ids)][:, self.feature_slice[device]]
+
+    def gather_p3_full(self, vertex_ids: np.ndarray,
+                       mask: Optional[np.ndarray] = None) -> np.ndarray:
+        """P3 layer-1 all-to-all (paper Listing 3): reconstruct full feature
+        rows by writing each device's feature-dimension slice into ONE
+        output buffer. Every slice read is a local (HBM) read on its
+        contributing device and is accounted as such (beta stays 1)."""
+        ids = np.asarray(vertex_ids)
+        valid = np.ones(len(ids), bool) if mask is None else np.asarray(mask)
+        f = self.g.features.shape[1]
+        out = np.zeros((len(ids), f), np.float32)
+        n = int(valid.sum())
+        for d in range(self.p):
+            sl = self.feature_slice[d]
+            width = len(range(*sl.indices(f)))
+            out[:, sl] = self.g.features[ids, sl]
+            st = self.stats[d]
+            st.local_rows += n
+            st.local_bytes += n * width * 4
+        out[~valid] = 0.0
+        return out
 
     def beta(self, device: Optional[int] = None) -> float:
         if device is not None:

@@ -2,18 +2,23 @@
 
 Per synchronous iteration (paper Fig. 2 / Alg. 2 + gradient sync):
   1. the two-stage scheduler (scheduler.py) picks p mini-batches;
-  2. the host gathers each batch's feature rows through the FeatureStore
-     (cache hit = device HBM, miss = host fetch — DC optimization, with beta
-     accounting);
+  2. the host PIPELINE (core/pipeline.py) samples each batch and gathers its
+     feature rows through the FeatureStore (cache hit = device HBM, miss =
+     host fetch — DC optimization, with beta accounting), running one
+     iteration AHEAD of the device so host work overlaps device compute
+     (paper Eq. 5-6). With ``aggregate_backend="pallas"`` the pipeline stage
+     also precomputes each layer's block-CSR adjacency (forward + transpose)
+     for the kernel datapath;
   3. the p batches are stacked on a leading device axis and executed as ONE
-     jit'd step: vmap over the device axis + mean loss => gradients are the
-     mean over the p batches (synchronous SGD). Under a mesh the device axis
-     is sharded over "data", so XLA emits exactly the gradient all-reduce;
+     jit'd step: vmap over the device axis + weight-averaged loss =>
+     gradients are the mean over the REAL batches (idle-device fill batches
+     carry weight 0 and contribute nothing). Under a mesh the device axis is
+     sharded over "data", so XLA emits exactly the gradient all-reduce;
   4. one optimizer update applies everywhere (weights stay replicated).
 
-P3 runs layer 1 in feature-dimension-parallel form (each device contributes
-a partial product from its feature slice; the cross-device reduction is the
-paper's Listing-3 all-to-all).
+P3 runs layer 1 in feature-dimension-parallel form: each device's store
+serves only its feature-dimension slice (zero-widened), and the gather sums
+the p slices — the paper's Listing-3 all-to-all reduction.
 
 Fault tolerance: Checkpointer (async, device-count independent) + resumable
 scheduler state. Optional int8+error-feedback gradient compression
@@ -21,7 +26,9 @@ scheduler state. Optional int8+error-feedback gradient compression
 """
 from __future__ import annotations
 
+import dataclasses
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
@@ -33,9 +40,11 @@ from repro.configs.gnn import GNNModelConfig
 from repro.data.graphs import Graph
 from repro.core.partition import Partition, get_partitioner
 from repro.core.feature_store import FeatureStore
-from repro.core.sampler import NeighborSampler, MiniBatch
+from repro.core.pipeline import PipelineStats, PrefetchExecutor
+from repro.core.sampler import NeighborSampler, MiniBatch, layer_capacities
 from repro.core import scheduler as sched
 from repro.gnn import models as gnn_models
+from repro.kernels.aggregate import BLK, build_block_csr_pair
 from repro.nn.param import materialize
 from repro.optim.adam import AdamW, SGDM
 from repro.optim.schedules import get_schedule
@@ -61,6 +70,9 @@ def batch_to_arrays(mb: MiniBatch, feats: np.ndarray) -> dict:
         "node_mask": [np.asarray(a) for a in mb.node_mask],
         "self_idx": [np.asarray(a) for a in mb.self_idx],
         "labels": np.asarray(mb.labels, np.int32),
+        # loss weight of this batch in the synchronous step; idle-device
+        # fill batches get 0.0 so they contribute zero loss AND zero gradient
+        "weight": np.float32(1.0),
     }
 
 
@@ -81,8 +93,19 @@ class SyncGNNTrainer:
     grad_compression: bool = False
     mesh: Optional[jax.sharding.Mesh] = None
     optimizer_name: str = "adam"
+    pipeline: bool = True                  # overlap host stages w/ device step
+    prefetch_depth: int = 2
+    aggregate_backend: Optional[str] = None  # overrides model_cfg when set
 
     def __post_init__(self):
+        if self.aggregate_backend is not None:
+            self.model_cfg = dataclasses.replace(
+                self.model_cfg, aggregate_backend=self.aggregate_backend)
+        if self.model_cfg.aggregate_backend not in ("reference", "pallas"):
+            raise ValueError(
+                f"unknown aggregate_backend "
+                f"{self.model_cfg.aggregate_backend!r}; "
+                f"expected 'reference' or 'pallas'")
         part_name, store_name = ALGORITHMS[self.algorithm]
         self.partition: Partition = get_partitioner(part_name)(
             self.graph, self.num_devices, self.seed)
@@ -103,6 +126,35 @@ class SyncGNNTrainer:
         self._err = None  # compression error feedback
         self.step_no = 0
         self._jit_step = jax.jit(self._make_step())
+        # static block-CSR capacities per layer (pallas aggregate backend):
+        # one shape per config => one compiled executable across the epoch.
+        # A dst block holds <= BLK * fanout edges, so it can touch at most
+        # that many distinct src blocks; the transpose has no fanout bound
+        # on its rows (a source may feed arbitrarily many destinations).
+        self._blk_caps = []
+        if (self.model_cfg.aggregate_backend == "pallas"
+                and gnn_models.AGG_KIND[self.model_cfg.name] is not None):
+            n_caps, _ = layer_capacities(self.model_cfg)
+            fans = self.model_cfg.fanouts[::-1]  # layer order matches n_caps
+            blk_bytes = 0
+            for l in range(self.model_cfg.num_layers):
+                n_srcb = (n_caps[l] + BLK - 1) // BLK
+                n_dstb = (n_caps[l + 1] + BLK - 1) // BLK
+                max_blk = min(n_srcb, BLK * fans[l])
+                max_blk_t = n_dstb
+                self._blk_caps.append(
+                    (n_caps[l], n_caps[l + 1], max_blk, max_blk_t))
+                blk_bytes += ((n_dstb * max_blk + n_srcb * max_blk_t)
+                              * BLK * BLK * 4)
+            budget = 4 << 30  # dense-block staging memory per device batch
+            if blk_bytes > budget:
+                raise ValueError(
+                    f"aggregate_backend='pallas' would stage "
+                    f"{blk_bytes / 2**30:.1f} GiB of block-CSR tiles per "
+                    f"batch (budget {budget / 2**30:.0f} GiB) at "
+                    f"batch_targets={self.model_cfg.batch_targets}, "
+                    f"fanouts={self.model_cfg.fanouts}. Reduce the batch "
+                    f"size / fanouts or use aggregate_backend='reference'.")
 
     # -- setup helpers ---------------------------------------------------------
     def _train_ids(self, i: int) -> np.ndarray:
@@ -119,10 +171,16 @@ class SyncGNNTrainer:
             return gnn_models.loss_fn(cfg, params, batch)
 
         def step(params, opt_state, stacked, err):
+            # per-batch loss weights: real batches 1.0, idle-device fill
+            # batches 0.0 — the weighted mean keeps sync-SGD semantics equal
+            # to averaging over only the REAL batches of the iteration
+            w = stacked["weight"].astype(jnp.float32)
+            w_sum = jnp.maximum(w.sum(), 1.0)
+
             def mean_loss(p):
                 losses, metrics = jax.vmap(
                     lambda b: per_device_loss(p, b))(stacked)
-                return jnp.mean(losses), metrics
+                return (losses * w).sum() / w_sum, metrics
             (loss, metrics), grads = jax.value_and_grad(
                 mean_loss, has_aux=True)(params)
             if use_comp:
@@ -130,7 +188,7 @@ class SyncGNNTrainer:
                 grads = compression.decompress_tree(payload)
             new_p, new_s, om = opt.update(grads, opt_state, params)
             out_metrics = {"loss": loss,
-                           "acc": jnp.mean(metrics["acc"]), **om}
+                           "acc": (metrics["acc"] * w).sum() / w_sum, **om}
             return new_p, new_s, err, out_metrics
 
         return step
@@ -142,17 +200,70 @@ class SyncGNNTrainer:
               else sched.naive_schedule)
         return fn(counts)
 
-    def run_iteration(self, assignments: List[sched.Assignment]) -> dict:
+    # -- host pipeline stages (run in the prefetch worker) ----------------------
+    def _gather_features(self, device: int, mb: MiniBatch) -> np.ndarray:
+        if self.algorithm == "p3":
+            # Listing-3 all-to-all: every device contributes its feature-
+            # dimension slice into one buffer, reconstituting the full rows
+            return self.store.gather_p3_full(mb.nodes[0], mb.node_mask[0])
+        return self.store.gather(device, mb.nodes[0], mb.node_mask[0])
+
+    def _block_csr_arrays(self, mb: MiniBatch) -> dict:
+        """Precompute per-layer block-CSR adjacency (fwd + transpose) for the
+        Pallas aggregate datapath. Mean semantics are baked into the block
+        values (1/deg per edge); shapes are pinned by self._blk_caps."""
+        kind = gnn_models.AGG_KIND[self.model_cfg.name]
+        blocks, cols, blocks_t, cols_t = [], [], [], []
+        for l, (n_src, n_dst, max_blk, max_blk_t) in enumerate(self._blk_caps):
+            src, dst = mb.edge_src[l], mb.edge_dst[l]
+            mask = mb.edge_mask[l]
+            vals = None
+            if kind == "mean":
+                deg = np.bincount(dst[mask], minlength=n_dst)
+                vals = 1.0 / np.maximum(deg[dst], 1.0)
+            b, c, bt, ct, _ = build_block_csr_pair(
+                src, dst, mask, n_src, n_dst, vals,
+                max_blk=max_blk, max_blk_t=max_blk_t)
+            blocks.append(b)
+            cols.append(c)
+            blocks_t.append(bt)
+            cols_t.append(ct)
+        return {"agg_blocks": blocks, "agg_cols": cols,
+                "agg_blocks_t": blocks_t, "agg_cols_t": cols_t}
+
+    def _prepare_group(self, assignments: List[sched.Assignment]) -> dict:
+        """Stages 1+2 (sample + gather [+ block-CSR build]) for one
+        synchronous iteration — pure host/numpy work, safe to run in the
+        prefetch worker thread while the device executes iteration t-1."""
+        use_kernel = (self.model_cfg.aggregate_backend == "pallas"
+                      and gnn_models.AGG_KIND[self.model_cfg.name] is not None)
         batches = []
         vertices = 0
         for a in assignments:
             mb = self.samplers[a.partition].next_batch()
             vertices += mb.vertices_traversed()
-            feats = self.store.gather(a.device, mb.nodes[0], mb.node_mask[0])
-            batches.append(batch_to_arrays(mb, feats))
+            arrs = batch_to_arrays(mb, self._gather_features(a.device, mb))
+            if use_kernel:
+                arrs.update(self._block_csr_arrays(mb))
+            batches.append(arrs)
         while len(batches) < self.num_devices:  # idle device: zero-weight dup
-            batches.append(batches[-1])
-        stacked = stack_batches(batches)
+            fill = dict(batches[-1])
+            fill["weight"] = np.float32(0.0)
+            batches.append(fill)
+        return {"stacked": stack_batches(batches), "vertices": vertices,
+                "n_batches": len(assignments)}
+
+    # -- stage 3: the jit'd device step -----------------------------------------
+    def _execute(self, prepared: dict, sync: bool = True) -> dict:
+        """Dispatch the jit'd step. ``sync=True`` materializes the metrics
+        (blocks until the device finishes — strict per-iteration
+        semantics). ``sync=False`` returns the raw async metric arrays so
+        the epoch loop keeps dispatching while the device computes: the
+        host never idles waiting on a result it only reads at epoch end,
+        which is the second half of the Eq. 5-6 overlap (the prefetch
+        thread being the first). Outstanding steps are bounded by the
+        prefetch queue depth."""
+        stacked = prepared["stacked"]
         if self.mesh is not None:
             stacked = jax.tree.map(
                 lambda x: jax.device_put(
@@ -163,23 +274,45 @@ class SyncGNNTrainer:
         self.params, self.opt_state, self._err, metrics = self._jit_step(
             self.params, self.opt_state, stacked, self._err)
         self.step_no += 1
+        if not sync:
+            return metrics
         out = {k: float(v) for k, v in metrics.items()}
-        out["vertices_traversed"] = vertices
+        out["vertices_traversed"] = prepared["vertices"]
         return out
+
+    def run_iteration(self, assignments: List[sched.Assignment]) -> dict:
+        return self._execute(self._prepare_group(assignments))
 
     def run_epoch(self) -> dict:
         for s in self.samplers:
             s.reset_epoch()
         schedule = self.epoch_schedule()
+        groups = list(sched.iterations(schedule))
         t0 = time.time()
         metrics: Dict[str, float] = {}
         vertices = 0
         n_batches = 0
-        for group in sched.iterations(schedule):
-            m = self.run_iteration(group)
-            vertices += m.pop("vertices_traversed")
-            metrics = m
-            n_batches += len(group)
+        pstats = PipelineStats()
+        if self.pipeline:
+            prepared_iter = PrefetchExecutor(
+                self._prepare_group, self.prefetch_depth, pstats).run(groups)
+            # backpressure: at most prefetch_depth dispatched-but-unfinished
+            # steps, else a fast host would pile up live input buffers
+            inflight: deque = deque()
+            for prepared in prepared_iter:
+                inflight.append(self._execute(prepared, sync=False))
+                if len(inflight) > self.prefetch_depth:
+                    jax.block_until_ready(inflight.popleft())
+                vertices += prepared["vertices"]
+                n_batches += prepared["n_batches"]
+            if inflight:  # one final sync per epoch, not per iteration
+                metrics = {k: float(v) for k, v in inflight[-1].items()}
+        else:
+            for prepared in (self._prepare_group(g) for g in groups):
+                m = self._execute(prepared)
+                vertices += m.pop("vertices_traversed")
+                metrics = m
+                n_batches += prepared["n_batches"]
         wall = time.time() - t0
         stats = sched.schedule_stats(schedule, self.num_devices)
         return {**metrics, "epoch_time_s": wall, "batches": n_batches,
@@ -187,7 +320,10 @@ class SyncGNNTrainer:
                 "utilization": stats["utilization"],
                 "vertices_traversed": vertices,
                 "nvtps": vertices / wall if wall > 0 else 0.0,
-                "beta": self.store.beta()}
+                "beta": self.store.beta(),
+                "pipeline": self.pipeline,
+                "host_produce_s": pstats.produce_s,
+                "host_wait_s": pstats.wait_s}
 
     def train(self, epochs: int = 1) -> List[dict]:
         return [self.run_epoch() for _ in range(epochs)]

@@ -47,6 +47,79 @@ class Graph:
         return self.indices[self.indptr[v]:self.indptr[v + 1]]
 
 
+def sample_in_neighbors(indptr: np.ndarray, indices: np.ndarray,
+                        frontier: np.ndarray, fanout: int,
+                        rng: np.random.Generator
+                        ) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized fanout-bounded in-neighbor draw over CSR arrays.
+
+    The sampler's hot loop (paper §4.2: sampling is host work and must keep
+    up with the accelerators, Eq. 5). Degree-bucketed so no Python-level
+    per-vertex loop runs:
+
+      * low-degree bucket (deg <= fanout): every in-edge is kept, gathered
+        with one repeat/arange offset expansion;
+      * high-degree bucket: Floyd's sampling, vectorized across vertices —
+        one ``rng.random`` matrix drives ``fanout`` lockstep rounds, each a
+        scaled draw plus a duplicate-check against the slots already
+        chosen. Every high-degree destination gets EXACTLY ``fanout``
+        distinct uniform in-neighbors (same semantics as the per-vertex
+        ``rng.choice(..., replace=False)`` this replaces).
+
+    Returns (src_global int32, dst_local int32) sorted by (dst, src);
+    ``dst_local`` indexes into ``frontier``. RNG calls depend only on the
+    frontier content, so a fixed seed gives a fixed epoch regardless of
+    which thread runs the sampling stage.
+    """
+    frontier = np.asarray(frontier)
+    start = indptr[frontier]
+    deg = indptr[frontier.astype(np.int64) + 1] - start
+    local = np.arange(len(frontier), dtype=np.int64)
+
+    small = deg <= fanout
+    cnt = deg[small]
+    total = int(cnt.sum())
+    if total:
+        cum = np.concatenate([[0], np.cumsum(cnt)[:-1]])
+        offs = np.repeat(start[small] - cum, cnt) + np.arange(total)
+        src_s = indices[offs].astype(np.int64)
+        dst_s = np.repeat(local[small], cnt)
+    else:
+        src_s = np.empty(0, np.int64)
+        dst_s = np.empty(0, np.int64)
+
+    big = ~small
+    n_big = int(big.sum())
+    if n_big:
+        # Floyd's algorithm, rows in lockstep: round s considers edge index
+        # i = deg-fanout+s per row; draw t ~ U[0, i]; keep t unless an
+        # earlier round already chose it, in which case keep i (which no
+        # earlier round can hold). Yields fanout DISTINCT offsets per row.
+        # One generator call covers all rounds (u scaled per-row below).
+        deg_b = deg[big]
+        u = rng.random((n_big, fanout))
+        chosen = np.empty((n_big, fanout), np.int64)
+        for s in range(fanout):
+            i_row = deg_b - fanout + s
+            t = (u[:, s] * (i_row + 1)).astype(np.int64)
+            if s:
+                dup = (chosen[:, :s] == t[:, None]).any(axis=1)
+                t = np.where(dup, i_row, t)
+            chosen[:, s] = t
+        offs = (start[big][:, None] + chosen).ravel()
+        src_b = indices[offs].astype(np.int64)
+        dst_b = np.repeat(local[big], fanout)
+    else:
+        src_b = np.empty(0, np.int64)
+        dst_b = np.empty(0, np.int64)
+
+    src = np.concatenate([src_s, src_b])
+    dst = np.concatenate([dst_s, dst_b])
+    m = int(src.max()) + 1 if len(src) else 1  # key base covers all src ids
+    key = np.unique(dst * m + src)  # canonical (dst, src) order
+    return ((key % m).astype(np.int32), (key // m).astype(np.int32))
+
+
 def rmat_edges(scale: int, edge_factor: int, rng: np.random.Generator,
                a: float = 0.57, b: float = 0.19, c: float = 0.19) -> np.ndarray:
     """Recursive-matrix (RMAT/Graph500) edge generator -> (E, 2) int array."""

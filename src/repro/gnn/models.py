@@ -18,7 +18,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.gnn import GNNModelConfig
+from repro.kernels.aggregate import BLK, aggregate_blockcsr_vjp
 from repro.nn.param import PSpec
+
+
+# Aggregation semantics per model. "mean"/"sum" models can run through the
+# block-CSR kernel (the mean's 1/deg weights are baked into the block values
+# host-side); GAT's attention weights are device-computed, so it always uses
+# the reference edge-list path.
+AGG_KIND = {"graphsage": "mean", "gcn": "mean", "gin": "sum", "gat": None}
 
 
 # ---------------------------------------------------------------------------
@@ -90,18 +98,44 @@ def param_spec(cfg: GNNModelConfig, f_in: int, n_classes: int):
 # Forward
 # ---------------------------------------------------------------------------
 
+def _blockcsr_aggregate(batch, l: int, h: jax.Array, n_dst: int) -> jax.Array:
+    """Layer-l aggregation through the Pallas block-CSR SpMM.
+
+    The pipeline stage precomputed A (and A^T for the VJP) with the model's
+    semantics baked into the block values (1/deg for mean, 1 for sum), so a
+    single masked SpMM reproduces ``aggregate`` exactly."""
+    blocks_t = batch["agg_blocks_t"][l]
+    n_src_pad = blocks_t.shape[0] * BLK
+    h32 = h.astype(jnp.float32)
+    h_pad = jnp.pad(h32, ((0, n_src_pad - h32.shape[0]), (0, 0)))
+    out = aggregate_blockcsr_vjp(
+        batch["agg_blocks"][l], batch["agg_cols"][l],
+        blocks_t, batch["agg_cols_t"][l], h_pad,
+        interpret=jax.default_backend() != "tpu")
+    return out[:n_dst].astype(h.dtype)
+
+
 def _layer(cfg: GNNModelConfig, p, h, batch, l: int, n_dst: int):
     src, dst = batch["edge_src"][l], batch["edge_dst"][l]
     emask = batch["edge_mask"][l]
     h_self = h[batch["self_idx"][l]]
+    use_kernel = (cfg.aggregate_backend == "pallas"
+                  and AGG_KIND.get(cfg.name) is not None
+                  and "agg_blocks" in batch)
+
+    def _agg(kind: str) -> jax.Array:
+        if use_kernel:
+            return _blockcsr_aggregate(batch, l, h, n_dst)
+        return aggregate(h, src, dst, emask, n_dst, kind)
+
     if cfg.name == "graphsage":
-        agg = aggregate(h, src, dst, emask, n_dst, "mean")
+        agg = _agg("mean")
         out = h_self @ p["w_self"] + agg @ p["w_neigh"] + p["b"]
     elif cfg.name == "gcn":
-        agg = aggregate(h, src, dst, emask, n_dst, "mean")
+        agg = _agg("mean")
         out = (agg + h_self) @ p["w"] * 0.5 + p["b"]
     elif cfg.name == "gin":
-        agg = aggregate(h, src, dst, emask, n_dst, "sum")
+        agg = _agg("sum")
         z = (1.0 + p["eps"]) * h_self + agg
         out = jax.nn.relu(z @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
     elif cfg.name == "gat":

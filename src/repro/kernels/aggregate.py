@@ -33,11 +33,17 @@ BLK = 128
 
 def build_block_csr(edge_src: np.ndarray, edge_dst: np.ndarray,
                     edge_mask: np.ndarray, n_src: int, n_dst: int,
-                    values: np.ndarray | None = None):
+                    values: np.ndarray | None = None,
+                    max_blk: int | None = None):
     """Edge list -> padded block-CSR (numpy, host-side preprocessing).
 
     Returns (blocks (Nd, max_blk, BLK, BLK) f32, cols (Nd, max_blk) i32,
-    padded src row count). A[dst, src] = value (default 1)."""
+    padded src row count). A[dst, src] = value (default 1).
+
+    ``max_blk`` pins the nonzero-blocks-per-row capacity to a STATIC value so
+    every mini-batch of a fixed sampler config produces identically-shaped
+    arrays (one compiled executable, no per-batch re-jit). Unused slots keep
+    all-zero tiles pointing at source block 0 and contribute nothing."""
     n_srcb = (n_src + BLK - 1) // BLK
     n_dstb = (n_dst + BLK - 1) // BLK
     src = np.asarray(edge_src)[np.asarray(edge_mask)]
@@ -51,19 +57,42 @@ def build_block_csr(edge_src: np.ndarray, edge_dst: np.ndarray,
     blk_dst = (uniq // n_srcb).astype(np.int32)
     blk_src = (uniq % n_srcb).astype(np.int32)
     counts = np.bincount(blk_dst, minlength=n_dstb)
-    max_blk = max(1, int(counts.max()))
+    need = max(1, int(counts.max()) if len(uniq) else 0)
+    if max_blk is None:
+        max_blk = need
+    elif need > max_blk:
+        raise ValueError(f"max_blk={max_blk} < required {need}")
     blocks = np.zeros((n_dstb, max_blk, BLK, BLK), np.float32)
     cols = np.zeros((n_dstb, max_blk), np.int32)
-    slot_of = np.zeros(len(uniq), np.int32)
-    cursor = np.zeros(n_dstb, np.int32)
-    for u, (bd_i, bs_i) in enumerate(zip(blk_dst, blk_src)):
-        s = cursor[bd_i]
-        slot_of[u] = s
-        cols[bd_i, s] = bs_i
-        cursor[bd_i] += 1
+    # uniq is sorted, so entries are grouped by dst block: the slot of entry
+    # u is its rank within its group (vectorized cursor).
+    group_start = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    slot_of = (np.arange(len(uniq)) - group_start[blk_dst]).astype(np.int32)
+    cols[blk_dst, slot_of] = blk_src
     np.add.at(blocks,
               (bd.astype(np.int32), slot_of[inv], dst % BLK, src % BLK), val)
     return blocks, cols, n_srcb * BLK
+
+
+def build_block_csr_pair(edge_src: np.ndarray, edge_dst: np.ndarray,
+                         edge_mask: np.ndarray, n_src: int, n_dst: int,
+                         values: np.ndarray | None = None,
+                         max_blk: int | None = None,
+                         max_blk_t: int | None = None):
+    """Forward layout A plus the transposed layout A^T in one call.
+
+    The backward pass of ``out = A @ h`` is ``dh = A^T @ dout`` — on the
+    FPGA the same scatter-gather array streams the transposed adjacency; here
+    the transpose is a second block-CSR built over the PADDED dimensions so
+    the cotangent shapes line up exactly with the primal shapes.
+
+    Returns (blocks, cols, blocks_t, cols_t, n_src_pad)."""
+    blocks, cols, n_src_pad = build_block_csr(
+        edge_src, edge_dst, edge_mask, n_src, n_dst, values, max_blk)
+    n_dst_pad = blocks.shape[0] * BLK
+    blocks_t, cols_t, _ = build_block_csr(
+        edge_dst, edge_src, edge_mask, n_dst_pad, n_src_pad, values, max_blk_t)
+    return blocks, cols, blocks_t, cols_t, n_src_pad
 
 
 def _kernel(cols_ref, a_ref, h_ref, o_ref, acc_ref, *, n_blk: int):
@@ -110,3 +139,42 @@ def aggregate_blockcsr(blocks: jax.Array, cols: jax.Array, h_in: jax.Array,
         out_shape=jax.ShapeDtypeStruct((n_dstb * BLK, F), h_in.dtype),
         interpret=interpret,
     )(cols, blocks, h_in)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper (training path)
+# ---------------------------------------------------------------------------
+# ``pallas_call`` has no JVP rule, so the training forward routes through a
+# custom VJP: the cotangent of ``A @ h`` w.r.t. ``h`` is ``A^T @ dout``, i.e.
+# the SAME kernel over the transposed block-CSR built host-side by
+# ``build_block_csr_pair``. The adjacency (blocks/cols) is sampled data, not
+# a parameter — its cotangents are symbolic zeros.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def aggregate_blockcsr_vjp(blocks: jax.Array, cols: jax.Array,
+                           blocks_t: jax.Array, cols_t: jax.Array,
+                           h_in: jax.Array, feat_block: int = 256,
+                           interpret: bool = True) -> jax.Array:
+    """Differentiable ``A @ h_in``; backward runs the kernel on (A^T)."""
+    return aggregate_blockcsr(blocks, cols, h_in,
+                              feat_block=feat_block, interpret=interpret)
+
+
+def _agg_fwd(blocks, cols, blocks_t, cols_t, h_in, feat_block, interpret):
+    out = aggregate_blockcsr(blocks, cols, h_in,
+                             feat_block=feat_block, interpret=interpret)
+    return out, (blocks, cols, blocks_t, cols_t)
+
+
+def _agg_bwd(feat_block, interpret, res, g):
+    blocks, cols, blocks_t, cols_t = res
+    dh = aggregate_blockcsr(blocks_t, cols_t, g.astype(jnp.float32),
+                            feat_block=feat_block, interpret=interpret)
+    return (jnp.zeros_like(blocks),
+            np.zeros(cols.shape, jax.dtypes.float0),
+            jnp.zeros_like(blocks_t),
+            np.zeros(cols_t.shape, jax.dtypes.float0),
+            dh)
+
+
+aggregate_blockcsr_vjp.defvjp(_agg_fwd, _agg_bwd)

@@ -1,6 +1,7 @@
 """Graph substrate: CSR integrity, RMAT character, dataset stand-ins."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: property tests
 from hypothesis import given, settings, strategies as st
 
 from repro.data.graphs import (rmat_edges, build_graph, synthetic_graph,

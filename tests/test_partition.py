@@ -1,6 +1,7 @@
 """Partitioner invariants: disjoint cover, balance, strategy properties."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: property tests
 from hypothesis import given, settings, strategies as st
 
 from repro.data.graphs import synthetic_graph

@@ -1,0 +1,176 @@
+"""Pipelined host runtime + Pallas block-CSR aggregation path.
+
+Covers the PR's contracts: (1) the block-CSR kernel reproduces the
+reference scatter-gather aggregation (values AND gradients, sum and mean)
+over random masked edge lists; (2) the prefetching executor preserves
+determinism — a pipelined epoch is bit-identical to a sequential one;
+(3) training end-to-end through the Pallas backend matches the reference
+backend; (4) idle-device fill batches carry zero weight."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.gnn import GNNModelConfig
+from repro.core import scheduler as sched
+from repro.core.pipeline import PipelineStats, PrefetchExecutor, prefetch
+from repro.core.trainer import SyncGNNTrainer
+from repro.data.graphs import synthetic_graph
+from repro.gnn import models as gnn_models
+from repro.kernels.aggregate import (BLK, aggregate_blockcsr_vjp,
+                                     build_block_csr_pair)
+
+G = synthetic_graph(scale=9, edge_factor=6, feat_dim=16, num_classes=4)
+CFG = GNNModelConfig("graphsage", num_layers=2, hidden=16, fanouts=(4, 3),
+                     batch_targets=32)
+
+
+# ---------------------------------------------------------------------------
+# kernel path == reference aggregation (property-style over random cases)
+# ---------------------------------------------------------------------------
+
+def _blockcsr_agg(es, ed, em, h, n_dst, kind):
+    """Host-side layout build + kernel call, mirroring the trainer stage."""
+    vals = None
+    if kind == "mean":
+        deg = np.bincount(ed[em], minlength=n_dst)
+        vals = 1.0 / np.maximum(deg[ed], 1.0)
+    b, c, bt, ct, n_src_pad = build_block_csr_pair(
+        es, ed, em, len(h), n_dst, vals)
+    h_pad = np.zeros((n_src_pad, h.shape[1]), np.float32)
+    h_pad[:len(h)] = h
+    out = aggregate_blockcsr_vjp(jnp.asarray(b), jnp.asarray(c),
+                                 jnp.asarray(bt), jnp.asarray(ct),
+                                 jnp.asarray(h_pad))
+    return out[:n_dst]
+
+
+@pytest.mark.parametrize("kind", ["sum", "mean"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_blockcsr_matches_reference_aggregate(kind, seed):
+    rng = np.random.default_rng(seed)
+    n_src = int(rng.integers(50, 400))
+    n_dst = int(rng.integers(40, 300))
+    n_edges = int(rng.integers(100, 3000))
+    f = int(rng.choice([16, 32, 64]))
+    es = rng.integers(0, n_src, n_edges).astype(np.int32)
+    ed = rng.integers(0, n_dst, n_edges).astype(np.int32)
+    em = rng.random(n_edges) < 0.85
+    h = rng.standard_normal((n_src, f)).astype(np.float32)
+
+    exp = gnn_models.aggregate(jnp.asarray(h), jnp.asarray(es),
+                               jnp.asarray(ed), jnp.asarray(em), n_dst, kind)
+    out = _blockcsr_agg(es, ed, em, h, n_dst, kind)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_blockcsr_gradient_matches_reference():
+    """d(loss)/dh through the custom VJP (A^T SpMM) == reference autodiff."""
+    rng = np.random.default_rng(7)
+    n_src, n_dst, n_edges, f = 200, 150, 1200, 32
+    es = rng.integers(0, n_src, n_edges).astype(np.int32)
+    ed = rng.integers(0, n_dst, n_edges).astype(np.int32)
+    em = rng.random(n_edges) < 0.9
+    h = rng.standard_normal((n_src, f)).astype(np.float32)
+    w = rng.standard_normal((n_dst, f)).astype(np.float32)
+
+    deg = np.bincount(ed[em], minlength=n_dst)
+    vals = 1.0 / np.maximum(deg[ed], 1.0)
+    b, c, bt, ct, n_src_pad = build_block_csr_pair(
+        es, ed, em, n_src, n_dst, vals)
+    wj = jnp.asarray(w)
+
+    def loss_kernel(hh):
+        h_pad = jnp.pad(hh, ((0, n_src_pad - n_src), (0, 0)))
+        out = aggregate_blockcsr_vjp(jnp.asarray(b), jnp.asarray(c),
+                                     jnp.asarray(bt), jnp.asarray(ct), h_pad)
+        return (out[:n_dst] * wj).sum()
+
+    def loss_ref(hh):
+        agg = gnn_models.aggregate(hh, jnp.asarray(es), jnp.asarray(ed),
+                                   jnp.asarray(em), n_dst, "mean")
+        return (agg * wj).sum()
+
+    g_kernel = jax.grad(loss_kernel)(jnp.asarray(h))
+    g_ref = jax.grad(loss_ref)(jnp.asarray(h))
+    np.testing.assert_allclose(np.asarray(g_kernel), np.asarray(g_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# prefetching executor
+# ---------------------------------------------------------------------------
+
+def test_prefetch_preserves_order_and_items():
+    stats = PipelineStats()
+    out = list(prefetch(range(50), lambda x: x * x, depth=3, stats=stats))
+    assert out == [x * x for x in range(50)]
+    assert stats.items == 50
+
+
+def test_prefetch_propagates_producer_exception():
+    def bad(x):
+        if x == 3:
+            raise RuntimeError("producer boom")
+        return x
+
+    with pytest.raises(RuntimeError, match="producer boom"):
+        list(prefetch(range(10), bad, depth=2))
+
+
+def test_prefetch_early_abandon_stops_worker():
+    ex = PrefetchExecutor(lambda x: x, depth=2)
+    it = ex.run(range(1000))
+    assert next(it) == 0
+    it.close()  # consumer abandons the epoch; worker must not hang
+
+
+def test_pipelined_matches_sequential():
+    """Same seed => bit-identical training with and without the prefetch
+    executor (the producer consumes the sampler RNG in schedule order)."""
+    t_seq = SyncGNNTrainer(G, CFG, num_devices=2, seed=3, pipeline=False)
+    t_pipe = SyncGNNTrainer(G, CFG, num_devices=2, seed=3, pipeline=True)
+    for _ in range(2):
+        m_seq = t_seq.run_epoch()
+        m_pipe = t_pipe.run_epoch()
+        assert m_seq["loss"] == m_pipe["loss"]
+        assert m_seq["acc"] == m_pipe["acc"]
+    for a, b in zip(jax.tree.leaves(t_seq.params),
+                    jax.tree.leaves(t_pipe.params)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+# ---------------------------------------------------------------------------
+# pallas aggregate backend end-to-end
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", ["graphsage", "gin"])
+def test_pallas_backend_matches_reference_training(model):
+    cfg = GNNModelConfig(model, num_layers=2, hidden=16, fanouts=(4, 3),
+                         batch_targets=32)
+    t_ref = SyncGNNTrainer(G, cfg, num_devices=2, seed=3)
+    t_pal = SyncGNNTrainer(G, cfg, num_devices=2, seed=3,
+                           aggregate_backend="pallas")
+    assert t_pal.model_cfg.aggregate_backend == "pallas"
+    for _ in range(2):
+        m_ref = t_ref.run_epoch()
+        m_pal = t_pal.run_epoch()
+        assert abs(m_ref["loss"] - m_pal["loss"]) < 1e-4, model
+
+
+# ---------------------------------------------------------------------------
+# idle-device padding carries zero weight
+# ---------------------------------------------------------------------------
+
+def test_idle_fill_batch_has_zero_weight_and_loss_ignores_it():
+    tr = SyncGNNTrainer(G, CFG, num_devices=2, seed=0, pipeline=False)
+    prepared = tr._prepare_group([sched.Assignment(0, 0, 0, 0, stage=2)])
+    w = prepared["stacked"]["weight"]
+    np.testing.assert_array_equal(np.asarray(w), [1.0, 0.0])
+
+    # the reported loss equals the single REAL batch's loss at old params
+    real = jax.tree.map(lambda x: x[0], prepared["stacked"])
+    expected, _ = gnn_models.loss_fn(CFG, tr.params, real)
+    m = tr._execute(prepared)
+    assert abs(m["loss"] - float(expected)) < 1e-6

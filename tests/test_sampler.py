@@ -67,3 +67,18 @@ def test_targets_cover_epoch(sampler):
 def test_labels_match_targets(sampler):
     mb = sampler.next_batch()
     assert (mb.labels == G.labels[mb.targets]).all()
+
+
+def test_fanout_exact_and_distinct():
+    """Every frontier vertex gets min(deg, fanout) DISTINCT in-neighbors
+    (Floyd sampling for the high-degree bucket — no under-sampling)."""
+    from repro.data.graphs import sample_in_neighbors
+    rng = np.random.default_rng(0)
+    fanout = 4
+    frontier = rng.choice(G.num_vertices, 200, replace=False)
+    src, dst = sample_in_neighbors(G.indptr, G.indices, frontier, fanout, rng)
+    deg = np.diff(G.indptr)
+    for j, v in enumerate(frontier):
+        got = src[dst == j]
+        assert len(got) == min(deg[v], fanout), v
+        assert len(np.unique(got)) == len(got), "duplicate neighbor"

@@ -1,6 +1,7 @@
 """Two-stage scheduler (paper Alg. 3) invariants — property-based."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: property tests
 from hypothesis import given, settings, strategies as st
 
 from repro.core import scheduler as sched

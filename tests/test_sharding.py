@@ -9,11 +9,18 @@ from repro.nn.param import PSpec, stack_layers, materialize, param_count
 from repro.distributed import sharding as shd
 
 
+def _make_mesh():
+    # 1 CPU device: (1,1) mesh exercises the code paths. AxisType only
+    # exists on newer jax; explicit Auto matches the old default anyway.
+    kw = {}
+    if hasattr(jax.sharding, "AxisType"):
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * 2
+    return jax.make_mesh((1, 1), ("data", "model"), **kw)
+
+
 @pytest.fixture(scope="module")
 def mesh():
-    # 1 CPU device: (1,1) mesh exercises the code paths
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh()
 
 
 def test_resolve_divisible(mesh):
@@ -22,8 +29,7 @@ def test_resolve_divisible(mesh):
 
 
 def test_resolve_fallback_nondivisible():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = _make_mesh()
     # craft a fake 16-wide axis via rules on a real mesh is impossible with
     # 1 device; test the arithmetic path directly instead
     rules = {"heads": ("model",), None: ()}
