@@ -1,6 +1,6 @@
 PYTHONPATH := src
 
-.PHONY: verify test bench
+.PHONY: verify test bench bench-smoke
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -8,4 +8,13 @@ test:
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only pipeline
 
-verify: test bench
+# CI smoke: quick host-pipeline benchmark; emits BENCH_pipeline.json
+# (stage times, NVTPS, aggregate-path H2D bytes/iter) for the perf
+# trajectory across PRs.
+bench-smoke:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only pipeline
+	@python -c "import json, os; \
+	d = json.load(open(os.environ.get('BENCH_PIPELINE_JSON', 'BENCH_pipeline.json'))); \
+	print('bench-smoke:', json.dumps(d['layout'], sort_keys=True))"
+
+verify: test bench-smoke

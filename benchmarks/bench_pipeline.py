@@ -1,9 +1,21 @@
 """Host-pipeline microbenchmarks (paper §7.4 metrics, measured): sampling
-rate, feature-gather bandwidth, scheduler overhead, and the headline
-sequential-vs-pipelined epoch comparison (paper Eq. 5-6: with the prefetch
-executor the epoch runs at ~max(sample+gather, compute) instead of the sum).
-The measured stage times also calibrate the simulator's t_sampling/t_gather,
-whose modelled overlap speedup is reported alongside the measured one."""
+rate, feature-gather bandwidth, stage-2b block-CSR layout build (compact
+edge-centric vs the legacy dense-tile build, with the host->device payload
+each implies), scheduler overhead, and the headline sequential-vs-pipelined
+epoch comparison (paper Eq. 5-6: with the prefetch executor the epoch runs
+at ~max(sample+gather+layout, compute) instead of the sum).
+
+The measured stage times also calibrate the simulator's
+t_sampling/t_gather/t_layout, whose modelled overlap speedup is reported
+alongside the measured one.
+
+Besides the CSV ``report`` lines, the run emits a machine-readable
+``BENCH_pipeline.json`` (path overridable via the BENCH_PIPELINE_JSON env
+var) with the stage times, NVTPS, and aggregate-path H2D bytes per
+iteration, so the perf trajectory is tracked across PRs.
+"""
+import json
+import os
 import time
 
 import numpy as np
@@ -16,6 +28,47 @@ from repro.core.feature_store import FeatureStore
 from repro.core.simulator import SimConfig, pipeline_speedup
 from repro.core import scheduler as sched
 from repro.core.trainer import SyncGNNTrainer
+from repro.kernels.aggregate import build_block_csr_pair
+
+
+JSON_PATH_ENV = "BENCH_PIPELINE_JSON"
+JSON_DEFAULT = "BENCH_pipeline.json"
+
+
+def _bench_layout_build(trainer, mbs):
+    """Stage 2b: time the compact single-pass layout build vs the legacy
+    dense-tile build on the SAME mini-batches, and the H2D bytes each ships.
+
+    The dense build is capped to a few repetitions — it materializes the
+    full (Nd, max_blk, 128, 128) tiles in numpy and exists here only as the
+    trajectory baseline the compact path is measured against."""
+    import repro.gnn.models as gnn_models
+    kind = gnn_models.AGG_KIND[trainer.model_cfg.name]
+
+    def dense_build(mb):
+        for l, (n_src, n_dst, max_blk, max_blk_t, _) in enumerate(
+                trainer._blk_caps):
+            src, dst, mask = mb.edge_src[l], mb.edge_dst[l], mb.edge_mask[l]
+            vals = None
+            if kind == "mean":
+                deg = np.bincount(dst[mask], minlength=n_dst)
+                vals = 1.0 / np.maximum(deg[dst], 1.0)
+            build_block_csr_pair(src, dst, mask, n_src, n_dst, vals,
+                                 max_blk=max_blk, max_blk_t=max_blk_t)
+
+    # warm both paths once, then time
+    trainer._block_csr_arrays(mbs[0])
+    dense_build(mbs[0])
+    t0 = time.time()
+    for mb in mbs:
+        trainer._block_csr_arrays(mb)
+    t_compact = (time.time() - t0) / len(mbs)
+    n_dense = min(3, len(mbs))
+    t0 = time.time()
+    for mb in mbs[:n_dense]:
+        dense_build(mb)
+    t_dense = (time.time() - t0) / n_dense
+    return t_compact, t_dense
 
 
 def run(report, quick: bool = True):
@@ -26,6 +79,11 @@ def run(report, quick: bool = True):
     g = scaled_dataset("ogbn-products", scale=15)
     cfg = GNNModelConfig("graphsage", 2, 128, (5, 5) if quick else (25, 10),
                          64)
+    out = {"schema": 2, "config": {"model": cfg.name, "layers": cfg.num_layers,
+                                   "hidden": cfg.hidden,
+                                   "fanouts": list(cfg.fanouts),
+                                   "batch_targets": cfg.batch_targets,
+                                   "graph": g.name}}
 
     # stage 1: sampling rate (vectorized CSR sampler)
     s = NeighborSampler(g, cfg, g.train_ids, 0)
@@ -47,6 +105,21 @@ def run(report, quick: bool = True):
     bw = rows * g.features.shape[1] * 4 / t_gather
     report("pipe_gather", t_gather * 1e6,
            f"GBps={bw/1e9:.2f} beta={fs.beta():.2f}")
+
+    # stage 2b: block-CSR layout build — compact single-pass edge-centric
+    # build (what the trainer ships) vs the legacy dense-tile build, plus
+    # the aggregate-path H2D bytes per iteration each implies.
+    tr_k = SyncGNNTrainer(g, cfg, num_devices=4, algorithm="distdgl",
+                          pipeline=False, aggregate_backend="pallas")
+    t_layout, t_layout_dense = _bench_layout_build(tr_k, mbs)
+    h2d_compact = tr_k.aggregate_h2d_bytes("compact")
+    h2d_dense = tr_k.aggregate_h2d_bytes("dense")
+    report("pipe_layout_compact", t_layout * 1e6,
+           f"speedup_vs_dense={t_layout_dense/t_layout:.2f} "
+           f"h2d_KB={h2d_compact/1e3:.1f}")
+    report("pipe_layout_dense", t_layout_dense * 1e6,
+           f"h2d_KB={h2d_dense/1e3:.1f} "
+           f"h2d_reduction_x={h2d_dense/h2d_compact:.1f}")
 
     # scheduler overhead (pure python) for a big epoch
     counts = [500, 300, 420, 380]
@@ -84,10 +157,35 @@ def run(report, quick: bool = True):
            f"host_wait_s={m_pipe['host_wait_s']:.3f}")
 
     # simulator, calibrated with the measured host stage times
-    sim = SimConfig(t_sampling=t_sample, t_gather=t_gather)
+    sim = SimConfig(t_sampling=t_sample, t_gather=t_gather,
+                    t_layout=t_layout, h2d_layout_bytes=h2d_compact)
     from repro.configs.gnn import DATASETS
     mod = pipeline_speedup(cfg, DATASETS["ogbn-products"], 4, 0.8, sim)
     report("pipe_modelled_overlap", mod["pipelined"]["epoch_time_s"] * 1e6,
            f"modelled_speedup={mod['speedup']:.2f} "
            f"nvtps_seq={mod['sequential']['nvtps']:.0f} "
            f"nvtps_pipe={mod['pipelined']['nvtps']:.0f}")
+
+    # machine-readable trajectory record
+    out["stages_s"] = {"sample": t_sample, "gather": t_gather,
+                       "layout_compact": t_layout,
+                       "layout_dense": t_layout_dense,
+                       "scheduler": dt}
+    out["layout"] = {"prepare_speedup_vs_dense": t_layout_dense / t_layout,
+                     "h2d_bytes_per_iter_compact": h2d_compact,
+                     "h2d_bytes_per_iter_dense": h2d_dense,
+                     "h2d_reduction_x": h2d_dense / h2d_compact}
+    out["epoch"] = {"sequential_s": m_seq["epoch_time_s"],
+                    "pipelined_s": m_pipe["epoch_time_s"],
+                    "speedup": speedup,
+                    "nvtps_sequential": m_seq["nvtps"],
+                    "nvtps_pipelined": m_pipe["nvtps"],
+                    "host_produce_s": m_pipe["host_produce_s"],
+                    "host_wait_s": m_pipe["host_wait_s"]}
+    out["modelled"] = {"speedup": mod["speedup"],
+                       "nvtps_pipelined": mod["pipelined"]["nvtps"]}
+    path = os.environ.get(JSON_PATH_ENV, JSON_DEFAULT)
+    with open(path, "w") as fh:
+        json.dump(out, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    report("pipe_json", 0.0, f"wrote {path}")

@@ -9,7 +9,7 @@ the FULL stats for the analytic DSE / simulator benchmarks.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Tuple
+from typing import Optional, Tuple
 
 
 @dataclass(frozen=True)
@@ -22,10 +22,15 @@ class GNNModelConfig:
     # Which aggregation datapath the forward uses (gnn/models.py):
     #   "reference" — jnp segment_sum scatter-gather (runs everywhere)
     #   "pallas"    — block-CSR SpMM kernel (kernels/aggregate.py); the
-    #                 layout is precomputed host-side by the trainer's
-    #                 pipeline stage. GAT always uses the reference path
-    #                 (edge softmax weights are device-computed).
+    #                 compact edge-centric layout is precomputed host-side by
+    #                 the trainer's pipeline stage and densified on device.
+    #                 GAT always uses the reference path (edge softmax
+    #                 weights are device-computed).
     aggregate_backend: str = "reference"
+    # Pallas execution mode: None = auto-detect (compiled Mosaic on a real
+    # TPU backend, interpret mode elsewhere); True/False pins it — False
+    # forces compilation (hardware validation), True forces the interpreter.
+    kernel_interpret: Optional[bool] = None
 
 
 @dataclass(frozen=True)

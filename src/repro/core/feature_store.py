@@ -9,6 +9,14 @@ analogue):
   * P3      : every device holds ALL rows but only a 1/p slice of the
               feature DIMENSION (intra-layer model parallelism).
 
+Residency representation: each device keeps a SORTED int32 array of its
+resident vertex ids (O(cache size) memory) — not the (p, V) boolean matrix
+an earlier revision used, which cost O(p*V) host memory and a fancy-indexed
+row probe per gather. Membership tests are one vectorized ``searchsorted``
+against the device's sorted id array; P3's all-rows residency is a flag, so
+it costs O(1). ``is_resident`` / ``resident_ids`` / ``num_resident`` are the
+query API.
+
 At runtime ``gather()`` serves a mini-batch's feature rows: cache hits read
 device HBM; misses are fetched FROM HOST MEMORY (the paper's DC
 optimization — never peer-to-peer). beta (paper Eq. 7) — the fraction of
@@ -17,7 +25,7 @@ bytes served locally — is accounted per gather and drives the DSE/simulator.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -48,6 +56,9 @@ class FeatureStore:
     """Per-device feature residency + gather with beta accounting.
 
     The host always holds the full X (paper §4.2), so misses are host reads.
+    Residency is compact: per device either a sorted id array
+    (``_resident_ids[i]``) or the ``_all_resident[i]`` flag (P3 — every row
+    resident as a feature-dimension slice).
     """
 
     def __init__(self, graph: Graph, partition: Partition, strategy: str,
@@ -57,34 +68,65 @@ class FeatureStore:
         self.strategy = strategy
         self.stats = [GatherStats() for _ in range(self.p)]
         V = graph.num_vertices
-        self.resident = np.zeros((self.p, V), bool)
+        self._resident_ids: List[np.ndarray] = [
+            np.empty(0, np.int32) for _ in range(self.p)]
+        self._all_resident = [False] * self.p
         self.feature_slice = [slice(None)] * self.p
 
         if strategy in ("distdgl", "metis_like"):
             for i in range(self.p):
-                self.resident[i, partition.part_vertices(i)] = True
+                self._resident_ids[i] = np.sort(
+                    partition.part_vertices(i)).astype(np.int32)
         elif strategy == "pagraph":
             budget = int(V * cache_budget_frac)
             hot = np.argsort(-graph.out_degree())[:budget]
             for i in range(self.p):
-                self.resident[i, partition.part_vertices(i)] = True
-                self.resident[i, hot] = True
+                self._resident_ids[i] = np.union1d(
+                    partition.part_vertices(i), hot).astype(np.int32)
         elif strategy == "p3":
             f = graph.features.shape[1]
             chunk = (f + self.p - 1) // self.p
             for i in range(self.p):
-                self.resident[i, :] = True  # all rows, 1/p of the columns
+                self._all_resident[i] = True  # all rows, 1/p of the columns
                 self.feature_slice[i] = slice(i * chunk, min(f, (i + 1) * chunk))
         else:
             raise ValueError(f"unknown feature-storing strategy {strategy!r}")
 
+    # -- residency queries ----------------------------------------------------
+    def num_resident(self, device: int) -> int:
+        """How many vertex rows live in ``device``'s HBM."""
+        if self._all_resident[device]:
+            return self.g.num_vertices
+        return len(self._resident_ids[device])
+
+    def resident_ids(self, device: int) -> np.ndarray:
+        """Sorted vertex ids resident on ``device`` (materialized for P3)."""
+        if self._all_resident[device]:
+            return np.arange(self.g.num_vertices, dtype=np.int32)
+        return self._resident_ids[device]
+
+    def is_resident(self, device: int, vertex_ids: np.ndarray) -> np.ndarray:
+        """Vectorized membership: bool mask of which ids are device-local.
+
+        One ``searchsorted`` against the device's sorted resident-id array —
+        O(n log cache) per batch with no O(V) structure touched."""
+        ids = np.asarray(vertex_ids)
+        if self._all_resident[device]:
+            return np.ones(len(ids), bool)
+        r = self._resident_ids[device]
+        if len(r) == 0:
+            return np.zeros(len(ids), bool)
+        pos = np.searchsorted(r, ids)
+        pos_clip = np.minimum(pos, len(r) - 1)
+        return (pos < len(r)) & (r[pos_clip] == ids)
+
     def device_bytes(self, device: int) -> int:
-        rows = int(self.resident[device].sum())
         f = self.g.features.shape[1]
         sl = self.feature_slice[device]
         width = len(range(*sl.indices(f)))
-        return rows * width * 4
+        return self.num_resident(device) * width * 4
 
+    # -- gathers --------------------------------------------------------------
     def gather(self, device: int, vertex_ids: np.ndarray,
                mask: Optional[np.ndarray] = None) -> np.ndarray:
         """Gather feature rows for a mini-batch onto ``device``.
@@ -96,8 +138,9 @@ class FeatureStore:
         ids = np.asarray(vertex_ids)
         valid = np.ones(len(ids), bool) if mask is None else np.asarray(mask)
         f = self.g.features.shape[1]
-        hit = self.resident[device, ids] & valid
-        miss = (~self.resident[device, ids]) & valid
+        res = self.is_resident(device, ids)
+        hit = res & valid
+        miss = (~res) & valid
         st = self.stats[device]
         sl = self.feature_slice[device]
         width = len(range(*sl.indices(f)))
@@ -122,21 +165,23 @@ class FeatureStore:
                        mask: Optional[np.ndarray] = None) -> np.ndarray:
         """P3 layer-1 all-to-all (paper Listing 3): reconstruct full feature
         rows by writing each device's feature-dimension slice into ONE
-        output buffer. Every slice read is a local (HBM) read on its
-        contributing device and is accounted as such (beta stays 1)."""
+        output buffer. The p slices tile the feature dimension, so a single
+        vectorized full-row gather materializes the reduction (one fancy
+        index instead of p sliced ones); every slice read is a local (HBM)
+        read on its contributing device and is accounted as such (beta
+        stays 1)."""
         ids = np.asarray(vertex_ids)
         valid = np.ones(len(ids), bool) if mask is None else np.asarray(mask)
         f = self.g.features.shape[1]
-        out = np.zeros((len(ids), f), np.float32)
+        out = self.g.features[ids]  # fancy indexing: already a fresh array
+        out[~valid] = 0.0
         n = int(valid.sum())
         for d in range(self.p):
             sl = self.feature_slice[d]
             width = len(range(*sl.indices(f)))
-            out[:, sl] = self.g.features[ids, sl]
             st = self.stats[d]
             st.local_rows += n
             st.local_bytes += n * width * 4
-        out[~valid] = 0.0
         return out
 
     def beta(self, device: Optional[int] = None) -> float:

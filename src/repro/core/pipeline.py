@@ -23,13 +23,17 @@ Design notes:
   * Clean epoch draining — the generator joins the worker at exhaustion and
     cancels it (stop event + drain) if the consumer abandons the epoch
     early, so no thread outlives its epoch.
-  * Producer exceptions re-raise in the consumer at the point of ``next()``.
+  * Producer exceptions re-raise in the consumer at the point of ``next()``
+    WITH the worker's original traceback attached (the frames inside
+    ``prepare`` stay visible, and the formatted worker trace is appended to
+    the exception so it survives even if a later handler re-wraps it).
 """
 from __future__ import annotations
 
 import queue
 import threading
 import time
+import traceback
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable, Iterator, Optional
 
@@ -68,7 +72,10 @@ class PrefetchExecutor:
     def run(self, items: Iterable[Any]) -> Iterator[Any]:
         q: queue.Queue = queue.Queue(maxsize=self.depth)
         stop = threading.Event()
-        error: list[BaseException] = []
+        # (exception, formatted worker traceback) — the traceback OBJECT
+        # rides on the exception itself; the string is belt-and-braces for
+        # handlers that re-wrap and drop __traceback__
+        error: list[tuple[BaseException, str]] = []
 
         def worker() -> None:
             try:
@@ -85,7 +92,7 @@ class PrefetchExecutor:
                     if stop.is_set():
                         return
             except BaseException as e:  # surfaced to the consumer
-                error.append(e)
+                error.append((e, traceback.format_exc()))
             finally:
                 while not stop.is_set():
                     try:
@@ -107,7 +114,14 @@ class PrefetchExecutor:
                 self.stats.items += 1
                 yield item
             if error:
-                raise error[0]
+                exc, worker_tb = error[0]
+                if hasattr(exc, "add_note"):  # py311+: survives re-wrapping
+                    exc.add_note("prefetch worker traceback:\n" + worker_tb)
+                else:
+                    exc.prefetch_worker_traceback = worker_tb
+                # re-raising the caught object keeps the worker frames: its
+                # __traceback__ is chained ahead of this raise site
+                raise exc
         finally:
             stop.set()
             # drain so a blocked producer can observe the stop event

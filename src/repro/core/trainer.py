@@ -7,8 +7,9 @@ Per synchronous iteration (paper Fig. 2 / Alg. 2 + gradient sync):
      host fetch — DC optimization, with beta accounting), running one
      iteration AHEAD of the device so host work overlaps device compute
      (paper Eq. 5-6). With ``aggregate_backend="pallas"`` the pipeline stage
-     also precomputes each layer's block-CSR adjacency (forward + transpose)
-     for the kernel datapath;
+     also precomputes each layer's COMPACT block-CSR layout (forward +
+     transpose derived from a single edge-key sort, ~20 B/edge total) which the
+     device step densifies into tiles on the fly;
   3. the p batches are stacked on a leading device axis and executed as ONE
      jit'd step: vmap over the device axis + weight-averaged loss =>
      gradients are the mean over the REAL batches (idle-device fill batches
@@ -44,7 +45,9 @@ from repro.core.pipeline import PipelineStats, PrefetchExecutor
 from repro.core.sampler import NeighborSampler, MiniBatch, layer_capacities
 from repro.core import scheduler as sched
 from repro.gnn import models as gnn_models
-from repro.kernels.aggregate import BLK, build_block_csr_pair
+from repro.kernels.aggregate import (BLK, build_block_coo_pair,
+                                     compact_layout_bytes,
+                                     dense_layout_bytes)
 from repro.nn.param import materialize
 from repro.optim.adam import AdamW, SGDM
 from repro.optim.schedules import get_schedule
@@ -131,10 +134,13 @@ class SyncGNNTrainer:
         # A dst block holds <= BLK * fanout edges, so it can touch at most
         # that many distinct src blocks; the transpose has no fanout bound
         # on its rows (a source may feed arbitrarily many destinations).
+        # The HOST only stages the compact ~20 B/edge layout; the dense
+        # tiles are densified on DEVICE inside the jit'd step, so the budget
+        # below bounds transient device memory, not host staging or H2D.
         self._blk_caps = []
         if (self.model_cfg.aggregate_backend == "pallas"
                 and gnn_models.AGG_KIND[self.model_cfg.name] is not None):
-            n_caps, _ = layer_capacities(self.model_cfg)
+            n_caps, e_caps = layer_capacities(self.model_cfg)
             fans = self.model_cfg.fanouts[::-1]  # layer order matches n_caps
             blk_bytes = 0
             for l in range(self.model_cfg.num_layers):
@@ -143,18 +149,34 @@ class SyncGNNTrainer:
                 max_blk = min(n_srcb, BLK * fans[l])
                 max_blk_t = n_dstb
                 self._blk_caps.append(
-                    (n_caps[l], n_caps[l + 1], max_blk, max_blk_t))
+                    (n_caps[l], n_caps[l + 1], max_blk, max_blk_t,
+                     e_caps[l]))
                 blk_bytes += ((n_dstb * max_blk + n_srcb * max_blk_t)
                               * BLK * BLK * 4)
-            budget = 4 << 30  # dense-block staging memory per device batch
+            budget = 4 << 30  # densified-tile device memory per batch
             if blk_bytes > budget:
                 raise ValueError(
-                    f"aggregate_backend='pallas' would stage "
+                    f"aggregate_backend='pallas' would densify "
                     f"{blk_bytes / 2**30:.1f} GiB of block-CSR tiles per "
-                    f"batch (budget {budget / 2**30:.0f} GiB) at "
+                    f"batch on device (budget {budget / 2**30:.0f} GiB) at "
                     f"batch_targets={self.model_cfg.batch_targets}, "
                     f"fanouts={self.model_cfg.fanouts}. Reduce the batch "
                     f"size / fanouts or use aggregate_backend='reference'.")
+
+    def aggregate_h2d_bytes(self, layout: str = "compact") -> int:
+        """Per-batch host->device bytes for the aggregate-path layout.
+
+        ``layout="compact"`` is what the trainer ships (per-edge triples +
+        cols tables); ``layout="dense"`` is what the pre-compact path shipped
+        (full 64 KB tiles) — kept for the benchmark's trajectory ratio."""
+        fn = {"compact": compact_layout_bytes,
+              "dense": dense_layout_bytes}[layout]
+        total = 0
+        for n_src, n_dst, max_blk, max_blk_t, e_cap in self._blk_caps:
+            n_srcb = (n_src + BLK - 1) // BLK
+            n_dstb = (n_dst + BLK - 1) // BLK
+            total += fn(e_cap, n_dstb, max_blk, n_srcb, max_blk_t)
+        return total
 
     # -- setup helpers ---------------------------------------------------------
     def _train_ids(self, i: int) -> np.ndarray:
@@ -209,27 +231,32 @@ class SyncGNNTrainer:
         return self.store.gather(device, mb.nodes[0], mb.node_mask[0])
 
     def _block_csr_arrays(self, mb: MiniBatch) -> dict:
-        """Precompute per-layer block-CSR adjacency (fwd + transpose) for the
-        Pallas aggregate datapath. Mean semantics are baked into the block
-        values (1/deg per edge); shapes are pinned by self._blk_caps."""
+        """Precompute the per-layer COMPACT block-CSR layout (fwd + transpose
+        from one sort — kernels/aggregate.build_block_coo_pair) for the
+        Pallas aggregate datapath. The host stages only per-edge
+        (tile_id, tile_off, value) triples plus the cols tables (12 B/edge for
+        A, 20 B with the transpose coordinates);
+        densification happens on device inside the jit'd step. Mean semantics
+        are baked into the edge values (1/deg per edge); shapes are pinned by
+        self._blk_caps, so every batch reuses one compiled executable."""
         kind = gnn_models.AGG_KIND[self.model_cfg.name]
-        blocks, cols, blocks_t, cols_t = [], [], [], []
-        for l, (n_src, n_dst, max_blk, max_blk_t) in enumerate(self._blk_caps):
+        out: dict = {"agg_tile_id": [], "agg_tile_off": [], "agg_val": [],
+                     "agg_cols": [], "agg_tile_id_t": [], "agg_tile_off_t": [],
+                     "agg_cols_t": []}
+        for l, (n_src, n_dst, max_blk, max_blk_t, _) in enumerate(
+                self._blk_caps):
             src, dst = mb.edge_src[l], mb.edge_dst[l]
             mask = mb.edge_mask[l]
             vals = None
             if kind == "mean":
                 deg = np.bincount(dst[mask], minlength=n_dst)
                 vals = 1.0 / np.maximum(deg[dst], 1.0)
-            b, c, bt, ct, _ = build_block_csr_pair(
-                src, dst, mask, n_src, n_dst, vals,
-                max_blk=max_blk, max_blk_t=max_blk_t)
-            blocks.append(b)
-            cols.append(c)
-            blocks_t.append(bt)
-            cols_t.append(ct)
-        return {"agg_blocks": blocks, "agg_cols": cols,
-                "agg_blocks_t": blocks_t, "agg_cols_t": cols_t}
+            coo = build_block_coo_pair(src, dst, mask, n_src, n_dst, vals,
+                                       max_blk=max_blk, max_blk_t=max_blk_t)
+            for k in ("tile_id", "tile_off", "val", "cols",
+                      "tile_id_t", "tile_off_t", "cols_t"):
+                out[f"agg_{k}"].append(coo[k])
+        return out
 
     def _prepare_group(self, assignments: List[sched.Assignment]) -> dict:
         """Stages 1+2 (sample + gather [+ block-CSR build]) for one

@@ -70,6 +70,14 @@ def sample_in_neighbors(indptr: np.ndarray, indices: np.ndarray,
     ``dst_local`` indexes into ``frontier``. RNG calls depend only on the
     frontier content, so a fixed seed gives a fixed epoch regardless of
     which thread runs the sampling stage.
+
+    Contract: ``indices`` must hold DISTINCT src entries per CSR row
+    (``build_graph`` dedups edges, so every Graph here satisfies it). Each
+    CSR slot is drawn at most once per destination — all edges kept for the
+    low-degree bucket, distinct Floyd offsets for the high-degree bucket —
+    so the sampled (dst, src) pairs are already unique and the canonical
+    ordering needs only a SORT of the packed keys, not the dedup pass a
+    ``np.unique`` would add on this hot path.
     """
     frontier = np.asarray(frontier)
     start = indptr[frontier]
@@ -116,7 +124,8 @@ def sample_in_neighbors(indptr: np.ndarray, indices: np.ndarray,
     src = np.concatenate([src_s, src_b])
     dst = np.concatenate([dst_s, dst_b])
     m = int(src.max()) + 1 if len(src) else 1  # key base covers all src ids
-    key = np.unique(dst * m + src)  # canonical (dst, src) order
+    key = dst * m + src
+    key.sort()  # canonical (dst, src) order; pairs are distinct (see above)
     return ((key % m).astype(np.int32), (key // m).astype(np.int32))
 
 

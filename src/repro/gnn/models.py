@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.gnn import GNNModelConfig
-from repro.kernels.aggregate import BLK, aggregate_blockcsr_vjp
+from repro.kernels.aggregate import (BLK, aggregate_compact_vjp,
+                                     resolve_interpret)
 from repro.nn.param import PSpec
 
 
@@ -98,20 +99,27 @@ def param_spec(cfg: GNNModelConfig, f_in: int, n_classes: int):
 # Forward
 # ---------------------------------------------------------------------------
 
-def _blockcsr_aggregate(batch, l: int, h: jax.Array, n_dst: int) -> jax.Array:
+def _blockcsr_aggregate(cfg: GNNModelConfig, batch, l: int, h: jax.Array,
+                        n_dst: int) -> jax.Array:
     """Layer-l aggregation through the Pallas block-CSR SpMM.
 
-    The pipeline stage precomputed A (and A^T for the VJP) with the model's
-    semantics baked into the block values (1/deg for mean, 1 for sum), so a
-    single masked SpMM reproduces ``aggregate`` exactly."""
-    blocks_t = batch["agg_blocks_t"][l]
-    n_src_pad = blocks_t.shape[0] * BLK
+    The pipeline stage precomputed the COMPACT edge-centric layout for A
+    (and A^T for the VJP) with the model's semantics baked into the edge
+    values (1/deg for mean, 1 for sum); the dense tiles are densified ON
+    DEVICE inside the jit'd step (kernels/aggregate.densify_tiles), so a
+    single masked SpMM reproduces ``aggregate`` exactly while the host ships
+    only ~20 B/edge (A + A^T). Execution mode follows ``cfg.kernel_interpret``
+    (None = compiled on real TPU, interpreted elsewhere)."""
+    cols_t = batch["agg_cols_t"][l]
+    n_src_pad = cols_t.shape[0] * BLK
     h32 = h.astype(jnp.float32)
     h_pad = jnp.pad(h32, ((0, n_src_pad - h32.shape[0]), (0, 0)))
-    out = aggregate_blockcsr_vjp(
-        batch["agg_blocks"][l], batch["agg_cols"][l],
-        blocks_t, batch["agg_cols_t"][l], h_pad,
-        interpret=jax.default_backend() != "tpu")
+    out = aggregate_compact_vjp(
+        batch["agg_tile_id"][l], batch["agg_tile_off"][l],
+        batch["agg_val"][l], batch["agg_cols"][l],
+        batch["agg_tile_id_t"][l], batch["agg_tile_off_t"][l],
+        cols_t, h_pad,
+        interpret=resolve_interpret(cfg.kernel_interpret))
     return out[:n_dst].astype(h.dtype)
 
 
@@ -121,11 +129,11 @@ def _layer(cfg: GNNModelConfig, p, h, batch, l: int, n_dst: int):
     h_self = h[batch["self_idx"][l]]
     use_kernel = (cfg.aggregate_backend == "pallas"
                   and AGG_KIND.get(cfg.name) is not None
-                  and "agg_blocks" in batch)
+                  and "agg_tile_id" in batch)
 
     def _agg(kind: str) -> jax.Array:
         if use_kernel:
-            return _blockcsr_aggregate(batch, l, h, n_dst)
+            return _blockcsr_aggregate(cfg, batch, l, h, n_dst)
         return aggregate(h, src, dst, emask, n_dst, kind)
 
     if cfg.name == "graphsage":

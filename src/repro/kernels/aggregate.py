@@ -17,6 +17,21 @@ Layout (built by ``build_block_csr``):
 
 Grid: (n_dst_blocks, F/fb, max_blk); the last axis is sequential with an
 fp32 VMEM accumulator.
+
+Two host-side layout builders feed the kernel:
+
+* ``build_block_csr`` / ``build_block_csr_pair`` — the original DENSE path:
+  the host materializes the (Nd, max_blk, 128, 128) tiles in numpy and ships
+  ~64 KB per block slot to the device. Kept for tests and as the reference
+  the compact path must match bit-for-bit.
+* ``build_block_coo_pair`` — the COMPACT edge-centric path (the hot path):
+  the host emits only per-edge (tile_id, tile_off, value) triples — 12 B per
+  edge for A, 20 B with the A^T coordinates (the values are shared) —
+  derived from ONE sort of the edge block keys, and the tiles are densified
+  ON DEVICE by ``densify_tiles`` (a jit'd scatter-add) right before the
+  Pallas SpMM. Host->device traffic for the aggregate path drops by the
+  tile-fill ratio (orders of magnitude for sampled subgraphs), and the
+  ``np.add.at`` dense scatter leaves the host thread entirely.
 """
 from __future__ import annotations
 
@@ -93,6 +108,151 @@ def build_block_csr_pair(edge_src: np.ndarray, edge_dst: np.ndarray,
     blocks_t, cols_t, _ = build_block_csr(
         edge_dst, edge_src, edge_mask, n_dst_pad, n_src_pad, values, max_blk_t)
     return blocks, cols, blocks_t, cols_t, n_src_pad
+
+
+# ---------------------------------------------------------------------------
+# Compact edge-centric layout (host) + on-device densification
+# ---------------------------------------------------------------------------
+
+def build_block_coo_pair(edge_src: np.ndarray, edge_dst: np.ndarray,
+                         edge_mask: np.ndarray, n_src: int, n_dst: int,
+                         values: np.ndarray | None = None,
+                         max_blk: int | None = None,
+                         max_blk_t: int | None = None) -> dict:
+    """Single-pass compact layout for A AND A^T from one edge-key sort.
+
+    Instead of materializing dense (Nd, max_blk, BLK, BLK) tiles host-side,
+    emit per-edge coordinates into the tile array:
+
+      tile_id[e]  = dst_block(e) * max_blk + slot(e)      (which tile)
+      tile_off[e] = (dst % BLK) * BLK + (src % BLK)       (cell within tile)
+      val[e]      = edge value (0.0 for masked/padded edges)
+
+    plus the ``cols`` scalar-prefetch table the kernel already consumes.
+    Masked edges keep tile_id = tile_off = 0 with val 0.0 — a zero add into
+    an existing cell — so every array keeps its STATIC padded length.
+
+    The transposed layout (``*_t`` keys, consumed by the custom VJP) is
+    derived from the SAME ``np.unique`` over the E-length block keys: the
+    unique (dst_blk, src_blk) pairs are re-ranked by (src_blk, dst_blk) — an
+    O(U log U) argsort over the U unique blocks, U << E — instead of paying a
+    second full E-length sort as ``build_block_csr_pair`` does. Densifying
+    the result is bit-identical to two independent ``build_block_csr`` calls
+    (tests/test_pipeline.py property test).
+
+    Returns a dict with keys ``tile_id, tile_off, val, cols, tile_id_t,
+    tile_off_t, cols_t, n_src_pad``.
+    """
+    n_srcb = (n_src + BLK - 1) // BLK
+    n_dstb = (n_dst + BLK - 1) // BLK
+    src = np.asarray(edge_src).astype(np.int64)
+    dst = np.asarray(edge_dst).astype(np.int64)
+    mask = np.asarray(edge_mask).astype(bool)
+    E = len(src)
+    if values is None:
+        val = mask.astype(np.float32)
+    else:
+        val = np.where(mask, np.asarray(values), 0.0).astype(np.float32)
+    src = np.where(mask, src, 0)
+    dst = np.where(mask, dst, 0)
+    bs, bd = src // BLK, dst // BLK
+
+    # THE single sort: unique (dst_blk, src_blk) keys over the real edges.
+    keys = bd * n_srcb + bs
+    uniq, inv = np.unique(keys[mask], return_inverse=True)
+    U = len(uniq)
+    blk_dst = uniq // n_srcb
+    blk_src = uniq % n_srcb
+
+    # forward slots: uniq is sorted by (dst_blk, src_blk), so the slot of a
+    # block is its rank within its dst group (vectorized cursor).
+    counts = np.bincount(blk_dst, minlength=n_dstb)
+    need = int(counts.max()) if U else 0
+    if max_blk is None:
+        max_blk = max(1, need)
+    elif need > max_blk:
+        raise ValueError(f"max_blk={max_blk} < required {need}")
+    group_start = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    slot_of = np.arange(U) - group_start[blk_dst]
+    cols = np.zeros((n_dstb, max_blk), np.int32)
+    cols[blk_dst, slot_of] = blk_src.astype(np.int32)
+    tile_id = np.zeros(E, np.int32)
+    tile_id[mask] = (blk_dst[inv] * max_blk + slot_of[inv]).astype(np.int32)
+    tile_off = np.where(mask, (dst % BLK) * BLK + src % BLK,
+                        0).astype(np.int32)
+
+    # transpose slots: re-rank the SAME U blocks by (src_blk, dst_blk).
+    order_t = np.argsort(blk_src * n_dstb + blk_dst)
+    bs_t, bd_t = blk_src[order_t], blk_dst[order_t]
+    counts_t = np.bincount(bs_t, minlength=n_srcb)
+    need_t = int(counts_t.max()) if U else 0
+    if max_blk_t is None:
+        max_blk_t = max(1, need_t)
+    elif need_t > max_blk_t:
+        raise ValueError(f"max_blk_t={max_blk_t} < required {need_t}")
+    group_start_t = np.concatenate([[0], np.cumsum(counts_t)[:-1]])
+    slot_of_t = np.arange(U) - group_start_t[bs_t]
+    cols_t = np.zeros((n_srcb, max_blk_t), np.int32)
+    cols_t[bs_t, slot_of_t] = bd_t.astype(np.int32)
+    slot_by_uniq = np.empty(U, np.int64)
+    slot_by_uniq[order_t] = slot_of_t
+    tile_id_t = np.zeros(E, np.int32)
+    tile_id_t[mask] = (blk_src[inv] * max_blk_t
+                       + slot_by_uniq[inv]).astype(np.int32)
+    tile_off_t = np.where(mask, (src % BLK) * BLK + dst % BLK,
+                          0).astype(np.int32)
+
+    return {"tile_id": tile_id, "tile_off": tile_off, "val": val,
+            "cols": cols, "tile_id_t": tile_id_t, "tile_off_t": tile_off_t,
+            "cols_t": cols_t, "n_src_pad": n_srcb * BLK}
+
+
+def compact_layout_bytes(n_edges: int, n_dstb: int, max_blk: int,
+                         n_srcb: int, max_blk_t: int) -> int:
+    """Host->device bytes per batch for one layer's compact layout: three
+    4-byte per-edge arrays for A (tile_id, tile_off, val), two more for A^T
+    (the values are shared), plus the two cols tables."""
+    return 5 * 4 * n_edges + 4 * (n_dstb * max_blk + n_srcb * max_blk_t)
+
+
+def dense_layout_bytes(n_edges: int, n_dstb: int, max_blk: int,
+                       n_srcb: int, max_blk_t: int) -> int:
+    """Host->device bytes per batch for one layer's DENSE layout (the
+    pre-compact path): full 64 KB tiles for A and A^T plus cols tables."""
+    return (4 * (n_dstb * max_blk + n_srcb * max_blk_t) * BLK * BLK
+            + 4 * (n_dstb * max_blk + n_srcb * max_blk_t))
+
+
+def densify_tiles(tile_id: jax.Array, tile_off: jax.Array, val: jax.Array,
+                  n_tile_rows: int, max_blk: int) -> jax.Array:
+    """Device-side tile densification: scatter-add the compact per-edge
+    triples into (n_tile_rows, max_blk, BLK, BLK) dense tiles. Runs inside
+    the jit'd step (XLA scatter), so the host ships ~20 B/edge instead of
+    64 KB per block slot. Masked edges carry val = 0 at cell (0, 0)."""
+    flat = jnp.zeros(n_tile_rows * max_blk * BLK * BLK, jnp.float32)
+    idx = tile_id.astype(jnp.int32) * (BLK * BLK) + tile_off
+    flat = flat.at[idx].add(val.astype(jnp.float32))
+    return flat.reshape(n_tile_rows, max_blk, BLK, BLK)
+
+
+def densify_tiles_np(tile_id: np.ndarray, tile_off: np.ndarray,
+                     val: np.ndarray, n_tile_rows: int, max_blk: int
+                     ) -> np.ndarray:
+    """Numpy twin of ``densify_tiles`` (same accumulation order as the dense
+    builder's ``np.add.at``) — used by tests to check bit-identity."""
+    flat = np.zeros(n_tile_rows * max_blk * BLK * BLK, np.float32)
+    np.add.at(flat, tile_id.astype(np.int64) * (BLK * BLK) + tile_off, val)
+    return flat.reshape(n_tile_rows, max_blk, BLK, BLK)
+
+
+def resolve_interpret(override: bool | None = None) -> bool:
+    """Pallas execution mode: compiled Mosaic on real TPU, interpret mode
+    elsewhere. ``override`` (e.g. ``GNNModelConfig.kernel_interpret``) pins
+    the mode explicitly — set False to force compilation, True to force the
+    interpreter even on hardware."""
+    if override is not None:
+        return bool(override)
+    return jax.default_backend() != "tpu"
 
 
 def _kernel(cols_ref, a_ref, h_ref, o_ref, acc_ref, *, n_blk: int):
@@ -178,3 +338,51 @@ def _agg_bwd(feat_block, interpret, res, g):
 
 
 aggregate_blockcsr_vjp.defvjp(_agg_fwd, _agg_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Compact-layout differentiable wrapper (the training hot path)
+# ---------------------------------------------------------------------------
+# Same contract as ``aggregate_blockcsr_vjp`` but fed by the COMPACT
+# edge-centric layout of ``build_block_coo_pair``: the forward densifies A's
+# tiles on device and runs the Pallas SpMM; the backward densifies A^T's
+# tiles (from the residual compact triples — no dense transpose is ever kept
+# live between forward and backward) and runs the same kernel on the
+# cotangent. The adjacency is sampled data, not a parameter: every layout
+# input gets a zero/float0 cotangent.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(8, 9))
+def aggregate_compact_vjp(tile_id: jax.Array, tile_off: jax.Array,
+                          val: jax.Array, cols: jax.Array,
+                          tile_id_t: jax.Array, tile_off_t: jax.Array,
+                          cols_t: jax.Array, h_in: jax.Array,
+                          feat_block: int = 256,
+                          interpret: bool = True) -> jax.Array:
+    """Differentiable ``A @ h_in`` with A in compact edge-centric form."""
+    blocks = densify_tiles(tile_id, tile_off, val, *cols.shape)
+    return aggregate_blockcsr(blocks, cols, h_in,
+                              feat_block=feat_block, interpret=interpret)
+
+
+def _agg_compact_fwd(tile_id, tile_off, val, cols, tile_id_t, tile_off_t,
+                     cols_t, h_in, feat_block, interpret):
+    out = aggregate_compact_vjp(tile_id, tile_off, val, cols, tile_id_t,
+                                tile_off_t, cols_t, h_in,
+                                feat_block, interpret)
+    return out, (tile_id, tile_off, val, cols, tile_id_t, tile_off_t, cols_t)
+
+
+def _agg_compact_bwd(feat_block, interpret, res, g):
+    tile_id, tile_off, val, cols, tile_id_t, tile_off_t, cols_t = res
+    blocks_t = densify_tiles(tile_id_t, tile_off_t, val, *cols_t.shape)
+    dh = aggregate_blockcsr(blocks_t, cols_t, g.astype(jnp.float32),
+                            feat_block=feat_block, interpret=interpret)
+
+    def f0(a):
+        return np.zeros(a.shape, jax.dtypes.float0)
+
+    return (f0(tile_id), f0(tile_off), jnp.zeros_like(val), f0(cols),
+            f0(tile_id_t), f0(tile_off_t), f0(cols_t), dh)
+
+
+aggregate_compact_vjp.defvjp(_agg_compact_fwd, _agg_compact_bwd)

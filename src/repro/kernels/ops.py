@@ -15,19 +15,16 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.update_mlp import update_mlp as _update_pallas
 from repro.kernels.aggregate import (aggregate_blockcsr as _agg_pallas,
-                                     build_block_csr, BLK)
+                                     build_block_csr, resolve_interpret, BLK)
 from repro.kernels.flash_attention import flash_attention_fwd as _flash_pallas
 from repro.kernels.wkv6 import wkv6_chunk as _wkv6_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("act", "use_pallas"))
 def update(x, w, b, *, act: str = "none", use_pallas: bool = True):
     if use_pallas:
-        return _update_pallas(x, w, b, act=act, interpret=not _on_tpu())
+        return _update_pallas(x, w, b, act=act,
+                              interpret=resolve_interpret())
     return ref.update_mlp_ref(x, w, b, act)
 
 
@@ -36,7 +33,7 @@ def aggregate(blocks, cols, h_in, *, feat_block: int = 256,
               use_pallas: bool = True):
     if use_pallas:
         return _agg_pallas(blocks, cols, h_in, feat_block=feat_block,
-                           interpret=not _on_tpu())
+                           interpret=resolve_interpret())
     return jnp.asarray(ref.aggregate_dense_ref(blocks, cols, h_in))
 
 
@@ -44,7 +41,7 @@ def aggregate(blocks, cols, h_in, *, feat_block: int = 256,
 def flash_attention(q, k, v, *, causal: bool = True, use_pallas: bool = True):
     if use_pallas:
         return _flash_pallas(q, k, v, causal=causal,
-                             interpret=not _on_tpu())
+                             interpret=resolve_interpret())
     return ref.attention_ref(q, k, v, causal)
 
 
@@ -52,5 +49,5 @@ def flash_attention(q, k, v, *, causal: bool = True, use_pallas: bool = True):
 def wkv6(r, k, v, lw, u, *, chunk: int = 16, use_pallas: bool = True):
     if use_pallas:
         return _wkv6_pallas(r, k, v, lw, u, chunk=chunk,
-                            interpret=not _on_tpu())
+                            interpret=resolve_interpret())
     return ref.wkv6_ref(r, k, v, lw, u)

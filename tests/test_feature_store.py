@@ -18,16 +18,18 @@ def test_distdgl_residency_is_partition():
     part, fs = make("distdgl", "metis_like")
     for i in range(4):
         own = part.part_vertices(i)
-        assert fs.resident[i, own].all()
+        assert fs.is_resident(i, own).all()
         other = np.setdiff1d(np.arange(G.num_vertices), own)
-        assert not fs.resident[i, other].any()
+        assert not fs.is_resident(i, other).any()
+        assert fs.num_resident(i) == len(own)
 
 
 def test_pagraph_hot_vertices_replicated():
     part, fs = make("pagraph", "pagraph")
     hot = np.argsort(-G.out_degree())[:100]
     for i in range(4):
-        assert fs.resident[i, hot].all(), "hot vertices must be cached everywhere"
+        assert fs.is_resident(i, hot).all(), \
+            "hot vertices must be cached everywhere"
 
 
 def test_p3_feature_slices_cover():
@@ -35,7 +37,34 @@ def test_p3_feature_slices_cover():
     f = G.features.shape[1]
     widths = [len(range(*fs.feature_slice[i].indices(f))) for i in range(4)]
     assert sum(widths) >= f
-    assert fs.resident.all(), "p3: every row resident (sliced columns)"
+    for i in range(4):
+        assert fs.num_resident(i) == G.num_vertices, \
+            "p3: every row resident (sliced columns)"
+        assert fs.is_resident(i, np.arange(G.num_vertices)).all()
+
+
+def test_residency_memory_is_o_cache():
+    """The compact representation stores only the resident ids per device —
+    no O(p*V) boolean matrix anywhere on the store."""
+    part, fs = make("distdgl", "metis_like")
+    stored = sum(len(fs._resident_ids[i]) for i in range(4))
+    assert stored == sum(fs.num_resident(i) for i in range(4))
+    assert stored <= G.num_vertices  # partitions tile V: O(cache), not O(p*V)
+    # p3 stores no id arrays at all (flag only)
+    _, fs3 = make("p3", "p3")
+    assert sum(len(fs3._resident_ids[i]) for i in range(4)) == 0
+
+
+def test_is_resident_matches_naive_membership():
+    """searchsorted membership == python set membership on random probes."""
+    part, fs = make("pagraph", "pagraph")
+    rng = np.random.default_rng(7)
+    ids = rng.integers(0, G.num_vertices, 1000)
+    for dev in range(4):
+        res = set(fs.resident_ids(dev).tolist())
+        expect = np.array([int(v) in res for v in ids])
+        got = fs.is_resident(dev, ids)
+        assert (got == expect).all()
 
 
 def test_beta_accounting_conserves_rows():

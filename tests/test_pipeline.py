@@ -6,6 +6,8 @@ over random masked edge lists; (2) the prefetching executor preserves
 determinism — a pipelined epoch is bit-identical to a sequential one;
 (3) training end-to-end through the Pallas backend matches the reference
 backend; (4) idle-device fill batches carry zero weight."""
+import traceback
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -18,7 +20,10 @@ from repro.core.trainer import SyncGNNTrainer
 from repro.data.graphs import synthetic_graph
 from repro.gnn import models as gnn_models
 from repro.kernels.aggregate import (BLK, aggregate_blockcsr_vjp,
-                                     build_block_csr_pair)
+                                     aggregate_compact_vjp,
+                                     build_block_csr, build_block_csr_pair,
+                                     build_block_coo_pair, densify_tiles_np,
+                                     resolve_interpret)
 
 G = synthetic_graph(scale=9, edge_factor=6, feat_dim=16, num_classes=4)
 CFG = GNNModelConfig("graphsage", num_layers=2, hidden=16, fanouts=(4, 3),
@@ -99,6 +104,106 @@ def test_blockcsr_gradient_matches_reference():
 
 
 # ---------------------------------------------------------------------------
+# single-pass compact A/A^T builder == two independent dense builds
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,mask_p", [(0, 0.85), (1, 0.5), (2, 1.0),
+                                         (3, 0.0),   # fully masked batch
+                                         (4, 0.85)])
+def test_singlepass_pair_matches_two_dense_builds(seed, mask_p):
+    """build_block_coo_pair (one sort, both layouts) densifies bit-identical
+    to two independent build_block_csr calls — cols AND blocks, forward AND
+    transpose, including fully masked batches."""
+    rng = np.random.default_rng(seed)
+    n_src = int(rng.integers(30, 400))
+    n_dst = int(rng.integers(30, 300))
+    E = int(rng.integers(50, 3000))
+    es = rng.integers(0, n_src, E).astype(np.int32)
+    ed = rng.integers(0, n_dst, E).astype(np.int32)
+    em = rng.random(E) < mask_p
+    vals = rng.standard_normal(E).astype(np.float32)
+
+    b, c, n_src_pad = build_block_csr(es, ed, em, n_src, n_dst, vals)
+    n_dst_pad = b.shape[0] * BLK
+    bt, ct, _ = build_block_csr(ed, es, em, n_dst_pad, n_src_pad, vals)
+
+    coo = build_block_coo_pair(es, ed, em, n_src, n_dst, vals,
+                               max_blk=c.shape[1], max_blk_t=ct.shape[1])
+    assert coo["n_src_pad"] == n_src_pad
+    np.testing.assert_array_equal(coo["cols"], c)
+    np.testing.assert_array_equal(coo["cols_t"], ct)
+    db = densify_tiles_np(coo["tile_id"], coo["tile_off"], coo["val"],
+                          *c.shape)
+    dbt = densify_tiles_np(coo["tile_id_t"], coo["tile_off_t"], coo["val"],
+                           *ct.shape)
+    assert (db == b).all(), "forward blocks must be bit-identical"
+    assert (dbt == bt).all(), "transpose blocks must be bit-identical"
+
+
+def test_singlepass_pair_zero_edge_layer():
+    """A layer with no edges at all still yields well-formed (all-zero)
+    layouts of the pinned static capacities."""
+    es = np.empty(0, np.int32)
+    ed = np.empty(0, np.int32)
+    em = np.empty(0, bool)
+    coo = build_block_coo_pair(es, ed, em, 200, 150, max_blk=3, max_blk_t=2)
+    assert coo["cols"].shape == (2, 3) and not coo["cols"].any()
+    assert coo["cols_t"].shape == (2, 2) and not coo["cols_t"].any()
+    b, c, _ = build_block_csr(es, ed, em, 200, 150, max_blk=3)
+    db = densify_tiles_np(coo["tile_id"], coo["tile_off"], coo["val"], 2, 3)
+    assert (db == b).all() and not db.any()
+
+
+@pytest.mark.parametrize("kind", ["sum", "mean"])
+def test_compact_aggregate_matches_reference(kind):
+    """The on-device densify + SpMM over the compact layout reproduces the
+    reference aggregation — values and gradients."""
+    rng = np.random.default_rng(11)
+    n_src, n_dst, E, f = 220, 180, 1500, 32
+    es = rng.integers(0, n_src, E).astype(np.int32)
+    ed = rng.integers(0, n_dst, E).astype(np.int32)
+    em = rng.random(E) < 0.85
+    h = rng.standard_normal((n_src, f)).astype(np.float32)
+    vals = None
+    if kind == "mean":
+        deg = np.bincount(ed[em], minlength=n_dst)
+        vals = 1.0 / np.maximum(deg[ed], 1.0)
+    coo = build_block_coo_pair(es, ed, em, n_src, n_dst, vals)
+    w = jnp.asarray(rng.standard_normal((n_dst, f)).astype(np.float32))
+    layout = tuple(jnp.asarray(coo[k]) for k in
+                   ("tile_id", "tile_off", "val", "cols",
+                    "tile_id_t", "tile_off_t", "cols_t"))
+
+    def loss_compact(hh):
+        hp = jnp.pad(hh, ((0, coo["n_src_pad"] - n_src), (0, 0)))
+        out = aggregate_compact_vjp(*layout, hp)
+        return (out[:n_dst] * w).sum()
+
+    def loss_ref(hh):
+        agg = gnn_models.aggregate(hh, jnp.asarray(es), jnp.asarray(ed),
+                                   jnp.asarray(em), n_dst, kind)
+        return (agg * wj).sum()
+
+    wj = w
+    v1, g1 = jax.value_and_grad(loss_compact)(jnp.asarray(h))
+    v2, g2 = jax.value_and_grad(loss_ref)(jnp.asarray(h))
+    np.testing.assert_allclose(float(v1), float(v2), atol=1e-2, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_resolve_interpret_override():
+    """kernel_interpret config: None auto-detects the backend; True/False
+    pin the Pallas execution mode explicitly."""
+    auto = resolve_interpret(None)
+    assert auto == (jax.default_backend() != "tpu")
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    cfg = GNNModelConfig("graphsage", kernel_interpret=False)
+    assert resolve_interpret(cfg.kernel_interpret) is False
+
+
+# ---------------------------------------------------------------------------
 # prefetching executor
 # ---------------------------------------------------------------------------
 
@@ -117,6 +222,25 @@ def test_prefetch_propagates_producer_exception():
 
     with pytest.raises(RuntimeError, match="producer boom"):
         list(prefetch(range(10), bad, depth=2))
+
+
+def test_prefetch_exception_carries_worker_traceback():
+    """The re-raised producer exception must carry the worker's original
+    traceback: the frames inside the failing ``prepare`` stay visible, and
+    the formatted worker trace is attached to the exception object."""
+    def exploding_prepare(x):
+        if x == 2:
+            raise ValueError("boom in worker")
+        return x
+
+    with pytest.raises(ValueError, match="boom in worker") as ei:
+        list(prefetch(range(10), exploding_prepare, depth=2))
+    tb = "".join(traceback.format_exception(
+        ei.type, ei.value, ei.value.__traceback__))
+    assert "exploding_prepare" in tb, "worker frames lost on re-raise"
+    attached = (getattr(ei.value, "__notes__", None)
+                or [getattr(ei.value, "prefetch_worker_traceback", "")])
+    assert any("exploding_prepare" in n for n in attached)
 
 
 def test_prefetch_early_abandon_stops_worker():
