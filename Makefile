@@ -1,18 +1,29 @@
 PYTHONPATH := src
 
-.PHONY: verify test bench bench-smoke
+.PHONY: verify test lint bench bench-smoke
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+lint:
+	ruff check .
+	ruff format --check src/repro/core/sampler_pool.py \
+		benchmarks/check_regression.py tests/test_sampler_pool.py
 
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only pipeline
 
 # CI smoke: quick host-pipeline benchmark; emits BENCH_pipeline.json
-# (stage times, NVTPS, aggregate-path H2D bytes/iter) for the perf
-# trajectory across PRs.
+# (stage times, NVTPS, aggregate-path H2D bytes/iter, sampling-service
+# sweep) for the perf trajectory across PRs, then gates the fresh numbers
+# against the committed baseline (>25% NVTPS drop or ANY H2D bytes/iter
+# increase fails; on >=4-CPU hosts the workers=4 sampling speedup must
+# reach 1.5x).
 bench-smoke:
+	@cp BENCH_pipeline.json BENCH_pipeline.baseline.json 2>/dev/null || true
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only pipeline
+	PYTHONPATH=$(PYTHONPATH) python benchmarks/check_regression.py \
+		--baseline BENCH_pipeline.baseline.json --fresh BENCH_pipeline.json
 	@python -c "import json, os; \
 	d = json.load(open(os.environ.get('BENCH_PIPELINE_JSON', 'BENCH_pipeline.json'))); \
 	print('bench-smoke:', json.dumps(d['layout'], sort_keys=True))"

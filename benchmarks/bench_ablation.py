@@ -5,12 +5,9 @@ imbalanced partitions (the WB effect is a pure scheduling quantity and is
 exact on CPU). Platform component: the calibrated simulator turns the
 schedule + beta into full-scale NVTPS with the paper's bandwidth constants.
 """
-import numpy as np
-
 from repro.configs.gnn import GNNModelConfig, DATASETS
 from repro.data.graphs import scaled_dataset
 from repro.core.partition import metis_like_partition
-from repro.core.sampler import NeighborSampler
 from repro.core import scheduler as sched
 from repro.core.simulator import simulate_epoch, SimConfig
 from repro.core.trainer import SyncGNNTrainer

@@ -10,12 +10,9 @@ GPU baseline columns are the paper's published numbers (for the ratio only).
 """
 import time
 
-import numpy as np
-
 from repro.configs.gnn import GNNModelConfig, DATASETS
 from repro.data.graphs import scaled_dataset
 from repro.core.trainer import SyncGNNTrainer
-from repro.core.dse import FPGADSE, PlatformMetadata, minibatch_shape
 from repro.core.simulator import simulate_epoch, SimConfig
 
 # Paper Table 6 (GPU baseline, DistDGL rows, NVTPS)

@@ -1,7 +1,7 @@
 """Paper Fig. 7 + Table 5: DSE sweep over (n, m), utilization + NVTPS."""
 import numpy as np
 
-from repro.configs.gnn import GRAPHSAGE, GCN, DATASETS
+from repro.configs.gnn import GRAPHSAGE, DATASETS
 from repro.core.dse import FPGADSE, TPUDSE, minibatch_shape
 
 

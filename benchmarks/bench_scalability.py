@@ -20,4 +20,4 @@ def run(report, quick: bool = True):
     eff = [(r["p"], r["speedup"] / r["p"]) for r in curve]
     below = next((p for p, e in eff if e < 0.8), None)
     report("fig8_efficiency_knee_p", float(below or 24),
-           f"first p with <80% efficiency (paper: ~12.8 serviceable)")
+           "first p with <80% efficiency (paper: ~12.8 serviceable)")

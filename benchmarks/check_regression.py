@@ -1,0 +1,121 @@
+"""Bench regression gate: compare a fresh BENCH_pipeline.json against the
+committed baseline and fail the build on a real performance regression.
+
+Checks (exit code 1 on any failure):
+
+* NVTPS — the headline epoch throughput (the better of the sequential /
+  pipelined measurements, which damps shared-runner noise) must not drop
+  more than ``--nvtps-tolerance`` (default 25%) below the baseline.
+* H2D bytes/iter — the aggregate-path host->device payload is DETERMINISTIC
+  for a config, so ANY increase over the baseline fails.
+* Sampling-service scaling — on hosts with >= 4 CPUs the workers=4 vs
+  workers=1 sampled-batches/sec speedup must reach ``--pool-speedup``
+  (default 1.5x); smaller hosts cannot physically show 4-way process
+  parallelism, so they only sanity-check that the best worker count beats
+  workers=1 at all (>= 1.02x).
+
+A missing or schema-incompatible baseline passes with a warning (first run
+of a new schema), so the gate never blocks the PR that introduces it.
+
+Usage:
+  python benchmarks/check_regression.py --baseline old.json --fresh new.json
+"""
+import argparse
+import json
+import os
+import sys
+
+
+def _get(d: dict, path: str):
+    for k in path.split("."):
+        if not isinstance(d, dict) or k not in d:
+            return None
+        d = d[k]
+    return d
+
+
+def compare(baseline: dict, fresh: dict, nvtps_tolerance: float,
+            pool_speedup: float) -> list:
+    """Returns a list of failure strings (empty = gate passes)."""
+    failures = []
+
+    # NVTPS is absolute wall-clock throughput, so the committed baseline is
+    # only comparable when it was measured on the same host class — gate it
+    # only when the recorded CPU counts match (the H2D and scaling checks
+    # below are hardware-independent and always apply).
+    base_cpus = _get(baseline, "sampler_pool.host_cpu_count")
+    fresh_cpus = _get(fresh, "sampler_pool.host_cpu_count")
+    base_nvtps = max(_get(baseline, "epoch.nvtps_sequential") or 0.0,
+                     _get(baseline, "epoch.nvtps_pipelined") or 0.0)
+    fresh_nvtps = max(_get(fresh, "epoch.nvtps_sequential") or 0.0,
+                      _get(fresh, "epoch.nvtps_pipelined") or 0.0)
+    if base_nvtps > 0 and base_cpus == fresh_cpus:
+        floor = base_nvtps * (1.0 - nvtps_tolerance)
+        if fresh_nvtps < floor:
+            failures.append(
+                f"NVTPS regression: {fresh_nvtps:.0f} < {floor:.0f} "
+                f"(baseline {base_nvtps:.0f} - {nvtps_tolerance:.0%})")
+    elif base_nvtps > 0:
+        print(f"check_regression: NVTPS check skipped (baseline host has "
+              f"{base_cpus} CPUs, this host {fresh_cpus})")
+
+    base_h2d = _get(baseline, "layout.h2d_bytes_per_iter_compact")
+    fresh_h2d = _get(fresh, "layout.h2d_bytes_per_iter_compact")
+    if base_h2d is not None and fresh_h2d is not None \
+            and fresh_h2d > base_h2d:
+        failures.append(
+            f"H2D bytes/iter increased: {fresh_h2d} > baseline {base_h2d}")
+
+    cpus = _get(fresh, "sampler_pool.host_cpu_count") or 0
+    s41 = _get(fresh, "sampler_pool.speedup_4v1")
+    sbest = _get(fresh, "sampler_pool.speedup_best")
+    if s41 is not None:
+        if cpus >= 4 and s41 < pool_speedup:
+            failures.append(
+                f"sampling-service scaling: workers=4 vs 1 speedup "
+                f"{s41:.2f} < required {pool_speedup:.2f} "
+                f"(host has {cpus} CPUs)")
+        elif cpus < 4 and (sbest or 0.0) < 1.02:
+            failures.append(
+                f"sampling-service scaling: best-workers speedup "
+                f"{sbest:.2f} shows no parallelism on a {cpus}-CPU host")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="BENCH_pipeline.baseline.json")
+    ap.add_argument("--fresh", default="BENCH_pipeline.json")
+    ap.add_argument("--nvtps-tolerance", type=float, default=0.25)
+    ap.add_argument("--pool-speedup", type=float, default=1.5)
+    args = ap.parse_args()
+
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+    if not os.path.exists(args.baseline):
+        print(f"check_regression: no baseline at {args.baseline}; "
+              f"PASS (first run)")
+        return 0
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    if baseline.get("schema") != fresh.get("schema"):
+        print(f"check_regression: baseline schema "
+              f"{baseline.get('schema')} != fresh {fresh.get('schema')}; "
+              f"PASS (schema migration)")
+        return 0
+
+    failures = compare(baseline, fresh, args.nvtps_tolerance,
+                       args.pool_speedup)
+    if failures:
+        for f in failures:
+            print(f"check_regression: FAIL: {f}")
+        return 1
+    print(f"check_regression: PASS "
+          f"(nvtps {max(_get(fresh, 'epoch.nvtps_sequential') or 0, _get(fresh, 'epoch.nvtps_pipelined') or 0):.0f}, "
+          f"h2d {_get(fresh, 'layout.h2d_bytes_per_iter_compact')} B/iter, "
+          f"pool speedup_4v1 {_get(fresh, 'sampler_pool.speedup_4v1'):.2f})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,7 +6,6 @@ Prints ``name,us_per_call,derived`` CSV lines (one per measurement).
   PYTHONPATH=src python -m benchmarks.run [--full] [--only dse,ablation,...]
 """
 import argparse
-import sys
 import time
 
 

@@ -13,7 +13,7 @@ from __future__ import annotations
 import json
 import os
 import threading
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import numpy as np

@@ -8,8 +8,8 @@ CPU smoke tests). The dry-run instantiates FULL configs only through
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Optional
 
 
 # ---------------------------------------------------------------------------

@@ -8,7 +8,7 @@ the FULL stats for the analytic DSE / simulator benchmarks.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 
@@ -31,6 +31,16 @@ class GNNModelConfig:
     # TPU backend, interpret mode elsewhere); True/False pins it — False
     # forces compilation (hardware validation), True forces the interpreter.
     kernel_interpret: Optional[bool] = None
+    # Host sampling service (paper §4.2: sampling must keep p accelerators
+    # fed, Eq. 5). 0 = sample in-process (single thread); N >= 1 = spawn N
+    # sampler worker processes over a shared-memory graph store
+    # (core/sampler_pool.py). Bit-identical training for every value.
+    num_sampler_workers: int = 0
+    # How sampled mini-batches map to devices within a synchronous
+    # iteration: "round_robin" keeps the scheduler's static assignment;
+    # "load" re-assigns by the per-batch work estimate (vertices + edges
+    # traversed, Eq. 5) — heaviest batch to the least-loaded device.
+    balance_policy: str = "round_robin"
 
 
 @dataclass(frozen=True)

@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import importlib
-from typing import Callable
 
 from repro.configs.base import ArchConfig, SHAPES, ShapeSpec
 

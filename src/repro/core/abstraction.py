@@ -21,7 +21,6 @@ DSE engine and wires the software pipeline (sampler + scheduler + trainer).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import List, Optional
 
 import numpy as np
@@ -30,7 +29,7 @@ from repro.configs.gnn import GNNModelConfig, GraphDatasetConfig
 from repro.data.graphs import Graph
 from repro.core.dse import (FPGADSE, TPUDSE, PlatformMetadata, TPUMetadata,
                             minibatch_shape)
-from repro.core.trainer import SyncGNNTrainer, ALGORITHMS
+from repro.core.trainer import SyncGNNTrainer
 from repro.checkpoint.checkpointing import Checkpointer
 
 

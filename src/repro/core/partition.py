@@ -19,7 +19,6 @@ cover); feature placement is separate (feature_store.py).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import numpy as np
 

@@ -34,7 +34,7 @@ import queue
 import threading
 import time
 import traceback
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Iterable, Iterator, Optional
 
 _SENTINEL = object()
@@ -138,3 +138,41 @@ def prefetch(items: Iterable[Any], prepare: Callable[[Any], Any],
              ) -> Iterator[Any]:
     """Functional shorthand: ``PrefetchExecutor(prepare, depth).run(items)``."""
     return PrefetchExecutor(prepare, depth, stats).run(items)
+
+
+class ReorderBuffer:
+    """Sequence-numbered reorder buffer: out-of-order completions in,
+    submission-order results out.
+
+    The multi-process sampling service completes batches in whatever order
+    its workers finish them; training consumes them in schedule order so a
+    pipelined multi-worker epoch stays BIT-IDENTICAL to the single-process
+    path. ``put(seq, item)`` accepts any completion; ``pop()`` returns the
+    next in-order item or None if it has not arrived yet. Duplicate or
+    already-consumed sequence numbers are rejected loudly — they would mean
+    a worker double-executed a task."""
+
+    def __init__(self, first_seq: int = 0):
+        self._next = first_seq
+        self._pending: dict[int, Any] = {}
+
+    def put(self, seq: int, item: Any) -> None:
+        if seq < self._next or seq in self._pending:
+            raise ValueError(f"duplicate completion for seq {seq}")
+        self._pending[seq] = item
+
+    def ready(self) -> bool:
+        return self._next in self._pending
+
+    def pop(self) -> Optional[Any]:
+        """Next in-order item, or None if it has not arrived. Membership is
+        checked explicitly so a legitimately-None ITEM still advances the
+        sequence instead of wedging the buffer."""
+        if self._next not in self._pending:
+            return None
+        item = self._pending.pop(self._next)
+        self._next += 1
+        return item
+
+    def __len__(self) -> int:
+        return len(self._pending)

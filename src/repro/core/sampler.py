@@ -53,6 +53,17 @@ class MiniBatch:
         return int(sum(m.sum() for m in self.node_mask)
                    + len(self.targets))
 
+    def edges_traversed(self) -> int:
+        """Real (unpadded) sampled edges across all layers."""
+        return int(sum(m.sum() for m in self.edge_mask))
+
+    def work_estimate(self) -> float:
+        """Per-batch load estimate for the dynamic work balancer (paper
+        Eq. 5): the device-side step cost scales with the vertices whose
+        features are loaded/updated plus the edges the aggregation
+        traverses."""
+        return float(self.vertices_traversed() + self.edges_traversed())
+
 
 def layer_capacities(cfg: GNNModelConfig) -> Tuple[List[int], List[int]]:
     """Static padded sizes per layer: node caps + edge caps (fanout bound).
@@ -67,7 +78,17 @@ def layer_capacities(cfg: GNNModelConfig) -> Tuple[List[int], List[int]]:
 
 
 class NeighborSampler:
-    """Samples mini-batches from one graph partition's train vertices."""
+    """Samples mini-batches from one graph partition's train vertices.
+
+    RNG discipline: every batch draws from a COUNTER-BASED stream derived
+    from ``(seed, partition_id, epoch, batch_index)`` via
+    ``np.random.SeedSequence`` — no mutable generator state is threaded
+    between batches. Batch ``(e, i)`` is therefore a pure function of the
+    sampler's construction arguments, so ANY process (the in-process path,
+    the prefetch thread, or a ``SamplerPool`` worker over the shared-memory
+    graph) materializes the bit-identical batch, in any order. The epoch
+    permutation has its own stream (tag 0; batches use tag ``index + 1``).
+    """
 
     def __init__(self, graph: Graph, cfg: GNNModelConfig,
                  train_ids: np.ndarray, partition_id: int = 0, seed: int = 0):
@@ -75,52 +96,104 @@ class NeighborSampler:
         self.cfg = cfg
         self.train_ids = np.asarray(train_ids, np.int32)
         self.partition_id = partition_id
-        self.rng = np.random.default_rng(seed + 7919 * partition_id)
+        self.seed = seed
         self.node_caps, self.edge_caps = layer_capacities(cfg)
-        self._epoch_order: np.ndarray = np.empty(0, np.int32)
+        self.epoch = 0
+        self._epoch_order: np.ndarray = self._permutation(0)
         self._cursor = 0
         self._seq = 0
-        self.reset_epoch()
+        self._perm_cache: Tuple[int, np.ndarray] = (0, self._epoch_order)
+
+    # -- deterministic streams -------------------------------------------------
+    def _stream(self, epoch: int, tag: int) -> np.random.Generator:
+        """Counter-based generator for (epoch, tag); tag 0 = permutation,
+        tag i+1 = batch i. Independent of call order and process."""
+        return np.random.default_rng(np.random.SeedSequence(
+            (self.seed, self.partition_id, epoch, tag)))
+
+    def _permutation(self, epoch: int) -> np.ndarray:
+        return self._stream(epoch, 0).permutation(self.train_ids)
 
     # -- epoch bookkeeping ----------------------------------------------------
     def reset_epoch(self) -> None:
-        self._epoch_order = self.rng.permutation(self.train_ids)
+        self.epoch += 1
+        self._epoch_order = self._permutation(self.epoch)
+        self._perm_cache = (self.epoch, self._epoch_order)
         self._cursor = 0
 
     def batches_remaining(self) -> int:
         return (len(self._epoch_order) - self._cursor
                 + self.cfg.batch_targets - 1) // self.cfg.batch_targets
 
+    def epoch_batches(self, epoch: int | None = None) -> int:
+        """Total batches one full epoch yields (independent of the cursor)."""
+        del epoch  # every epoch permutes the same train set
+        return (len(self.train_ids) + self.cfg.batch_targets - 1) \
+            // self.cfg.batch_targets
+
     # -- core -----------------------------------------------------------------
-    def _sample_layer(self, frontier: np.ndarray, fanout: int
+    def _sample_layer(self, frontier: np.ndarray, fanout: int,
+                      rng: np.random.Generator
                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """For each dst in frontier sample <=fanout distinct in-neighbors.
         Returns (src_global, dst_local, uniq_src). Fully vectorized over the
         CSR arrays (data/graphs.sample_in_neighbors) — the per-vertex Python
         loop this replaces was the host pipeline's bottleneck stage."""
         src, dst = sample_in_neighbors(self.g.indptr, self.g.indices,
-                                       frontier, fanout, self.rng)
+                                       frontier, fanout, rng)
         uniq = np.unique(np.concatenate([frontier.astype(np.int32), src]))
         return src, dst, uniq
+
+    def batch_at(self, epoch: int, index: int) -> MiniBatch:
+        """Materialize epoch ``epoch``'s batch ``index`` — location-
+        independent (see class docstring). ``seq_no`` carries ``index``."""
+        cfg = self.cfg
+        cached_epoch, cached_order = self._perm_cache
+        if epoch == cached_epoch:
+            order = cached_order
+        else:
+            order = self._permutation(epoch)
+            self._perm_cache = (epoch, order)
+        lo = index * cfg.batch_targets
+        if lo >= len(order) or index < 0:
+            raise IndexError(
+                f"batch index {index} out of range for epoch of "
+                f"{self.epoch_batches()} batches (partition "
+                f"{self.partition_id})")
+        targets = order[lo:lo + cfg.batch_targets]
+        return self._materialize(targets, self._stream(epoch, index + 1),
+                                 seq_no=index)
 
     def next_batch(self, targets: np.ndarray | None = None) -> MiniBatch:
         cfg = self.cfg
         if targets is None:
             if self._cursor >= len(self._epoch_order):
                 self.reset_epoch()
-            targets = self._epoch_order[self._cursor:self._cursor + cfg.batch_targets]
+            index = self._cursor // cfg.batch_targets
             self._cursor += cfg.batch_targets
+            mb = self.batch_at(self.epoch, index)
+        else:
+            mb = self._materialize(np.asarray(targets, np.int32),
+                                   self._stream(self.epoch, self._seq + 1),
+                                   seq_no=self._seq)
+        mb.seq_no = self._seq
+        self._seq += 1
+        return mb
+
+    def _materialize(self, targets: np.ndarray, rng: np.random.Generator,
+                     seq_no: int = 0) -> MiniBatch:
+        cfg = self.cfg
         targets = np.asarray(targets, np.int32)
         if len(targets) < cfg.batch_targets:  # pad tail batch
-            pad = self.rng.choice(self.train_ids,
-                                  cfg.batch_targets - len(targets))
+            pad = rng.choice(self.train_ids,
+                             cfg.batch_targets - len(targets))
             targets = np.concatenate([targets, pad.astype(np.int32)])
 
         # sample from the top layer down
         frontiers = [targets]
         edges = []
         for fan in cfg.fanouts:
-            src, dst, uniq = self._sample_layer(frontiers[-1], fan)
+            src, dst, uniq = self._sample_layer(frontiers[-1], fan, rng)
             edges.append((src, dst))
             frontiers.append(uniq)
         # reverse into bottom-up order
@@ -160,8 +233,6 @@ class NeighborSampler:
             si[:kk] = np.searchsorted(base, upper[:kk]).astype(np.int32)
             self_idx.append(si)
 
-        mb = MiniBatch(nodes, node_mask, edge_src, edge_dst, edge_mask,
-                       self_idx, targets, self.g.labels[targets],
-                       self.partition_id, self._seq)
-        self._seq += 1
-        return mb
+        return MiniBatch(nodes, node_mask, edge_src, edge_dst, edge_mask,
+                         self_idx, targets, self.g.labels[targets],
+                         self.partition_id, seq_no)

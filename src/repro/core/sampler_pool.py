@@ -1,0 +1,409 @@
+"""Multi-process sampling service over a shared-memory graph store.
+
+HitGNN's software generator (paper §4.2) runs mini-batch sampling on the
+host CPU and must keep p accelerators fed (Eq. 5). One Python thread cannot:
+once the compact stage-2 path made device prep cheap, the single-threaded
+sampler became the pipeline's rate limiter. This module scales that stage
+the way DistDGL-style deployments do — N sampler worker PROCESSES over one
+shared in-memory topology:
+
+  * the parent copies the graph ONCE into ``multiprocessing.shared_memory``
+    segments (``data/graphs.Graph.to_shared``); each worker attaches
+    zero-copy views (``Graph.from_shared``) — no per-worker topology or
+    feature replication, O(graph) total host memory regardless of N;
+  * each worker runs the vectorized layered sampler AND the compact
+    stage-2b block-CSR layout build (``kernels/layout.build_layer_layouts``)
+    — both pure numpy, so workers never import jax — taking the two most
+    expensive host stages off the training process entirely;
+  * tasks are ``(seq, partition, epoch, batch_index)`` tuples. Batches are
+    pure functions of those coordinates (the sampler's counter-based RNG
+    streams), so ANY worker may execute ANY task and the result is
+    bit-identical to the single-process path;
+  * completions flow through a sequence-numbered
+    :class:`~repro.core.pipeline.ReorderBuffer`, so the consumer sees
+    batches in exact submission order no matter which worker finished first.
+
+Results come back through a shared-memory RING, not the pickle queue: every
+payload of a fixed sampler config has STATIC shapes (the same property that
+gives one compiled executable per config), so a :class:`PayloadCodec` packs
+each batch into a fixed-size slot of a preallocated segment and the result
+queue carries only ``(seq, slot, meta)`` — the consumer pays ONE memcpy per
+batch instead of pickling ~1 MB of arrays through a pipe, which would
+otherwise dominate the per-batch cost and cancel the parallel speedup.
+
+Failure behavior mirrors ``PrefetchExecutor``: a worker exception re-raises
+in the consumer at the point of ``fetch()`` with the worker's formatted
+traceback attached (``add_note`` on py311+, ``sampler_worker_traceback``
+otherwise). The pool is a context manager; shared segments are closed AND
+unlinked on every exit path, including error paths and KeyboardInterrupt.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import pickle
+import traceback
+from multiprocessing import shared_memory
+from typing import Any, Iterable, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.gnn import GNNModelConfig
+from repro.core.pipeline import ReorderBuffer
+from repro.core.sampler import MiniBatch, NeighborSampler, layer_capacities
+from repro.data.graphs import Graph, SharedGraphSpec
+from repro.kernels.layout import BLK, build_layer_layouts
+
+Task = Tuple[int, int, int]  # (partition, epoch, batch_index)
+
+
+class PayloadCodec:
+    """Fixed layout of one sampled payload (MiniBatch + optional stage-2b
+    block-CSR arrays) inside a shared-memory ring slot.
+
+    Every array of a fixed sampler config has a static padded shape, so the
+    byte layout is a pure function of ``(cfg, blk_caps)`` — parent and
+    workers construct identical codecs independently. Offsets are 8-byte
+    aligned; ``decode`` copies the slot ONCE into private memory and hands
+    out zero-copy views over that copy, so the slot recycles immediately."""
+
+    def __init__(self, cfg: GNNModelConfig, blk_caps: Optional[list]):
+        n_caps, e_caps = layer_capacities(cfg)
+        L = cfg.num_layers
+        spec: List[Tuple[str, int, tuple, np.dtype]] = []
+        for l, n in enumerate(n_caps):
+            spec.append(("nodes", l, (n,), np.dtype(np.int32)))
+            spec.append(("node_mask", l, (n,), np.dtype(bool)))
+        for l, e in enumerate(e_caps):
+            spec.append(("edge_src", l, (e,), np.dtype(np.int32)))
+            spec.append(("edge_dst", l, (e,), np.dtype(np.int32)))
+            spec.append(("edge_mask", l, (e,), np.dtype(bool)))
+        for l in range(L):
+            spec.append(("self_idx", l, (n_caps[l + 1],), np.dtype(np.int32)))
+        spec.append(("targets", -1, (cfg.batch_targets,), np.dtype(np.int32)))
+        spec.append(("labels", -1, (cfg.batch_targets,), np.dtype(np.int32)))
+        self.has_layout = blk_caps is not None
+        if blk_caps is not None:
+            for l, (n_src, n_dst, max_blk, max_blk_t, e_cap) in \
+                    enumerate(blk_caps):
+                n_srcb = (n_src + BLK - 1) // BLK
+                n_dstb = (n_dst + BLK - 1) // BLK
+                spec.append(("agg_tile_id", l, (e_cap,), np.dtype(np.int32)))
+                spec.append(("agg_tile_off", l, (e_cap,), np.dtype(np.int32)))
+                spec.append(("agg_val", l, (e_cap,), np.dtype(np.float32)))
+                spec.append(("agg_cols", l, (n_dstb, max_blk),
+                             np.dtype(np.int32)))
+                spec.append(("agg_tile_id_t", l, (e_cap,),
+                             np.dtype(np.int32)))
+                spec.append(("agg_tile_off_t", l, (e_cap,),
+                             np.dtype(np.int32)))
+                spec.append(("agg_cols_t", l, (n_srcb, max_blk_t),
+                             np.dtype(np.int32)))
+        self.entries = []
+        off = 0
+        for key, l, shape, dtype in spec:
+            self.entries.append((key, l, shape, dtype, off))
+            size = int(np.prod(shape)) * dtype.itemsize
+            off += (size + 7) & ~7  # keep every entry 8-byte aligned
+        self.nbytes = off
+        self.num_layers = L
+
+    def encode(self, mb: MiniBatch, layout: Optional[dict],
+               buf, base: int) -> None:
+        for key, l, shape, dtype, off in self.entries:
+            if key.startswith("agg_"):
+                arr = layout[key][l]
+            elif l < 0:
+                arr = getattr(mb, key)
+            else:
+                arr = getattr(mb, key)[l]
+            np.ndarray(shape, dtype, buffer=buf,
+                       offset=base + off)[...] = arr
+
+    def decode(self, buf, base: int, partition_id: int,
+               seq_no: int) -> Tuple[MiniBatch, Optional[dict]]:
+        private = np.empty(self.nbytes, np.uint8)
+        private[:] = np.ndarray((self.nbytes,), np.uint8, buffer=buf,
+                                offset=base)
+        fields: dict = {k: [None] * self.num_layers
+                        for k in ("nodes", "node_mask", "edge_src",
+                                  "edge_dst", "edge_mask", "self_idx")}
+        fields["nodes"].append(None)
+        fields["node_mask"].append(None)
+        layout: Optional[dict] = None
+        if self.has_layout:
+            layout = {k: [None] * self.num_layers
+                      for k in ("agg_tile_id", "agg_tile_off", "agg_val",
+                                "agg_cols", "agg_tile_id_t",
+                                "agg_tile_off_t", "agg_cols_t")}
+        scalars = {}
+        for key, l, shape, dtype, off in self.entries:
+            size = int(np.prod(shape)) * dtype.itemsize
+            arr = private[off:off + size].view(dtype).reshape(shape)
+            if key.startswith("agg_"):
+                layout[key][l] = arr
+            elif l < 0:
+                scalars[key] = arr
+            else:
+                fields[key][l] = arr
+        mb = MiniBatch(fields["nodes"], fields["node_mask"],
+                       fields["edge_src"], fields["edge_dst"],
+                       fields["edge_mask"], fields["self_idx"],
+                       scalars["targets"], scalars["labels"],
+                       partition_id, seq_no)
+        return mb, layout
+
+
+def _picklable_exc(e: BaseException) -> BaseException:
+    """The original exception object when it survives pickling, else a
+    RuntimeError carrying its repr (mp.Queue pickles in a feeder thread,
+    where a failure would vanish and hang the consumer)."""
+    try:
+        pickle.dumps(e)
+        return e
+    except Exception:
+        return RuntimeError(f"{type(e).__name__}: {e}")
+
+
+def _worker_main(worker_id: int, spec: SharedGraphSpec, cfg: GNNModelConfig,
+                 train_ids: List[np.ndarray], seed: int,
+                 agg_kind: Optional[str], blk_caps: Optional[list],
+                 ring_name: str, task_q: Any, free_q: Any,
+                 result_q: Any) -> None:
+    """Worker loop: attach the shared graph + result ring, serve tasks until
+    the ``None`` sentinel. Imports only numpy-side modules (sampler + layout
+    builders) — never jax."""
+    graph = Graph.from_shared(spec)
+    codec = PayloadCodec(cfg, blk_caps)
+    ring = shared_memory.SharedMemory(name=ring_name)
+    samplers = [NeighborSampler(graph, cfg, ids, p, seed)
+                for p, ids in enumerate(train_ids)]
+    try:
+        while True:
+            task = task_q.get()
+            if task is None:
+                return
+            seq, part, epoch, index = task
+            try:
+                mb = samplers[part].batch_at(epoch, index)
+                layout = None
+                if blk_caps is not None:
+                    layout = build_layer_layouts(
+                        mb.edge_src, mb.edge_dst, mb.edge_mask, blk_caps,
+                        agg_kind)
+                # acquire a ring slot only once the batch is ready: a worker
+                # never sits on a slot while it computes
+                slot = free_q.get()
+                codec.encode(mb, layout, ring.buf, slot * codec.nbytes)
+                result_q.put((seq, "ok",
+                              (slot, part, index, mb.work_estimate())))
+            except BaseException as e:  # surfaced at the consumer's fetch()
+                result_q.put((seq, "error",
+                              (_picklable_exc(e), traceback.format_exc())))
+    finally:
+        ring.close()
+
+
+class SamplerPool:
+    """N sampler worker processes over one shared-memory graph.
+
+    ``submit(partition, epoch, index)`` enqueues a batch task and returns
+    its sequence number; ``fetch()`` returns payloads in exact submission
+    order (reorder buffer). A payload is a dict with keys ``minibatch``
+    (the :class:`MiniBatch`), ``layout`` (the stage-2b compact block-CSR
+    arrays, or None when no capacities were given) and ``load`` (the
+    Eq. 5 work estimate feeding the dynamic device balancer).
+
+    Use as a context manager — or call :meth:`close` — to tear down worker
+    processes and release/unlink the shared-memory segments. ``close`` is
+    idempotent and runs on error paths and KeyboardInterrupt alike.
+    """
+
+    def __init__(self, graph: Graph, cfg: GNNModelConfig,
+                 train_ids_per_partition: Sequence[np.ndarray],
+                 seed: int = 0, num_workers: int = 2,
+                 agg_kind: Optional[str] = None,
+                 blk_caps: Optional[list] = None,
+                 num_slots: Optional[int] = None,
+                 start_method: str = "spawn",
+                 shared: Optional["object"] = None):
+        if num_workers < 1:
+            raise ValueError("num_workers must be >= 1")
+        self.num_workers = num_workers
+        self._closed = False
+        self._ring: Optional[shared_memory.SharedMemory] = None
+        # `shared` lets several pools over the SAME graph reuse one set of
+        # segments (O(graph) shm total, not O(pools)); the caller then owns
+        # its lifetime and this pool never unlinks it.
+        self._owns_shared = shared is None
+        self._shared = graph.to_shared() if shared is None else shared
+        self._codec = PayloadCodec(cfg, blk_caps)
+        self.num_slots = (num_slots if num_slots is not None
+                          else 2 * num_workers + 2)
+        ctx = mp.get_context(start_method)
+        # SimpleQueues, deliberately: mp.Queue hands every put to a feeder
+        # THREAD that must win the producer's GIL to pickle — on a busy
+        # host that adds ~ms latency per message and throttles the whole
+        # service. SimpleQueue sends synchronously in the caller; all
+        # messages here are tiny tuples (the payloads travel via the ring).
+        self._task_q = ctx.SimpleQueue()
+        self._free_q = ctx.SimpleQueue()
+        self._result_q = ctx.SimpleQueue()
+        self._rob = ReorderBuffer()
+        self._seq = 0
+        self._outstanding = 0
+        ids = [np.asarray(t, np.int32) for t in train_ids_per_partition]
+        try:
+            self._ring = shared_memory.SharedMemory(
+                create=True, size=max(1, self.num_slots * self._codec.nbytes))
+            for s in range(self.num_slots):
+                self._free_q.put(s)
+            self._procs = [
+                ctx.Process(target=_worker_main, name=f"hitgnn-sampler-{w}",
+                            args=(w, self._shared.spec, cfg, ids, seed,
+                                  agg_kind, blk_caps, self._ring.name,
+                                  self._task_q, self._free_q,
+                                  self._result_q),
+                            daemon=True)
+                for w in range(num_workers)]
+            for p in self._procs:
+                p.start()
+        except BaseException:
+            self.close()
+            raise
+
+    # -- task flow -----------------------------------------------------------
+    @property
+    def outstanding(self) -> int:
+        """Tasks submitted but not yet returned by ``fetch``."""
+        return self._outstanding
+
+    def submit(self, partition: int, epoch: int, index: int) -> int:
+        if self._closed:
+            raise RuntimeError("SamplerPool is closed")
+        seq = self._seq
+        self._seq += 1
+        self._task_q.put((seq, partition, epoch, index))
+        self._outstanding += 1
+        return seq
+
+    def fetch(self, timeout: float = 60.0) -> dict:
+        """Next payload in submission order; blocks until it arrives.
+
+        Worker exceptions re-raise HERE with the worker traceback attached;
+        a worker that died without reporting (segfault, kill) raises
+        RuntimeError naming its exit code."""
+        if self._outstanding <= 0:
+            raise RuntimeError("fetch() with no outstanding tasks")
+        deadline = timeout
+        while True:
+            item = self._rob.pop()
+            if item is not None:
+                self._outstanding -= 1
+                kind, payload = item
+                if kind == "error":
+                    exc, worker_tb = payload
+                    note = "sampler worker traceback:\n" + worker_tb
+                    if hasattr(exc, "add_note"):  # py311+
+                        exc.add_note(note)
+                    else:
+                        exc.sampler_worker_traceback = worker_tb
+                    raise exc
+                return payload
+            # SimpleQueue has no get(timeout); poll the read end so worker
+            # death is still detected while blocked
+            if not self._result_q._reader.poll(0.2):
+                deadline -= 0.2
+                self._check_workers()
+                if deadline <= 0:
+                    raise TimeoutError(
+                        f"no sampler result within {timeout:.0f}s "
+                        f"({self._outstanding} outstanding)")
+                continue
+            seq, kind, payload = self._result_q.get()
+            if kind == "ok":
+                # decode ON ARRIVAL (one memcpy out of the ring) and recycle
+                # the slot immediately, so workers never starve for slots
+                # while the consumer waits on an earlier sequence number
+                slot, part, index, load = payload
+                mb, layout = self._codec.decode(
+                    self._ring.buf, slot * self._codec.nbytes, part, index)
+                self._free_q.put(slot)
+                payload = {"minibatch": mb, "layout": layout, "load": load}
+            self._rob.put(seq, (kind, payload))
+
+    def map_tasks(self, tasks: Iterable[Task],
+                  window: Optional[int] = None) -> Iterator[dict]:
+        """Run ``(partition, epoch, index)`` tasks with a bounded submission
+        window, yielding payloads in task order. The window (default
+        ``4 * num_workers``) caps staged-but-unconsumed batches, bounding
+        host memory exactly like the prefetch executor's queue depth."""
+        window = window if window is not None else 4 * self.num_workers
+        it = iter(tasks)
+        exhausted = False
+        while True:
+            while not exhausted and self._outstanding < window:
+                try:
+                    t = next(it)
+                except StopIteration:
+                    exhausted = True
+                    break
+                self.submit(*t)
+            if exhausted and self._outstanding == 0:
+                return
+            yield self.fetch()
+
+    def _check_workers(self) -> None:
+        dead = [(p.name, p.exitcode) for p in self._procs
+                if p.exitcode is not None]
+        if dead:
+            raise RuntimeError(
+                f"sampler worker(s) died without reporting a result: {dead}")
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self) -> None:
+        """Idempotent teardown: stop workers, then close AND unlink the
+        shared-memory segments. Safe on error paths — runs from ``__exit__``
+        for any exception type, including KeyboardInterrupt."""
+        if self._closed:
+            return
+        self._closed = True
+        procs = getattr(self, "_procs", [])
+        try:
+            for _ in procs:
+                self._task_q.put(None)
+        except Exception:
+            pass
+        for p in procs:
+            p.join(timeout=3.0)
+        for p in procs:
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=3.0)
+        for q in (self._task_q, self._free_q, self._result_q):
+            try:
+                q.close()
+            except Exception:
+                pass
+        if self._ring is not None:
+            try:
+                self._ring.close()
+            except Exception:
+                pass
+            try:
+                self._ring.unlink()
+            except FileNotFoundError:
+                pass
+        if self._owns_shared:
+            self._shared.close(unlink=True)
+
+    def __enter__(self) -> "SamplerPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass

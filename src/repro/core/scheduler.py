@@ -16,10 +16,8 @@ queue simply drains to the others at batch granularity.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Iterator, List, Optional, Sequence
-
-import numpy as np
+from dataclasses import dataclass
+from typing import Iterator, List, Sequence
 
 
 @dataclass
@@ -103,6 +101,56 @@ def iterations(schedule: List[Assignment]) -> Iterator[List[Assignment]]:
         buckets[a.iteration].append(a)
     for b in buckets:
         yield b
+
+
+BALANCE_POLICIES = ("round_robin", "load")
+
+
+class LoadBalancer:
+    """Dynamic per-device work balancer (paper §4.2, Eq. 5).
+
+    The two-stage scheduler fixes WHICH batches run together in a
+    synchronous iteration; this balancer decides WHERE each lands once its
+    sampled size is known. ``"round_robin"`` keeps the schedule's static
+    device assignment. ``"load"`` runs greedy LPT over the epoch's running
+    per-device load totals: the iteration's heaviest batch (by the Eq. 5
+    estimate — vertices + edges traversed) goes to the least-loaded device,
+    deterministic ties broken by index, so the assignment is a pure function
+    of the batch stream and stays identical for any sampler-worker count.
+    """
+
+    def __init__(self, num_devices: int, policy: str = "round_robin"):
+        if policy not in BALANCE_POLICIES:
+            raise ValueError(f"unknown balance_policy {policy!r}; "
+                             f"expected one of {BALANCE_POLICIES}")
+        self.num_devices = num_devices
+        self.policy = policy
+        self.load = [0.0] * num_devices
+
+    def assign(self, assignments: Sequence[Assignment],
+               loads: Sequence[float]) -> List[int]:
+        """Device id per assignment for ONE synchronous iteration (at most
+        one batch per device)."""
+        if len(assignments) > self.num_devices:
+            raise ValueError("more batches than devices in one iteration")
+        if self.policy == "round_robin":
+            devices = [a.device for a in assignments]
+        else:
+            by_weight = sorted(range(len(assignments)),
+                               key=lambda j: (-loads[j], j))
+            free = sorted(range(self.num_devices),
+                          key=lambda d: (self.load[d], d))
+            devices = [0] * len(assignments)
+            for j, d in zip(by_weight, free):
+                devices[j] = d
+        for j, d in enumerate(devices):
+            self.load[d] += loads[j]
+        return devices
+
+    def imbalance(self) -> float:
+        """max/mean running device load (1.0 = perfectly balanced)."""
+        mean = sum(self.load) / max(1, len(self.load))
+        return max(self.load) / mean if mean > 0 else 1.0
 
 
 def schedule_stats(schedule: List[Assignment], p: int) -> dict:

@@ -19,13 +19,12 @@ CPU runs (benchmarks/bench_scalability.py --calibrate).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence
+from typing import List, Sequence
 
 import numpy as np
 
 from repro.configs.gnn import GNNModelConfig, GraphDatasetConfig
-from repro.core.dse import (FPGADSE, MiniBatchShape, PlatformMetadata,
-                            minibatch_shape)
+from repro.core.dse import (FPGADSE, PlatformMetadata, minibatch_shape)
 from repro.core import scheduler as sched
 
 
@@ -48,6 +47,14 @@ class SimConfig:
     # pipeline overlap.
     h2d_layout_bytes: float = 0.0
     sampling_overlap: bool = True    # pipelined host (prefetch executor)
+    # Sampling service (core/sampler_pool.py): the sample + layout-build
+    # stages parallelize over this many worker processes; gather stays on
+    # the consumer thread. t_ipc is the per-batch marshalling cost the
+    # parent pays to receive a worker result (pickle + queue crossing) —
+    # zero when sampling in-process (num_sampler_workers <= 1 models the
+    # single-stream host, matching the in-process path when t_ipc = 0).
+    num_sampler_workers: int = 1
+    t_ipc: float = 0.0
 
 
 def partition_batch_counts(train_vertices: int, p: int,
@@ -95,13 +102,17 @@ def simulate_epoch(model: GNNModelConfig, ds: GraphDatasetConfig,
         t_lc = mb.v[-1] * mb.f[-1] / (sim.m_update_pe * pf.fpga.freq)
         return 3.0 * t + t_lc  # fwd + ~2x bwd
 
-    # Eq. 5-6: the prefetch executor runs the host stages (sample, gather,
-    # layout build — ONE worker, they serialize with each other) one
-    # iteration ahead of the device step, so the iteration rate is set by
+    # Eq. 5-6: the prefetch executor runs the host stages one iteration
+    # ahead of the device step, so the iteration rate is set by
     # max(host, device + H2D), not their sum. The layout H2D payload rides
     # the step dispatch, so it lands on the device side of the overlap.
+    # Sampling + layout build parallelize over the sampling service's
+    # worker processes (each result paying t_ipc to cross back); the
+    # feature gather serializes on the consumer thread.
+    w = max(1, sim.num_sampler_workers)
     t_gnn = gnn_time() + sim.h2d_layout_bytes / host_share
-    t_host = sim.t_sampling + sim.t_gather + sim.t_layout
+    t_host = (sim.t_gather + (sim.t_sampling + sim.t_layout) / w
+              + (sim.t_ipc if sim.num_sampler_workers > 1 else 0.0))
     t_exec = max(t_host, t_gnn) if sim.sampling_overlap else t_host + t_gnn
     grad_bytes = 4 * (ds.feat_dim * model.hidden
                       + (model.num_layers - 1) * model.hidden * model.hidden
@@ -123,11 +134,35 @@ def simulate_epoch(model: GNNModelConfig, ds: GraphDatasetConfig,
         "utilization": stats["utilization"],
         "t_gnn": t_gnn, "t_sync": t_sync, "t_parallel": t_parallel,
         "t_sampling": sim.t_sampling, "t_gather": sim.t_gather,
-        "t_layout": sim.t_layout,
+        "t_layout": sim.t_layout, "t_host": t_host,
+        "num_sampler_workers": sim.num_sampler_workers,
         "h2d_layout_bytes": sim.h2d_layout_bytes,
         "host_share_gbs": host_share / 1e9,
         "beta": beta,
     }
+
+
+def sampler_worker_curve(model: GNNModelConfig, ds: GraphDatasetConfig,
+                         p: int, beta: float, sim: SimConfig,
+                         worker_counts: Sequence[int] = (1, 2, 4, 8),
+                         imbalance: float = 0.25, seed: int = 0
+                         ) -> List[dict]:
+    """Modelled epoch throughput vs sampling-service worker count: the
+    host's sample + layout stages shrink by 1/w (plus the per-batch IPC
+    toll) until the device step or the serial gather dominates Eq. 5's max —
+    the knee tells how many sampler processes the platform can use."""
+    from dataclasses import replace
+    out = []
+    for w in worker_counts:
+        r = simulate_epoch(model, ds, p, beta,
+                           replace(sim, num_sampler_workers=w),
+                           imbalance, seed)
+        r["workers"] = w
+        out.append(r)
+    base = out[0]["nvtps"]
+    for r in out:
+        r["speedup_vs_1"] = r["nvtps"] / base if base > 0 else 1.0
+    return out
 
 
 def pipeline_speedup(model: GNNModelConfig, ds: GraphDatasetConfig,

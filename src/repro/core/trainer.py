@@ -30,8 +30,8 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,17 +42,19 @@ from repro.data.graphs import Graph
 from repro.core.partition import Partition, get_partitioner
 from repro.core.feature_store import FeatureStore
 from repro.core.pipeline import PipelineStats, PrefetchExecutor
-from repro.core.sampler import NeighborSampler, MiniBatch, layer_capacities
+from repro.core.sampler import NeighborSampler, MiniBatch
+from repro.core.sampler_pool import SamplerPool
 from repro.core import scheduler as sched
 from repro.gnn import models as gnn_models
-from repro.kernels.aggregate import (BLK, build_block_coo_pair,
+from repro.kernels.aggregate import (BLK, block_capacities,
+                                     build_layer_layouts,
                                      compact_layout_bytes,
-                                     dense_layout_bytes)
+                                     dense_layout_bytes,
+                                     densified_tile_bytes)
 from repro.nn.param import materialize
 from repro.optim.adam import AdamW, SGDM
 from repro.optim.schedules import get_schedule
 from repro.distributed import compression
-from repro.distributed.sharding import use_mesh
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 
@@ -99,16 +101,35 @@ class SyncGNNTrainer:
     pipeline: bool = True                  # overlap host stages w/ device step
     prefetch_depth: int = 2
     aggregate_backend: Optional[str] = None  # overrides model_cfg when set
+    # Sampling service knobs — None inherits the model_cfg value; an int/str
+    # here overrides it (mirroring aggregate_backend). Workers > 0 routes
+    # stage 1+2b through a SamplerPool of that many processes.
+    num_sampler_workers: Optional[int] = None
+    balance_policy: Optional[str] = None
 
     def __post_init__(self):
+        overrides = {}
         if self.aggregate_backend is not None:
-            self.model_cfg = dataclasses.replace(
-                self.model_cfg, aggregate_backend=self.aggregate_backend)
+            overrides["aggregate_backend"] = self.aggregate_backend
+        if self.num_sampler_workers is not None:
+            overrides["num_sampler_workers"] = self.num_sampler_workers
+        if self.balance_policy is not None:
+            overrides["balance_policy"] = self.balance_policy
+        if overrides:
+            self.model_cfg = dataclasses.replace(self.model_cfg, **overrides)
+        self.num_sampler_workers = self.model_cfg.num_sampler_workers
+        self.balance_policy = self.model_cfg.balance_policy
         if self.model_cfg.aggregate_backend not in ("reference", "pallas"):
             raise ValueError(
                 f"unknown aggregate_backend "
                 f"{self.model_cfg.aggregate_backend!r}; "
                 f"expected 'reference' or 'pallas'")
+        if self.balance_policy not in sched.BALANCE_POLICIES:
+            raise ValueError(
+                f"unknown balance_policy {self.balance_policy!r}; "
+                f"expected one of {sched.BALANCE_POLICIES}")
+        if self.num_sampler_workers < 0:
+            raise ValueError("num_sampler_workers must be >= 0")
         part_name, store_name = ALGORITHMS[self.algorithm]
         self.partition: Partition = get_partitioner(part_name)(
             self.graph, self.num_devices, self.seed)
@@ -130,29 +151,16 @@ class SyncGNNTrainer:
         self.step_no = 0
         self._jit_step = jax.jit(self._make_step())
         # static block-CSR capacities per layer (pallas aggregate backend):
-        # one shape per config => one compiled executable across the epoch.
-        # A dst block holds <= BLK * fanout edges, so it can touch at most
-        # that many distinct src blocks; the transpose has no fanout bound
-        # on its rows (a source may feed arbitrarily many destinations).
+        # one shape per config => one compiled executable across the epoch
+        # (kernels/layout.block_capacities — SHARED with the sampler-pool
+        # workers so both paths emit bit-identical layouts).
         # The HOST only stages the compact ~20 B/edge layout; the dense
         # tiles are densified on DEVICE inside the jit'd step, so the budget
         # below bounds transient device memory, not host staging or H2D.
         self._blk_caps = []
-        if (self.model_cfg.aggregate_backend == "pallas"
-                and gnn_models.AGG_KIND[self.model_cfg.name] is not None):
-            n_caps, e_caps = layer_capacities(self.model_cfg)
-            fans = self.model_cfg.fanouts[::-1]  # layer order matches n_caps
-            blk_bytes = 0
-            for l in range(self.model_cfg.num_layers):
-                n_srcb = (n_caps[l] + BLK - 1) // BLK
-                n_dstb = (n_caps[l + 1] + BLK - 1) // BLK
-                max_blk = min(n_srcb, BLK * fans[l])
-                max_blk_t = n_dstb
-                self._blk_caps.append(
-                    (n_caps[l], n_caps[l + 1], max_blk, max_blk_t,
-                     e_caps[l]))
-                blk_bytes += ((n_dstb * max_blk + n_srcb * max_blk_t)
-                              * BLK * BLK * 4)
+        if self._use_kernel_layout():
+            self._blk_caps = block_capacities(self.model_cfg)
+            blk_bytes = densified_tile_bytes(self._blk_caps)
             budget = 4 << 30  # densified-tile device memory per batch
             if blk_bytes > budget:
                 raise ValueError(
@@ -162,6 +170,15 @@ class SyncGNNTrainer:
                     f"batch_targets={self.model_cfg.batch_targets}, "
                     f"fanouts={self.model_cfg.fanouts}. Reduce the batch "
                     f"size / fanouts or use aggregate_backend='reference'.")
+        # the sampling service + per-epoch balancer are created lazily on
+        # the first epoch (close() tears the pool down)
+        self._pool: Optional[SamplerPool] = None
+        self._balancer = sched.LoadBalancer(self.num_devices,
+                                            self.balance_policy)
+
+    def _use_kernel_layout(self) -> bool:
+        return (self.model_cfg.aggregate_backend == "pallas"
+                and gnn_models.AGG_KIND[self.model_cfg.name] is not None)
 
     def aggregate_h2d_bytes(self, layout: str = "compact") -> int:
         """Per-batch host->device bytes for the aggregate-path layout.
@@ -231,54 +248,69 @@ class SyncGNNTrainer:
         return self.store.gather(device, mb.nodes[0], mb.node_mask[0])
 
     def _block_csr_arrays(self, mb: MiniBatch) -> dict:
-        """Precompute the per-layer COMPACT block-CSR layout (fwd + transpose
-        from one sort — kernels/aggregate.build_block_coo_pair) for the
-        Pallas aggregate datapath. The host stages only per-edge
-        (tile_id, tile_off, value) triples plus the cols tables (12 B/edge for
-        A, 20 B with the transpose coordinates);
-        densification happens on device inside the jit'd step. Mean semantics
-        are baked into the edge values (1/deg per edge); shapes are pinned by
-        self._blk_caps, so every batch reuses one compiled executable."""
-        kind = gnn_models.AGG_KIND[self.model_cfg.name]
-        out: dict = {"agg_tile_id": [], "agg_tile_off": [], "agg_val": [],
-                     "agg_cols": [], "agg_tile_id_t": [], "agg_tile_off_t": [],
-                     "agg_cols_t": []}
-        for l, (n_src, n_dst, max_blk, max_blk_t, _) in enumerate(
-                self._blk_caps):
-            src, dst = mb.edge_src[l], mb.edge_dst[l]
-            mask = mb.edge_mask[l]
-            vals = None
-            if kind == "mean":
-                deg = np.bincount(dst[mask], minlength=n_dst)
-                vals = 1.0 / np.maximum(deg[dst], 1.0)
-            coo = build_block_coo_pair(src, dst, mask, n_src, n_dst, vals,
-                                       max_blk=max_blk, max_blk_t=max_blk_t)
-            for k in ("tile_id", "tile_off", "val", "cols",
-                      "tile_id_t", "tile_off_t", "cols_t"):
-                out[f"agg_{k}"].append(coo[k])
-        return out
+        """Per-layer COMPACT block-CSR layout (fwd + transpose from one sort)
+        for the Pallas aggregate datapath — kernels/layout.
+        build_layer_layouts, the SAME routine the sampler-pool workers run,
+        so layouts are bit-identical wherever the batch was sampled. The
+        host stages only ~20 B/edge; densification happens on device inside
+        the jit'd step; shapes are pinned by self._blk_caps."""
+        return build_layer_layouts(mb.edge_src, mb.edge_dst, mb.edge_mask,
+                                   self._blk_caps,
+                                   gnn_models.AGG_KIND[self.model_cfg.name])
+
+    def _sample_payload(self, a: sched.Assignment) -> dict:
+        """In-process twin of one SamplerPool task: stage 1 (sample) plus
+        stage 2b (compact layout build) for one scheduled batch."""
+        mb = self.samplers[a.partition].next_batch()
+        layout = self._block_csr_arrays(mb) if self._blk_caps else None
+        return {"minibatch": mb, "layout": layout,
+                "load": mb.work_estimate()}
+
+    def _assemble_group(self, assignments: List[sched.Assignment],
+                        payloads: List[dict]) -> dict:
+        """Stage 2 (gather) + device placement + stacking for one
+        synchronous iteration, from sampled payloads (in-process or pool).
+        The balancer maps batches to devices ("round_robin" keeps the
+        scheduler's static assignment bit-exactly; "load" re-assigns by the
+        Eq. 5 estimate), and the stacked device axis follows that mapping."""
+        devices = self._balancer.assign(
+            assignments, [p["load"] for p in payloads])
+        vertices = 0
+        slots: List[Optional[dict]] = [None] * self.num_devices
+        order = []  # legacy append order for the round_robin path
+        for dev, payload in zip(devices, payloads):
+            mb = payload["minibatch"]
+            vertices += mb.vertices_traversed()
+            arrs = batch_to_arrays(mb, self._gather_features(dev, mb))
+            if payload["layout"] is not None:
+                arrs.update(payload["layout"])
+            slots[dev] = arrs
+            order.append(arrs)
+        if self.balance_policy == "round_robin":
+            # historical stacking: group order, idle fills appended last
+            batches = order
+            while len(batches) < self.num_devices:
+                fill = dict(batches[-1])
+                fill["weight"] = np.float32(0.0)
+                batches.append(fill)
+        else:
+            # device-indexed stacking: slot d holds device d's batch; empty
+            # slots run a zero-weight dup of the last real batch
+            batches = [s if s is not None else None for s in slots]
+            for d in range(self.num_devices):
+                if batches[d] is None:
+                    fill = dict(order[-1])
+                    fill["weight"] = np.float32(0.0)
+                    batches[d] = fill
+        return {"stacked": stack_batches(batches), "vertices": vertices,
+                "n_batches": len(assignments)}
 
     def _prepare_group(self, assignments: List[sched.Assignment]) -> dict:
         """Stages 1+2 (sample + gather [+ block-CSR build]) for one
         synchronous iteration — pure host/numpy work, safe to run in the
         prefetch worker thread while the device executes iteration t-1."""
-        use_kernel = (self.model_cfg.aggregate_backend == "pallas"
-                      and gnn_models.AGG_KIND[self.model_cfg.name] is not None)
-        batches = []
-        vertices = 0
-        for a in assignments:
-            mb = self.samplers[a.partition].next_batch()
-            vertices += mb.vertices_traversed()
-            arrs = batch_to_arrays(mb, self._gather_features(a.device, mb))
-            if use_kernel:
-                arrs.update(self._block_csr_arrays(mb))
-            batches.append(arrs)
-        while len(batches) < self.num_devices:  # idle device: zero-weight dup
-            fill = dict(batches[-1])
-            fill["weight"] = np.float32(0.0)
-            batches.append(fill)
-        return {"stacked": stack_batches(batches), "vertices": vertices,
-                "n_batches": len(assignments)}
+        return self._assemble_group(
+            assignments, [self._sample_payload(a) for a in assignments])
 
     # -- stage 3: the jit'd device step -----------------------------------------
     def _execute(self, prepared: dict, sync: bool = True) -> dict:
@@ -310,36 +342,104 @@ class SyncGNNTrainer:
     def run_iteration(self, assignments: List[sched.Assignment]) -> dict:
         return self._execute(self._prepare_group(assignments))
 
+    # -- the sampling service ---------------------------------------------------
+    def _ensure_pool(self) -> SamplerPool:
+        """Lazily spawn the sampling service (first epoch); reused across
+        epochs, torn down by close()."""
+        if self._pool is None:
+            kind = (gnn_models.AGG_KIND[self.model_cfg.name]
+                    if self._blk_caps else None)
+            self._pool = SamplerPool(
+                self.graph, self.model_cfg,
+                [self._train_ids(i) for i in range(self.num_devices)],
+                seed=self.seed, num_workers=self.num_sampler_workers,
+                agg_kind=kind,
+                blk_caps=self._blk_caps if self._blk_caps else None)
+        return self._pool
+
+    def _pool_prepared_items(self, groups: List[List[sched.Assignment]],
+                             epoch: int):
+        """(group, payloads) stream through the sampling service. Batches
+        are addressed as (partition, epoch, batch_index) — pure RNG
+        coordinates — and come back in submission order via the pool's
+        reorder buffer, so this stream is bit-identical to the in-process
+        sampler whatever the worker count or completion order. The bounded
+        submission window caps staged batches exactly like prefetch depth."""
+        pool = self._ensure_pool()
+        window = max(4 * self.num_sampler_workers,
+                     (self.prefetch_depth + 1) * self.num_devices)
+        tasks = ((a.partition, epoch, a.batch_index)
+                 for g in groups for a in g)
+        payload_iter = pool.map_tasks(tasks, window)
+        for g in groups:
+            yield g, [next(payload_iter) for _ in g]
+
     def run_epoch(self) -> dict:
         for s in self.samplers:
             s.reset_epoch()
+        self._balancer = sched.LoadBalancer(self.num_devices,
+                                            self.balance_policy)
         schedule = self.epoch_schedule()
         groups = list(sched.iterations(schedule))
         t0 = time.time()
-        metrics: Dict[str, float] = {}
+        pstats = PipelineStats()
+        if self.num_sampler_workers > 0:
+            # stage 1+2b run in the sampler worker processes; the prefetch
+            # thread only gathers features, stacks, and keeps the reorder
+            # buffer drained while the main thread dispatches device steps
+            items = self._pool_prepared_items(groups, self.samplers[0].epoch)
+
+            def prepare(item):
+                return self._assemble_group(*item)
+        else:
+            items = groups
+            prepare = self._prepare_group
+        try:
+            return self._run_epoch_loop(schedule, groups, items, prepare,
+                                        pstats, t0)
+        except BaseException:
+            # an abandoned epoch leaves in-flight pool tasks whose sequence
+            # numbers would bleed into the next epoch's reorder stream —
+            # tear the service down so the next epoch starts clean
+            self.close()
+            raise
+
+    def _run_epoch_loop(self, schedule, groups, items, prepare, pstats, t0):
+        # epoch metrics are the batch-weighted MEAN over the iterations (an
+        # epoch-level estimate, not the last 1-group sample); the pipelined
+        # path still syncs only once, at epoch end — the per-step metric
+        # scalars stay async until then
+        step_metrics: List[tuple] = []  # (async metric dict, n_batches)
         vertices = 0
         n_batches = 0
-        pstats = PipelineStats()
         if self.pipeline:
             prepared_iter = PrefetchExecutor(
-                self._prepare_group, self.prefetch_depth, pstats).run(groups)
+                prepare, self.prefetch_depth, pstats).run(items)
             # backpressure: at most prefetch_depth dispatched-but-unfinished
             # steps, else a fast host would pile up live input buffers
             inflight: deque = deque()
             for prepared in prepared_iter:
-                inflight.append(self._execute(prepared, sync=False))
+                m = self._execute(prepared, sync=False)
+                inflight.append(m)
+                step_metrics.append((m, prepared["n_batches"]))
                 if len(inflight) > self.prefetch_depth:
                     jax.block_until_ready(inflight.popleft())
                 vertices += prepared["vertices"]
                 n_batches += prepared["n_batches"]
             if inflight:  # one final sync per epoch, not per iteration
-                metrics = {k: float(v) for k, v in inflight[-1].items()}
+                jax.block_until_ready(inflight[-1])
         else:
-            for prepared in (self._prepare_group(g) for g in groups):
+            for prepared in (prepare(it) for it in items):
                 m = self._execute(prepared)
                 vertices += m.pop("vertices_traversed")
-                metrics = m
+                step_metrics.append((m, prepared["n_batches"]))
                 n_batches += prepared["n_batches"]
+        metrics: Dict[str, float] = {}
+        if step_metrics:
+            total = sum(nb for _, nb in step_metrics)
+            metrics = {k: sum(float(m[k]) * nb for m, nb in step_metrics)
+                       / total
+                       for k in step_metrics[0][0]}
         wall = time.time() - t0
         stats = sched.schedule_stats(schedule, self.num_devices)
         return {**metrics, "epoch_time_s": wall, "batches": n_batches,
@@ -349,8 +449,31 @@ class SyncGNNTrainer:
                 "nvtps": vertices / wall if wall > 0 else 0.0,
                 "beta": self.store.beta(),
                 "pipeline": self.pipeline,
+                "sampler_workers": self.num_sampler_workers,
+                "balance_policy": self.balance_policy,
+                "load_imbalance": self._balancer.imbalance(),
                 "host_produce_s": pstats.produce_s,
                 "host_wait_s": pstats.wait_s}
 
     def train(self, epochs: int = 1) -> List[dict]:
         return [self.run_epoch() for _ in range(epochs)]
+
+    # -- lifecycle --------------------------------------------------------------
+    def close(self) -> None:
+        """Tear down the sampling service (worker processes + shared-memory
+        segments). Idempotent; trainers without workers are no-ops."""
+        if getattr(self, "_pool", None) is not None:
+            self._pool.close()
+            self._pool = None
+
+    def __enter__(self) -> "SyncGNNTrainer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass

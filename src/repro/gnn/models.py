@@ -12,8 +12,6 @@ block-CSR kernel in kernels/aggregate.py implements the same contract);
 """
 from __future__ import annotations
 
-from typing import Sequence
-
 import jax
 import jax.numpy as jnp
 

@@ -10,7 +10,7 @@ the source feature tile overlaps compute — the paper's pipelined
 load/compute, Eq. 6). Each nonzero block is one MXU matmul; padding blocks
 are all-zero and contribute nothing.
 
-Layout (built by ``build_block_csr``):
+Layout (built by ``kernels/layout.build_block_csr``):
   blocks  (n_dst_blocks, max_blk, 128, 128)  dense adjacency tiles
   cols    (n_dst_blocks, max_blk) int32      source block index (0-padded)
   h_in    (n_src_blocks*128, F)              source features
@@ -18,20 +18,13 @@ Layout (built by ``build_block_csr``):
 Grid: (n_dst_blocks, F/fb, max_blk); the last axis is sequential with an
 fp32 VMEM accumulator.
 
-Two host-side layout builders feed the kernel:
-
-* ``build_block_csr`` / ``build_block_csr_pair`` — the original DENSE path:
-  the host materializes the (Nd, max_blk, 128, 128) tiles in numpy and ships
-  ~64 KB per block slot to the device. Kept for tests and as the reference
-  the compact path must match bit-for-bit.
-* ``build_block_coo_pair`` — the COMPACT edge-centric path (the hot path):
-  the host emits only per-edge (tile_id, tile_off, value) triples — 12 B per
-  edge for A, 20 B with the A^T coordinates (the values are shared) —
-  derived from ONE sort of the edge block keys, and the tiles are densified
-  ON DEVICE by ``densify_tiles`` (a jit'd scatter-add) right before the
-  Pallas SpMM. Host->device traffic for the aggregate path drops by the
-  tile-fill ratio (orders of magnitude for sampled subgraphs), and the
-  ``np.add.at`` dense scatter leaves the host thread entirely.
+The host-side layout builders (dense ``build_block_csr`` / compact
+``build_block_coo_pair``) live in ``kernels/layout.py`` — a PURE-NUMPY
+module, because the multi-process sampling service runs them inside sampler
+worker processes that must never import jax. They are re-exported here for
+existing importers. The compact path ships only ~20 B/edge; the dense tiles
+are densified ON DEVICE by ``densify_tiles`` (a jit'd scatter-add) right
+before the Pallas SpMM.
 """
 from __future__ import annotations
 
@@ -43,184 +36,10 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-BLK = 128
-
-
-def build_block_csr(edge_src: np.ndarray, edge_dst: np.ndarray,
-                    edge_mask: np.ndarray, n_src: int, n_dst: int,
-                    values: np.ndarray | None = None,
-                    max_blk: int | None = None):
-    """Edge list -> padded block-CSR (numpy, host-side preprocessing).
-
-    Returns (blocks (Nd, max_blk, BLK, BLK) f32, cols (Nd, max_blk) i32,
-    padded src row count). A[dst, src] = value (default 1).
-
-    ``max_blk`` pins the nonzero-blocks-per-row capacity to a STATIC value so
-    every mini-batch of a fixed sampler config produces identically-shaped
-    arrays (one compiled executable, no per-batch re-jit). Unused slots keep
-    all-zero tiles pointing at source block 0 and contribute nothing."""
-    n_srcb = (n_src + BLK - 1) // BLK
-    n_dstb = (n_dst + BLK - 1) // BLK
-    src = np.asarray(edge_src)[np.asarray(edge_mask)]
-    dst = np.asarray(edge_dst)[np.asarray(edge_mask)]
-    val = (np.ones(len(src), np.float32) if values is None
-           else np.asarray(values)[np.asarray(edge_mask)].astype(np.float32))
-    bs, bd = src // BLK, dst // BLK
-    keys = bd.astype(np.int64) * n_srcb + bs
-    uniq, inv = np.unique(keys, return_inverse=True)
-    # per dst block: which src blocks are nonzero
-    blk_dst = (uniq // n_srcb).astype(np.int32)
-    blk_src = (uniq % n_srcb).astype(np.int32)
-    counts = np.bincount(blk_dst, minlength=n_dstb)
-    need = max(1, int(counts.max()) if len(uniq) else 0)
-    if max_blk is None:
-        max_blk = need
-    elif need > max_blk:
-        raise ValueError(f"max_blk={max_blk} < required {need}")
-    blocks = np.zeros((n_dstb, max_blk, BLK, BLK), np.float32)
-    cols = np.zeros((n_dstb, max_blk), np.int32)
-    # uniq is sorted, so entries are grouped by dst block: the slot of entry
-    # u is its rank within its group (vectorized cursor).
-    group_start = np.concatenate([[0], np.cumsum(counts)[:-1]])
-    slot_of = (np.arange(len(uniq)) - group_start[blk_dst]).astype(np.int32)
-    cols[blk_dst, slot_of] = blk_src
-    np.add.at(blocks,
-              (bd.astype(np.int32), slot_of[inv], dst % BLK, src % BLK), val)
-    return blocks, cols, n_srcb * BLK
-
-
-def build_block_csr_pair(edge_src: np.ndarray, edge_dst: np.ndarray,
-                         edge_mask: np.ndarray, n_src: int, n_dst: int,
-                         values: np.ndarray | None = None,
-                         max_blk: int | None = None,
-                         max_blk_t: int | None = None):
-    """Forward layout A plus the transposed layout A^T in one call.
-
-    The backward pass of ``out = A @ h`` is ``dh = A^T @ dout`` — on the
-    FPGA the same scatter-gather array streams the transposed adjacency; here
-    the transpose is a second block-CSR built over the PADDED dimensions so
-    the cotangent shapes line up exactly with the primal shapes.
-
-    Returns (blocks, cols, blocks_t, cols_t, n_src_pad)."""
-    blocks, cols, n_src_pad = build_block_csr(
-        edge_src, edge_dst, edge_mask, n_src, n_dst, values, max_blk)
-    n_dst_pad = blocks.shape[0] * BLK
-    blocks_t, cols_t, _ = build_block_csr(
-        edge_dst, edge_src, edge_mask, n_dst_pad, n_src_pad, values, max_blk_t)
-    return blocks, cols, blocks_t, cols_t, n_src_pad
-
-
-# ---------------------------------------------------------------------------
-# Compact edge-centric layout (host) + on-device densification
-# ---------------------------------------------------------------------------
-
-def build_block_coo_pair(edge_src: np.ndarray, edge_dst: np.ndarray,
-                         edge_mask: np.ndarray, n_src: int, n_dst: int,
-                         values: np.ndarray | None = None,
-                         max_blk: int | None = None,
-                         max_blk_t: int | None = None) -> dict:
-    """Single-pass compact layout for A AND A^T from one edge-key sort.
-
-    Instead of materializing dense (Nd, max_blk, BLK, BLK) tiles host-side,
-    emit per-edge coordinates into the tile array:
-
-      tile_id[e]  = dst_block(e) * max_blk + slot(e)      (which tile)
-      tile_off[e] = (dst % BLK) * BLK + (src % BLK)       (cell within tile)
-      val[e]      = edge value (0.0 for masked/padded edges)
-
-    plus the ``cols`` scalar-prefetch table the kernel already consumes.
-    Masked edges keep tile_id = tile_off = 0 with val 0.0 — a zero add into
-    an existing cell — so every array keeps its STATIC padded length.
-
-    The transposed layout (``*_t`` keys, consumed by the custom VJP) is
-    derived from the SAME ``np.unique`` over the E-length block keys: the
-    unique (dst_blk, src_blk) pairs are re-ranked by (src_blk, dst_blk) — an
-    O(U log U) argsort over the U unique blocks, U << E — instead of paying a
-    second full E-length sort as ``build_block_csr_pair`` does. Densifying
-    the result is bit-identical to two independent ``build_block_csr`` calls
-    (tests/test_pipeline.py property test).
-
-    Returns a dict with keys ``tile_id, tile_off, val, cols, tile_id_t,
-    tile_off_t, cols_t, n_src_pad``.
-    """
-    n_srcb = (n_src + BLK - 1) // BLK
-    n_dstb = (n_dst + BLK - 1) // BLK
-    src = np.asarray(edge_src).astype(np.int64)
-    dst = np.asarray(edge_dst).astype(np.int64)
-    mask = np.asarray(edge_mask).astype(bool)
-    E = len(src)
-    if values is None:
-        val = mask.astype(np.float32)
-    else:
-        val = np.where(mask, np.asarray(values), 0.0).astype(np.float32)
-    src = np.where(mask, src, 0)
-    dst = np.where(mask, dst, 0)
-    bs, bd = src // BLK, dst // BLK
-
-    # THE single sort: unique (dst_blk, src_blk) keys over the real edges.
-    keys = bd * n_srcb + bs
-    uniq, inv = np.unique(keys[mask], return_inverse=True)
-    U = len(uniq)
-    blk_dst = uniq // n_srcb
-    blk_src = uniq % n_srcb
-
-    # forward slots: uniq is sorted by (dst_blk, src_blk), so the slot of a
-    # block is its rank within its dst group (vectorized cursor).
-    counts = np.bincount(blk_dst, minlength=n_dstb)
-    need = int(counts.max()) if U else 0
-    if max_blk is None:
-        max_blk = max(1, need)
-    elif need > max_blk:
-        raise ValueError(f"max_blk={max_blk} < required {need}")
-    group_start = np.concatenate([[0], np.cumsum(counts)[:-1]])
-    slot_of = np.arange(U) - group_start[blk_dst]
-    cols = np.zeros((n_dstb, max_blk), np.int32)
-    cols[blk_dst, slot_of] = blk_src.astype(np.int32)
-    tile_id = np.zeros(E, np.int32)
-    tile_id[mask] = (blk_dst[inv] * max_blk + slot_of[inv]).astype(np.int32)
-    tile_off = np.where(mask, (dst % BLK) * BLK + src % BLK,
-                        0).astype(np.int32)
-
-    # transpose slots: re-rank the SAME U blocks by (src_blk, dst_blk).
-    order_t = np.argsort(blk_src * n_dstb + blk_dst)
-    bs_t, bd_t = blk_src[order_t], blk_dst[order_t]
-    counts_t = np.bincount(bs_t, minlength=n_srcb)
-    need_t = int(counts_t.max()) if U else 0
-    if max_blk_t is None:
-        max_blk_t = max(1, need_t)
-    elif need_t > max_blk_t:
-        raise ValueError(f"max_blk_t={max_blk_t} < required {need_t}")
-    group_start_t = np.concatenate([[0], np.cumsum(counts_t)[:-1]])
-    slot_of_t = np.arange(U) - group_start_t[bs_t]
-    cols_t = np.zeros((n_srcb, max_blk_t), np.int32)
-    cols_t[bs_t, slot_of_t] = bd_t.astype(np.int32)
-    slot_by_uniq = np.empty(U, np.int64)
-    slot_by_uniq[order_t] = slot_of_t
-    tile_id_t = np.zeros(E, np.int32)
-    tile_id_t[mask] = (blk_src[inv] * max_blk_t
-                       + slot_by_uniq[inv]).astype(np.int32)
-    tile_off_t = np.where(mask, (src % BLK) * BLK + dst % BLK,
-                          0).astype(np.int32)
-
-    return {"tile_id": tile_id, "tile_off": tile_off, "val": val,
-            "cols": cols, "tile_id_t": tile_id_t, "tile_off_t": tile_off_t,
-            "cols_t": cols_t, "n_src_pad": n_srcb * BLK}
-
-
-def compact_layout_bytes(n_edges: int, n_dstb: int, max_blk: int,
-                         n_srcb: int, max_blk_t: int) -> int:
-    """Host->device bytes per batch for one layer's compact layout: three
-    4-byte per-edge arrays for A (tile_id, tile_off, val), two more for A^T
-    (the values are shared), plus the two cols tables."""
-    return 5 * 4 * n_edges + 4 * (n_dstb * max_blk + n_srcb * max_blk_t)
-
-
-def dense_layout_bytes(n_edges: int, n_dstb: int, max_blk: int,
-                       n_srcb: int, max_blk_t: int) -> int:
-    """Host->device bytes per batch for one layer's DENSE layout (the
-    pre-compact path): full 64 KB tiles for A and A^T plus cols tables."""
-    return (4 * (n_dstb * max_blk + n_srcb * max_blk_t) * BLK * BLK
-            + 4 * (n_dstb * max_blk + n_srcb * max_blk_t))
+from repro.kernels.layout import (  # noqa: F401  (re-exported host builders)
+    BLK, block_capacities, build_block_coo_pair, build_block_csr,
+    build_block_csr_pair, build_layer_layouts, compact_layout_bytes,
+    dense_layout_bytes, densified_tile_bytes, densify_tiles_np)
 
 
 def densify_tiles(tile_id: jax.Array, tile_off: jax.Array, val: jax.Array,
@@ -232,16 +51,6 @@ def densify_tiles(tile_id: jax.Array, tile_off: jax.Array, val: jax.Array,
     flat = jnp.zeros(n_tile_rows * max_blk * BLK * BLK, jnp.float32)
     idx = tile_id.astype(jnp.int32) * (BLK * BLK) + tile_off
     flat = flat.at[idx].add(val.astype(jnp.float32))
-    return flat.reshape(n_tile_rows, max_blk, BLK, BLK)
-
-
-def densify_tiles_np(tile_id: np.ndarray, tile_off: np.ndarray,
-                     val: np.ndarray, n_tile_rows: int, max_blk: int
-                     ) -> np.ndarray:
-    """Numpy twin of ``densify_tiles`` (same accumulation order as the dense
-    builder's ``np.add.at``) — used by tests to check bit-identity."""
-    flat = np.zeros(n_tile_rows * max_blk * BLK * BLK, np.float32)
-    np.add.at(flat, tile_id.astype(np.int64) * (BLK * BLK) + tile_off, val)
     return flat.reshape(n_tile_rows, max_blk, BLK, BLK)
 
 

@@ -32,7 +32,6 @@ from repro.configs.base import SHAPES, ShapeSpec, ArchConfig
 from repro.configs.registry import (ARCH_IDS, get_config, get_shape,
                                     cell_is_runnable)
 from repro.models.registry import build, input_specs
-from repro.nn.param import PSpec, map_specs
 from repro.distributed import sharding as shd
 from repro.analysis import hlo_cost
 from repro.launch.mesh import (make_production_mesh, PEAK_FLOPS_BF16, HBM_BW,

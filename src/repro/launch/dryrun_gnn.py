@@ -21,7 +21,6 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.gnn import GNNModelConfig, OGBN_PRODUCTS
 from repro.core.sampler import layer_capacities
 from repro.gnn import models as gnn_models
-from repro.nn.param import PSpec, map_specs
 from repro.analysis import hlo_cost
 from repro.distributed import sharding as shd
 from repro.launch.mesh import make_production_mesh

@@ -8,7 +8,6 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -10,8 +10,6 @@ embedding / per-invocation LoRA).
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -5,8 +5,6 @@ apply functions take the materialized (or abstract) params.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -12,7 +12,6 @@ with divisibility-aware fallback to replication.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Callable, Optional, Tuple
 

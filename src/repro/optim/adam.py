@@ -11,7 +11,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.nn.param import PSpec, map_specs, materialize
+from repro.nn.param import PSpec, map_specs
 
 
 @dataclass(frozen=True)

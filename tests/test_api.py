@@ -1,6 +1,5 @@
 """HitGNN high-level API facade (paper Table 2 / Listing 1 flow)."""
 import numpy as np
-import pytest
 
 from repro.core.abstraction import HitGNN
 from repro.configs.gnn import DATASETS

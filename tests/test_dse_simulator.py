@@ -1,7 +1,6 @@
 """DSE engine vs paper Table 5/Fig 7 + simulator vs Fig 8 (paper-claims
 validation; EXPERIMENTS.md §Paper-claims)."""
 import numpy as np
-import pytest
 
 from repro.configs.gnn import GRAPHSAGE, GCN, DATASETS
 from repro.core.dse import (FPGADSE, TPUDSE, minibatch_shape,

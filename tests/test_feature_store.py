@@ -1,6 +1,5 @@
 """Feature store: residency per strategy + beta accounting conservation."""
 import numpy as np
-import pytest
 
 from repro.data.graphs import synthetic_graph
 from repro.core.partition import get_partitioner

@@ -1,14 +1,13 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (hypothesis) +
 fixed-case allclose. Kernels run in interpret mode on CPU."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 pytest.importorskip("hypothesis")  # optional dep: property tests
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
-from repro.kernels.aggregate import build_block_csr, BLK
+from repro.kernels.aggregate import build_block_csr
 
 
 # ---------------------------------------------------------------------------

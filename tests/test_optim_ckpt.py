@@ -4,8 +4,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.optim.adam import AdamW, SGDM, global_norm
-from repro.optim.schedules import cosine, wsd, get_schedule
+from repro.optim.adam import AdamW, SGDM
+from repro.optim.schedules import cosine, wsd
 from repro.distributed import compression
 
 

@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 pytest.importorskip("hypothesis")  # optional dep: property tests
-from hypothesis import given, settings, strategies as st
+from hypothesis import strategies as st
 
 from repro.data.graphs import synthetic_graph
 from repro.core.partition import (hash_partition, metis_like_partition,

@@ -1,5 +1,4 @@
 """Two-stage scheduler (paper Alg. 3) invariants — property-based."""
-import numpy as np
 import pytest
 pytest.importorskip("hypothesis")  # optional dep: property tests
 from hypothesis import given, settings, strategies as st

@@ -78,8 +78,7 @@ def test_model_prefill_decode_consistency(arch):
     """Full model: prefill logits at last position == decode-step logits
     when the decode consumes the same final token."""
     from repro.configs.registry import get_smoke_config
-    from repro.models.registry import build, sample_inputs
-    from repro.configs.base import ShapeSpec
+    from repro.models.registry import build
     cfg = get_smoke_config(arch)
     bundle = build(cfg)
     params = bundle.init_params(jax.random.PRNGKey(0), jnp.float32)

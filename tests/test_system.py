@@ -13,7 +13,6 @@ from repro.configs.gnn import GNNModelConfig
 from repro.core.trainer import SyncGNNTrainer
 from repro.core import scheduler as sched
 from repro.gnn import models as gnn_models
-from repro.nn.param import materialize
 
 G = synthetic_graph(scale=10, edge_factor=8, feat_dim=32, num_classes=8)
 CFG = GNNModelConfig("graphsage", num_layers=2, hidden=32, fanouts=(5, 5),
