@@ -27,7 +27,7 @@ from repro.core.partition import metis_like_partition
 from repro.core.feature_store import FeatureStore
 from repro.core.sampler_pool import SamplerPool
 from repro.core.simulator import (SimConfig, pipeline_speedup,
-                                  sampler_worker_curve)
+                                  sampler_worker_curve, simulate_epoch)
 from repro.core import scheduler as sched
 from repro.core.trainer import SyncGNNTrainer
 from repro.kernels.aggregate import build_block_csr_pair
@@ -82,7 +82,7 @@ def run(report, quick: bool = True):
     g = scaled_dataset("ogbn-products", scale=15)
     cfg = GNNModelConfig("graphsage", 2, 128, (5, 5) if quick else (25, 10),
                          64)
-    out = {"schema": 3, "config": {"model": cfg.name, "layers": cfg.num_layers,
+    out = {"schema": 4, "config": {"model": cfg.name, "layers": cfg.num_layers,
                                    "hidden": cfg.hidden,
                                    "fanouts": list(cfg.fanouts),
                                    "batch_targets": cfg.batch_targets,
@@ -216,6 +216,54 @@ def run(report, quick: bool = True):
            f"host_produce_s={m_pipe['host_produce_s']:.3f} "
            f"host_wait_s={m_pipe['host_wait_s']:.3f}")
 
+    # stage-2 offload: gather on the training thread (workers sample+layout
+    # only) vs gather INSIDE the workers (training thread keeps only device
+    # placement). Same shared-host discipline as above: both trainers (and
+    # their pools) stay alive, epochs run in interleaved (host, worker)
+    # pairs, and the headline comes from the quietest pair. The gather-stage
+    # time on the TRAINING THREAD (epoch host_gather_s) and the ring
+    # bytes/iter the offload ships are the trajectory record.
+    tr_gh = SyncGNNTrainer(g, cfg, num_devices=4, algorithm="distdgl",
+                           num_sampler_workers=2)
+    tr_gw = SyncGNNTrainer(g, cfg, num_devices=4, algorithm="distdgl",
+                           num_sampler_workers=2, gather_in_workers=True)
+    try:
+        tr_gh.run_epoch()  # warm: jit + pool spawn + page-in
+        tr_gw.run_epoch()
+        gpairs = []
+        for _ in range(4):
+            m_h = tr_gh.run_epoch()
+            m_w = tr_gw.run_epoch()
+            gpairs.append((m_h, m_w))
+        m_gh, m_gw = min(gpairs, key=lambda p: p[0]["epoch_time_s"]
+                         + p[1]["epoch_time_s"])
+        # ring traffic varies per epoch (each epoch permutes the train set,
+        # so the miss-row count differs) but the MEAN over the fixed set of
+        # measured epochs is a pure function of the seed — deterministic
+        # across runs, so the regression gate can demand no increase at all
+        ring_per_iter = (sum(p[1]["ring_bytes_per_iter"] for p in gpairs)
+                         / len(gpairs))
+        # per-mode stage-2 time on the training thread: min over rounds
+        # (quietest window) — on small shared hosts the contended per-batch
+        # placement time swings several-fold between rounds, so the
+        # regression gate reads this damped record with its own tolerance
+        gather_s = {
+            "gather_on_host": min(p[0]["host_gather_s"] for p in gpairs),
+            "gather_in_workers": min(p[1]["host_gather_s"] for p in gpairs),
+        }
+    finally:
+        tr_gw.close()
+        tr_gh.close()
+    gather_reduction = (gather_s["gather_on_host"]
+                        / gather_s["gather_in_workers"]
+                        if gather_s["gather_in_workers"] > 0 else float("inf"))
+    report("pipe_gather_on_host", gather_s["gather_on_host"] * 1e6,
+           f"epoch_s={m_gh['epoch_time_s']:.3f} nvtps={m_gh['nvtps']:.0f}")
+    report("pipe_gather_in_workers", gather_s["gather_in_workers"] * 1e6,
+           f"epoch_s={m_gw['epoch_time_s']:.3f} nvtps={m_gw['nvtps']:.0f} "
+           f"stage_reduction_x={gather_reduction:.2f} "
+           f"ring_KB_per_iter={ring_per_iter/1e3:.1f}")
+
     # simulator, calibrated with the measured host stage times
     sim = SimConfig(t_sampling=t_sample, t_gather=t_gather,
                     t_layout=t_layout, h2d_layout_bytes=h2d_compact)
@@ -239,6 +287,23 @@ def run(report, quick: bool = True):
                                  0.8, sim_w, worker_counts=(1, 2, 4, 8))
     report("pipe_modelled_workers", curve[-1]["epoch_time_s"] * 1e6,
            f"speedup_w8_vs_w1={curve[-1]['speedup_vs_1']:.2f}")
+    # modelled stage-2 offload: the per-batch gather moves into the worker
+    # pool (divided by w), the consumer keeps the measured placement tail,
+    # and the shipped rows pay one host-bandwidth ring crossing per batch
+    from dataclasses import replace as dc_replace
+    n_gw_batches = max(1, m_gw["batches"])
+    sim_g = dc_replace(sim_w, gather_in_workers=True,
+                       t_gather_worker=t_gather,
+                       t_placement=m_gw["host_gather_s"] / n_gw_batches,
+                       ring_bytes=m_gw["ring_bytes"] / n_gw_batches,
+                       num_sampler_workers=2)
+    mod_g = simulate_epoch(pool_cfg, DATASETS["ogbn-products"], 4, 0.8,
+                           sim_g)
+    mod_h = simulate_epoch(pool_cfg, DATASETS["ogbn-products"], 4, 0.8,
+                           dc_replace(sim_w, num_sampler_workers=2))
+    report("pipe_modelled_gather_offload", mod_g["epoch_time_s"] * 1e6,
+           f"modelled_speedup_vs_host_gather="
+           f"{mod_h['epoch_time_s']/mod_g['epoch_time_s']:.2f}")
 
     # machine-readable trajectory record
     out["stages_s"] = {"sample": t_sample, "gather": t_gather,
@@ -261,6 +326,19 @@ def run(report, quick: bool = True):
                      "h2d_bytes_per_iter_compact": h2d_compact,
                      "h2d_bytes_per_iter_dense": h2d_dense,
                      "h2d_reduction_x": h2d_dense / h2d_compact}
+    out["gather_offload"] = {
+        "workers": 2,
+        "host_cpu_count": os.cpu_count(),
+        "epoch_s": {"gather_on_host": m_gh["epoch_time_s"],
+                    "gather_in_workers": m_gw["epoch_time_s"]},
+        "nvtps": {"gather_on_host": m_gh["nvtps"],
+                  "gather_in_workers": m_gw["nvtps"]},
+        # stage-2 time left ON THE TRAINING THREAD per epoch (min/rounds)
+        "host_gather_s": gather_s,
+        "gather_stage_reduction_x": gather_reduction,
+        "ring_bytes_per_iter": ring_per_iter,
+        "modelled_speedup": mod_h["epoch_time_s"] / mod_g["epoch_time_s"],
+    }
     out["epoch"] = {"sequential_s": m_seq["epoch_time_s"],
                     "pipelined_s": m_pipe["epoch_time_s"],
                     "speedup": speedup,

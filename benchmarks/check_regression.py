@@ -8,6 +8,16 @@ Checks (exit code 1 on any failure):
   more than ``--nvtps-tolerance`` (default 25%) below the baseline.
 * H2D bytes/iter — the aggregate-path host->device payload is DETERMINISTIC
   for a config, so ANY increase over the baseline fails.
+* Ring bytes/iter — the stage-2 offload's shared-memory ring traffic is
+  likewise deterministic (miss rows are a pure function of config + seed),
+  so ANY increase over the baseline fails.
+* Gather-stage time — the per-epoch stage-2 time left ON the training
+  thread with gather_in_workers must not exceed the baseline by more than
+  ``--gather-tolerance`` (default 100%: the record is a min-over-rounds of
+  a contended sub-100ms wall-clock quantity, so only a jump the size of the
+  whole gather moving back onto the thread is signal; same-host-class
+  baselines only — the deterministic ring-bytes check above is the sharp
+  gate on this path).
 * Sampling-service scaling — on hosts with >= 4 CPUs the workers=4 vs
   workers=1 sampled-batches/sec speedup must reach ``--pool-speedup``
   (default 1.5x); smaller hosts cannot physically show 4-way process
@@ -35,7 +45,7 @@ def _get(d: dict, path: str):
 
 
 def compare(baseline: dict, fresh: dict, nvtps_tolerance: float,
-            pool_speedup: float) -> list:
+            pool_speedup: float, gather_tolerance: float = 1.0) -> list:
     """Returns a list of failure strings (empty = gate passes)."""
     failures = []
 
@@ -66,6 +76,34 @@ def compare(baseline: dict, fresh: dict, nvtps_tolerance: float,
         failures.append(
             f"H2D bytes/iter increased: {fresh_h2d} > baseline {base_h2d}")
 
+    # stage-2 offload: ring traffic is deterministic per config => any
+    # increase is a real regression (someone started shipping resident
+    # rows); the training-thread gather-stage time is wall-clock, so it
+    # gates only against same-host-class baselines, with the NVTPS
+    # tolerance.
+    base_ring = _get(baseline, "gather_offload.ring_bytes_per_iter")
+    fresh_ring = _get(fresh, "gather_offload.ring_bytes_per_iter")
+    if base_ring is not None and fresh_ring is not None \
+            and fresh_ring > base_ring:
+        failures.append(
+            f"ring bytes/iter increased: {fresh_ring:.0f} > baseline "
+            f"{base_ring:.0f}")
+    base_gs = _get(baseline,
+                   "gather_offload.host_gather_s.gather_in_workers")
+    fresh_gs = _get(fresh, "gather_offload.host_gather_s.gather_in_workers")
+    go_base_cpus = _get(baseline, "gather_offload.host_cpu_count")
+    go_fresh_cpus = _get(fresh, "gather_offload.host_cpu_count")
+    if base_gs and fresh_gs is not None and go_base_cpus == go_fresh_cpus:
+        ceiling = base_gs * (1.0 + gather_tolerance)
+        if fresh_gs > ceiling:
+            failures.append(
+                f"gather-stage time on the training thread regressed: "
+                f"{fresh_gs:.4f}s > {ceiling:.4f}s "
+                f"(baseline {base_gs:.4f}s + {gather_tolerance:.0%})")
+    elif base_gs and fresh_gs is not None:
+        print(f"check_regression: gather-stage check skipped (baseline "
+              f"host has {go_base_cpus} CPUs, this host {go_fresh_cpus})")
+
     cpus = _get(fresh, "sampler_pool.host_cpu_count") or 0
     s41 = _get(fresh, "sampler_pool.speedup_4v1")
     sbest = _get(fresh, "sampler_pool.speedup_best")
@@ -88,6 +126,7 @@ def main() -> int:
     ap.add_argument("--fresh", default="BENCH_pipeline.json")
     ap.add_argument("--nvtps-tolerance", type=float, default=0.25)
     ap.add_argument("--pool-speedup", type=float, default=1.5)
+    ap.add_argument("--gather-tolerance", type=float, default=1.0)
     args = ap.parse_args()
 
     with open(args.fresh) as fh:
@@ -105,7 +144,7 @@ def main() -> int:
         return 0
 
     failures = compare(baseline, fresh, args.nvtps_tolerance,
-                       args.pool_speedup)
+                       args.pool_speedup, args.gather_tolerance)
     if failures:
         for f in failures:
             print(f"check_regression: FAIL: {f}")
@@ -113,6 +152,7 @@ def main() -> int:
     print(f"check_regression: PASS "
           f"(nvtps {max(_get(fresh, 'epoch.nvtps_sequential') or 0, _get(fresh, 'epoch.nvtps_pipelined') or 0):.0f}, "
           f"h2d {_get(fresh, 'layout.h2d_bytes_per_iter_compact')} B/iter, "
+          f"ring {_get(fresh, 'gather_offload.ring_bytes_per_iter') or 0:.0f} B/iter, "
           f"pool speedup_4v1 {_get(fresh, 'sampler_pool.speedup_4v1'):.2f})")
     return 0
 

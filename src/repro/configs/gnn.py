@@ -39,8 +39,21 @@ class GNNModelConfig:
     # How sampled mini-batches map to devices within a synchronous
     # iteration: "round_robin" keeps the scheduler's static assignment;
     # "load" re-assigns by the per-batch work estimate (vertices + edges
-    # traversed, Eq. 5) — heaviest batch to the least-loaded device.
+    # traversed + gathered feature rows x dim, Eq. 5) — heaviest batch to
+    # the least-loaded device.
     balance_policy: str = "round_robin"
+    # Stage-2 offload (paper §4.2: the host prepares READY-TO-CONSUME
+    # payloads): with the sampling service active, gather each batch's
+    # feature rows inside the worker that sampled it and ship only the
+    # rows non-resident on the target device through the shared-memory
+    # ring — the training thread keeps just device placement. Ignored (a
+    # no-op) when num_sampler_workers == 0; training stays bit-identical
+    # per seed either way.
+    gather_in_workers: bool = False
+    # Pin sampler workers round-robin over the parent's allowed cores
+    # (os.sched_setaffinity; Linux-only, silent no-op elsewhere) so N
+    # gather streams do not migrate across cores/NUMA domains mid-epoch.
+    worker_affinity: bool = False
 
 
 @dataclass(frozen=True)

@@ -1,64 +1,43 @@
-"""Feature-storing strategies + the runtime feature cache (paper Table 1,
-§5.2 data-communication optimization).
+"""Device-side feature store: gathers + beta accounting over a jax-free
+residency core (paper Table 1, §5.2 data-communication optimization).
 
-Strategy -> which rows of X live in each device's HBM (the FPGA local DDR
-analogue):
-  * DistDGL : X_i = rows owned by partition i.
-  * PaGraph : X_i = partition rows + highest OUT-degree rows up to a cache
-              budget (replicated hot set).
-  * P3      : every device holds ALL rows but only a 1/p slice of the
-              feature DIMENSION (intra-layer model parallelism).
-
-Residency representation: each device keeps a SORTED int32 array of its
-resident vertex ids (O(cache size) memory) — not the (p, V) boolean matrix
-an earlier revision used, which cost O(p*V) host memory and a fancy-indexed
-row probe per gather. Membership tests are one vectorized ``searchsorted``
-against the device's sorted id array; P3's all-rows residency is a flag, so
-it costs O(1). ``is_resident`` / ``resident_ids`` / ``num_resident`` are the
-query API.
+The residency math itself — which rows of X live in each device's HBM, the
+vectorized membership tests, miss-row selection, and P3's feature-dimension
+slice bookkeeping — lives in :mod:`repro.core.residency` so the sampler-pool
+workers can import it without touching this module's callers. This class is
+the trainer's view: it builds the :class:`~repro.core.residency.ResidencyCore`
+for a (graph, partition, strategy) triple and layers the runtime gathers and
+per-device beta (paper Eq. 7) accounting on top.
 
 At runtime ``gather()`` serves a mini-batch's feature rows: cache hits read
 device HBM; misses are fetched FROM HOST MEMORY (the paper's DC
-optimization — never peer-to-peer). beta (paper Eq. 7) — the fraction of
-bytes served locally — is accounted per gather and drives the DSE/simulator.
+optimization — never peer-to-peer). When the sampling service gathers in its
+workers (``gather_in_workers``), the shipped miss rows arrive through the
+shared-memory ring and ``place_gathered()`` runs the device-placement tail:
+memcpy the shipped rows, read the resident rows from HBM, account beta —
+bitwise identical to the in-process ``gather`` for the same batch.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import List, Optional
 
 import numpy as np
 
-from repro.data.graphs import Graph
 from repro.core.partition import Partition
+from repro.core.residency import (GatherStats, ResidencyCore, assemble_rows,
+                                  build_residency)
+from repro.data.graphs import Graph
 
-
-@dataclass
-class GatherStats:
-    local_bytes: int = 0
-    host_bytes: int = 0
-    local_rows: int = 0
-    host_rows: int = 0
-
-    @property
-    def beta(self) -> float:
-        t = self.local_bytes + self.host_bytes
-        return self.local_bytes / t if t else 1.0
-
-    def merge(self, other: "GatherStats") -> None:
-        self.local_bytes += other.local_bytes
-        self.host_bytes += other.host_bytes
-        self.local_rows += other.local_rows
-        self.host_rows += other.host_rows
+__all__ = ["FeatureStore", "GatherStats", "STRATEGY_BY_ALGORITHM"]
 
 
 class FeatureStore:
     """Per-device feature residency + gather with beta accounting.
 
     The host always holds the full X (paper §4.2), so misses are host reads.
-    Residency is compact: per device either a sorted id array
-    (``_resident_ids[i]``) or the ``_all_resident[i]`` flag (P3 — every row
-    resident as a feature-dimension slice).
+    Residency queries delegate to ``self.core`` (compact: per device either
+    a sorted id array or the all-resident flag — P3, every row resident as a
+    feature-dimension slice).
     """
 
     def __init__(self, graph: Graph, partition: Partition, strategy: str,
@@ -67,64 +46,48 @@ class FeatureStore:
         self.p = partition.num_parts
         self.strategy = strategy
         self.stats = [GatherStats() for _ in range(self.p)]
-        V = graph.num_vertices
-        self._resident_ids: List[np.ndarray] = [
-            np.empty(0, np.int32) for _ in range(self.p)]
-        self._all_resident = [False] * self.p
-        self.feature_slice = [slice(None)] * self.p
+        self.core: ResidencyCore = build_residency(
+            graph, partition, strategy, cache_budget_frac)
+        # legacy views kept for callers/tests that poke the raw residency
+        self._resident_ids: List[np.ndarray] = self.core._resident_ids
+        self._all_resident = self.core._all_resident
+        self.feature_slice = [self.core.feature_slice(i)
+                              for i in range(self.p)]
 
-        if strategy in ("distdgl", "metis_like"):
-            for i in range(self.p):
-                self._resident_ids[i] = np.sort(
-                    partition.part_vertices(i)).astype(np.int32)
-        elif strategy == "pagraph":
-            budget = int(V * cache_budget_frac)
-            hot = np.argsort(-graph.out_degree())[:budget]
-            for i in range(self.p):
-                self._resident_ids[i] = np.union1d(
-                    partition.part_vertices(i), hot).astype(np.int32)
-        elif strategy == "p3":
-            f = graph.features.shape[1]
-            chunk = (f + self.p - 1) // self.p
-            for i in range(self.p):
-                self._all_resident[i] = True  # all rows, 1/p of the columns
-                self.feature_slice[i] = slice(i * chunk, min(f, (i + 1) * chunk))
-        else:
-            raise ValueError(f"unknown feature-storing strategy {strategy!r}")
-
-    # -- residency queries ----------------------------------------------------
+    # -- residency queries (delegated) ----------------------------------------
     def num_resident(self, device: int) -> int:
         """How many vertex rows live in ``device``'s HBM."""
-        if self._all_resident[device]:
-            return self.g.num_vertices
-        return len(self._resident_ids[device])
+        return self.core.num_resident(device)
 
     def resident_ids(self, device: int) -> np.ndarray:
         """Sorted vertex ids resident on ``device`` (materialized for P3)."""
-        if self._all_resident[device]:
-            return np.arange(self.g.num_vertices, dtype=np.int32)
-        return self._resident_ids[device]
+        return self.core.resident_ids(device)
 
     def is_resident(self, device: int, vertex_ids: np.ndarray) -> np.ndarray:
-        """Vectorized membership: bool mask of which ids are device-local.
-
-        One ``searchsorted`` against the device's sorted resident-id array —
-        O(n log cache) per batch with no O(V) structure touched."""
-        ids = np.asarray(vertex_ids)
-        if self._all_resident[device]:
-            return np.ones(len(ids), bool)
-        r = self._resident_ids[device]
-        if len(r) == 0:
-            return np.zeros(len(ids), bool)
-        pos = np.searchsorted(r, ids)
-        pos_clip = np.minimum(pos, len(r) - 1)
-        return (pos < len(r)) & (r[pos_clip] == ids)
+        """Vectorized membership: bool mask of which ids are device-local."""
+        return self.core.is_resident(device, vertex_ids)
 
     def device_bytes(self, device: int) -> int:
-        f = self.g.features.shape[1]
-        sl = self.feature_slice[device]
-        width = len(range(*sl.indices(f)))
-        return self.num_resident(device) * width * 4
+        return self.core.device_bytes(device)
+
+    # -- beta accounting -------------------------------------------------------
+    def account_rows(self, device: int, n_hit: int, n_miss: int) -> None:
+        """Fold one batch's hit/miss row counts into ``device``'s Eq. 7
+        accounting (rows x the device's feature width x 4 bytes)."""
+        st = self.stats[device]
+        width = self.core.slice_width(device)
+        st.local_rows += n_hit
+        st.host_rows += n_miss
+        st.local_bytes += n_hit * width * 4
+        st.host_bytes += n_miss * width * 4
+
+    def account_p3_full(self, n_valid: int) -> None:
+        """P3 layer-1 all-to-all accounting: every device contributes its
+        slice of each valid row as a LOCAL (HBM) read (beta stays 1)."""
+        for d in range(self.p):
+            st = self.stats[d]
+            st.local_rows += n_valid
+            st.local_bytes += n_valid * self.core.slice_width(d) * 4
 
     # -- gathers --------------------------------------------------------------
     def gather(self, device: int, vertex_ids: np.ndarray,
@@ -138,16 +101,12 @@ class FeatureStore:
         ids = np.asarray(vertex_ids)
         valid = np.ones(len(ids), bool) if mask is None else np.asarray(mask)
         f = self.g.features.shape[1]
-        res = self.is_resident(device, ids)
+        res = self.core.is_resident(device, ids)
         hit = res & valid
         miss = (~res) & valid
-        st = self.stats[device]
+        self.account_rows(device, int(hit.sum()), int(miss.sum()))
         sl = self.feature_slice[device]
-        width = len(range(*sl.indices(f)))
-        st.local_rows += int(hit.sum())
-        st.host_rows += int(miss.sum())
-        st.local_bytes += int(hit.sum()) * width * 4
-        st.host_bytes += int(miss.sum()) * width * 4
+        width = self.core.slice_width(device)
         if width == f:
             out = self.g.features[ids].copy()
         else:  # P3: local slice only, zero-widened to full feature dim
@@ -155,6 +114,33 @@ class FeatureStore:
             out[:, sl] = self.g.features[ids, sl]
         out[~valid] = 0.0
         return out
+
+    def place_gathered(self, device: int, vertex_ids: np.ndarray,
+                       mask: np.ndarray, pos: np.ndarray, rows: np.ndarray,
+                       p3_full: bool = False,
+                       shipped_for: Optional[int] = None) -> np.ndarray:
+        """Device placement for rows gathered INSIDE a sampler worker
+        (``ResidencyCore.select_ship_rows``): the shipped rows land by
+        memcpy, the remaining valid rows are resident HBM reads, and beta is
+        accounted for THIS device. ``shipped_for`` names the device the
+        worker gathered for: when it matches (always under round_robin),
+        the shipped row count IS this device's miss count and no residency
+        probe runs here; when the dynamic balancer moved the batch, the
+        accounting is re-derived for the actual placement (the values are
+        device-independent, so the output stays bitwise identical to the
+        in-process ``gather``/``gather_p3_full`` either way)."""
+        ids = np.asarray(vertex_ids)
+        valid = np.asarray(mask, bool)
+        n_valid = int(valid.sum())
+        if p3_full:
+            self.account_p3_full(n_valid)
+        elif shipped_for == device:
+            self.account_rows(device, n_valid - len(pos), len(pos))
+        else:
+            res = self.core.is_resident(device, ids)
+            n_hit = int((res & valid).sum())
+            self.account_rows(device, n_hit, n_valid - n_hit)
+        return assemble_rows(self.g.features, ids, valid, pos, rows)
 
     def gather_p3_slice(self, device: int, vertex_ids: np.ndarray
                         ) -> np.ndarray:
@@ -172,16 +158,9 @@ class FeatureStore:
         stays 1)."""
         ids = np.asarray(vertex_ids)
         valid = np.ones(len(ids), bool) if mask is None else np.asarray(mask)
-        f = self.g.features.shape[1]
         out = self.g.features[ids]  # fancy indexing: already a fresh array
         out[~valid] = 0.0
-        n = int(valid.sum())
-        for d in range(self.p):
-            sl = self.feature_slice[d]
-            width = len(range(*sl.indices(f)))
-            st = self.stats[d]
-            st.local_rows += n
-            st.local_bytes += n * width * 4
+        self.account_p3_full(int(valid.sum()))
         return out
 
     def beta(self, device: Optional[int] = None) -> float:

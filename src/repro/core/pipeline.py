@@ -47,11 +47,17 @@ class PipelineStats:
     ``produce_s`` is the wall time the worker spent inside ``prepare`` (the
     sample+gather stages); ``wait_s`` is how long the consumer blocked on an
     empty queue (host-bound iterations); overlap quality is visible as
-    wait_s << produce_s."""
+    wait_s << produce_s. ``gather_s`` isolates the stage-2 share of
+    ``produce_s`` — the feature gather (in-process) or placement tail
+    (worker-gathered rows) — and ``ring_bytes`` counts the payload bytes
+    that crossed the sampling service's shared-memory ring, so the stage-2
+    offload's effect on the training thread is measurable per epoch."""
 
     items: int = 0
     produce_s: float = 0.0
     wait_s: float = 0.0
+    gather_s: float = 0.0
+    ring_bytes: int = 0
 
 
 class PrefetchExecutor:

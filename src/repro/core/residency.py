@@ -1,0 +1,296 @@
+"""Jax-free feature-residency core (paper Table 1 placement + §5.2 DC math).
+
+This module is the process-portable half of the feature store: everything a
+sampler WORKER needs to decide which feature rows of a mini-batch must cross
+the bus to a given device — per-device sorted resident-id arrays, vectorized
+membership tests, miss-row selection, and P3's feature-dimension slice math —
+with zero jax (and zero Graph/Partition) dependencies, so
+``core/sampler_pool.py`` workers can import it next to the sampler and the
+layout builders. The device-side view (gather + beta accounting) stays in
+``core/feature_store.FeatureStore``, which wraps one :class:`ResidencyCore`.
+
+Shipping the core to workers reuses the shared-memory idiom of the graph
+store: ``to_shared()`` copies the (concatenated) resident-id arrays ONCE into
+a named segment and returns a picklable spec; ``from_shared(spec)`` attaches
+zero-copy views. Residency is O(cache) per device, so the segment is small
+next to the feature matrix the workers already share via ``Graph.to_shared``.
+
+HitGNN's software generator runs the ENTIRE data-preparation path — sampling
+AND feature gathering — on the host CPU so the accelerators only ever see
+ready-to-consume payloads (paper §4.2), with PaGraph-style caching deciding
+which rows actually move. ``select_ship_rows`` is that decision, evaluated
+inside a worker: only the rows non-resident on the target device are
+gathered and shipped; resident rows are device-HBM reads the trainer
+materializes at placement time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass
+class GatherStats:
+    """Per-device byte/row accounting for beta (paper Eq. 7)."""
+
+    local_bytes: int = 0
+    host_bytes: int = 0
+    local_rows: int = 0
+    host_rows: int = 0
+
+    @property
+    def beta(self) -> float:
+        t = self.local_bytes + self.host_bytes
+        return self.local_bytes / t if t else 1.0
+
+    def merge(self, other: "GatherStats") -> None:
+        self.local_bytes += other.local_bytes
+        self.host_bytes += other.host_bytes
+        self.local_rows += other.local_rows
+        self.host_rows += other.host_rows
+
+
+@dataclass(frozen=True)
+class SharedResidencySpec:
+    """Picklable descriptor of a shared-memory-resident ResidencyCore: the
+    segment holding the concatenated id arrays plus the (tiny) geometry."""
+
+    segment: "object"               # data.graphs.SharedArraySpec
+    offsets: Tuple[int, ...]        # device i's ids = ids_cat[off[i]:off[i+1]]
+    all_resident: Tuple[bool, ...]
+    slices: Tuple[Tuple[int, int], ...]
+    num_vertices: int
+    feat_dim: int
+
+
+class ResidencyCore:
+    """Which feature rows live in each device's HBM — numpy only.
+
+    Residency representation (unchanged from the feature store this was
+    split out of): each device keeps a SORTED int32 array of its resident
+    vertex ids (O(cache size) memory), or the ``all_resident`` flag (P3 —
+    every row resident as a feature-dimension slice, O(1)). Membership tests
+    are one vectorized ``searchsorted`` per batch.
+    """
+
+    def __init__(self, num_vertices: int, feat_dim: int,
+                 resident_ids: Sequence[np.ndarray],
+                 all_resident: Sequence[bool],
+                 slices: Sequence[Tuple[int, int]]):
+        self.num_vertices = num_vertices
+        self.feat_dim = feat_dim
+        self._resident_ids: List[np.ndarray] = [
+            np.asarray(r, np.int32) for r in resident_ids]
+        self._all_resident = list(all_resident)
+        self._slices = [tuple(s) for s in slices]
+
+    @property
+    def num_devices(self) -> int:
+        return len(self._all_resident)
+
+    # -- residency queries ----------------------------------------------------
+    def num_resident(self, device: int) -> int:
+        """How many vertex rows live in ``device``'s HBM."""
+        if self._all_resident[device]:
+            return self.num_vertices
+        return len(self._resident_ids[device])
+
+    def resident_ids(self, device: int) -> np.ndarray:
+        """Sorted vertex ids resident on ``device`` (materialized for P3)."""
+        if self._all_resident[device]:
+            return np.arange(self.num_vertices, dtype=np.int32)
+        return self._resident_ids[device]
+
+    def is_resident(self, device: int, vertex_ids: np.ndarray) -> np.ndarray:
+        """Vectorized membership: bool mask of which ids are device-local.
+
+        One ``searchsorted`` against the device's sorted resident-id array —
+        O(n log cache) per batch with no O(V) structure touched."""
+        ids = np.asarray(vertex_ids)
+        if self._all_resident[device]:
+            return np.ones(len(ids), bool)
+        r = self._resident_ids[device]
+        if len(r) == 0:
+            return np.zeros(len(ids), bool)
+        pos = np.searchsorted(r, ids)
+        pos_clip = np.minimum(pos, len(r) - 1)
+        return (pos < len(r)) & (r[pos_clip] == ids)
+
+    def miss_count(self, device: int, vertex_ids: np.ndarray,
+                   mask: Optional[np.ndarray] = None) -> int:
+        """How many of the (valid) rows would cross the bus to ``device`` —
+        the gathered-feature term of the Eq. 5 work estimate."""
+        ids = np.asarray(vertex_ids)
+        valid = np.ones(len(ids), bool) if mask is None else np.asarray(mask)
+        return int(((~self.is_resident(device, ids)) & valid).sum())
+
+    # -- P3 slice math --------------------------------------------------------
+    def feature_slice(self, device: int) -> slice:
+        start, stop = self._slices[device]
+        return slice(start, stop)
+
+    def slice_width(self, device: int) -> int:
+        start, stop = self._slices[device]
+        return max(0, min(stop, self.feat_dim) - start)
+
+    def device_bytes(self, device: int) -> int:
+        return self.num_resident(device) * self.slice_width(device) * 4
+
+    # -- worker-side stage 2: miss-row selection ------------------------------
+    def select_ship_rows(self, device: int, features: np.ndarray,
+                         vertex_ids: np.ndarray, mask: np.ndarray,
+                         p3_full: bool = False
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+        """The rows of a batch that must travel to ``device`` through the
+        result ring, gathered from the (shared) feature matrix.
+
+        Returns ``(pos, rows)``: ``pos`` indexes into ``vertex_ids`` (int32),
+        ``rows`` is the (M, f) float32 block. Non-P3: only the MISS rows
+        (non-resident on ``device``) ship — resident rows are device-HBM
+        reads the consumer materializes locally, so ring traffic equals the
+        paper's cached-gather bus traffic. P3 (``p3_full``): every device
+        holds a 1/p feature-dimension slice of every row, and layer 1 runs
+        the Listing-3 all-to-all; the p slices tile the feature dimension,
+        so the worker ships their concatenation — the reconstructed full
+        rows — for ALL valid positions: the ring carries (a superset of) the
+        all-to-all exchange and the consumer does no gathering at all."""
+        ids = np.asarray(vertex_ids)
+        valid = np.asarray(mask, bool)
+        if p3_full:
+            pos = np.flatnonzero(valid)
+        else:
+            pos = np.flatnonzero((~self.is_resident(device, ids)) & valid)
+        rows = np.ascontiguousarray(features[ids[pos]], dtype=np.float32)
+        return pos.astype(np.int32), rows
+
+    # -- shared-memory residency ----------------------------------------------
+    def to_shared(self) -> "SharedResidency":
+        """Copy the resident-id arrays ONCE into a named shared-memory
+        segment. Returns the owning handle (same close/unlink discipline as
+        ``data.graphs.SharedGraph``); its picklable ``spec`` attaches
+        workers zero-copy via :meth:`from_shared`."""
+        return SharedResidency(self)
+
+    @classmethod
+    def from_shared(cls, spec: SharedResidencySpec) -> "ResidencyCore":
+        """Attach a core whose id arrays are zero-copy views over the shared
+        segment described by ``spec``. The attachment handle rides on the
+        instance (``_shm_handles``) for its lifetime; attachers never
+        unlink."""
+        from repro.data.graphs import attach_arrays  # local: avoid cycle
+        handles, arrays = attach_arrays({"resident_cat": spec.segment})
+        cat = arrays["resident_cat"]
+        off = spec.offsets
+        ids = [cat[off[i]:off[i + 1]] for i in range(len(off) - 1)]
+        core = cls(spec.num_vertices, spec.feat_dim, ids, spec.all_resident,
+                   spec.slices)
+        core._shm_handles = handles
+        return core
+
+
+class SharedResidency:
+    """Owner handle for a ResidencyCore copied into shared memory.
+
+    One segment holds every device's sorted id array back to back (the
+    per-device offsets travel in the picklable spec). ``close`` is
+    idempotent and unlinks; context-manager exit and ``__del__`` both run it
+    so the segment never outlives its pool."""
+
+    def __init__(self, core: ResidencyCore):
+        from repro.data.graphs import share_arrays  # local: avoid cycle
+        p = core.num_devices
+        lengths = [0 if core._all_resident[i] else len(core._resident_ids[i])
+                   for i in range(p)]
+        offsets = np.concatenate([[0], np.cumsum(lengths)]).astype(np.int64)
+        cat = (np.concatenate([core._resident_ids[i]
+                               for i in range(p) if not core._all_resident[i]]
+                              ).astype(np.int32)
+               if sum(lengths) else np.empty(0, np.int32))
+        self._segments, specs = share_arrays({"resident_cat": cat})
+        self.spec = SharedResidencySpec(
+            specs["resident_cat"], tuple(int(o) for o in offsets),
+            tuple(core._all_resident), tuple(core._slices),
+            core.num_vertices, core.feat_dim)
+        self._closed = False
+
+    def close(self, unlink: bool = True) -> None:
+        if getattr(self, "_closed", False):
+            return
+        self._closed = True
+        for shm in self._segments:
+            try:
+                shm.close()
+            except Exception:
+                pass
+            if unlink:
+                try:
+                    shm.unlink()
+                except FileNotFoundError:
+                    pass
+
+    def __enter__(self) -> "SharedResidency":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(unlink=True)
+
+    def __del__(self):
+        try:
+            self.close(unlink=True)
+        except Exception:
+            pass
+
+
+def build_residency(graph, partition, strategy: str,
+                    cache_budget_frac: float = 0.25) -> ResidencyCore:
+    """Feature-storing strategy -> ResidencyCore (paper Table 1).
+
+    * DistDGL : X_i = rows owned by partition i.
+    * PaGraph : X_i = partition rows + highest OUT-degree rows up to a cache
+                budget (replicated hot set).
+    * P3      : every device holds ALL rows but only a 1/p slice of the
+                feature DIMENSION (intra-layer model parallelism).
+    """
+    p = partition.num_parts
+    V = graph.num_vertices
+    f = graph.features.shape[1]
+    resident: List[np.ndarray] = [np.empty(0, np.int32) for _ in range(p)]
+    all_res = [False] * p
+    slices: List[Tuple[int, int]] = [(0, f)] * p
+    if strategy in ("distdgl", "metis_like"):
+        for i in range(p):
+            resident[i] = np.sort(partition.part_vertices(i)).astype(np.int32)
+    elif strategy == "pagraph":
+        budget = int(V * cache_budget_frac)
+        hot = np.argsort(-graph.out_degree())[:budget]
+        for i in range(p):
+            resident[i] = np.union1d(
+                partition.part_vertices(i), hot).astype(np.int32)
+    elif strategy == "p3":
+        chunk = (f + p - 1) // p
+        all_res = [True] * p
+        slices = [(i * chunk, min(f, (i + 1) * chunk)) for i in range(p)]
+    else:
+        raise ValueError(f"unknown feature-storing strategy {strategy!r}")
+    return ResidencyCore(V, f, resident, all_res, slices)
+
+
+def assemble_rows(features: np.ndarray, vertex_ids: np.ndarray,
+                  mask: np.ndarray, pos: np.ndarray, rows: np.ndarray
+                  ) -> np.ndarray:
+    """Device placement for a worker-gathered batch: shipped rows memcpy in,
+    the remaining valid rows are resident reads out of ``features`` (the
+    simulated device HBM — the host holds the full X, paper §4.2), invalid
+    (padding) rows stay zero. Bitwise identical to the in-process
+    ``FeatureStore.gather`` / ``gather_p3_full`` output for the same batch,
+    whichever device the rows were selected for."""
+    ids = np.asarray(vertex_ids)
+    valid = np.asarray(mask, bool)
+    out = np.zeros((len(ids), features.shape[1]), np.float32)
+    local = valid.copy()
+    local[pos] = False
+    out[local] = features[ids[local]]
+    out[pos] = rows
+    return out

@@ -1,11 +1,12 @@
 """Multi-process sampling service over a shared-memory graph store.
 
-HitGNN's software generator (paper §4.2) runs mini-batch sampling on the
-host CPU and must keep p accelerators fed (Eq. 5). One Python thread cannot:
-once the compact stage-2 path made device prep cheap, the single-threaded
-sampler became the pipeline's rate limiter. This module scales that stage
-the way DistDGL-style deployments do — N sampler worker PROCESSES over one
-shared in-memory topology:
+HitGNN's software generator (paper §4.2) runs the ENTIRE data-preparation
+path — mini-batch sampling AND feature gathering — on the host CPU and must
+keep p accelerators fed (Eq. 5). One Python thread cannot: once the compact
+stage-2 path made device prep cheap, the single-threaded host stages became
+the pipeline's rate limiter. This module scales those stages the way
+DistDGL-style deployments do — N data-preparation worker PROCESSES over one
+shared in-memory store:
 
   * the parent copies the graph ONCE into ``multiprocessing.shared_memory``
     segments (``data/graphs.Graph.to_shared``); each worker attaches
@@ -13,12 +14,17 @@ shared in-memory topology:
     feature replication, O(graph) total host memory regardless of N;
   * each worker runs the vectorized layered sampler AND the compact
     stage-2b block-CSR layout build (``kernels/layout.build_layer_layouts``)
-    — both pure numpy, so workers never import jax — taking the two most
-    expensive host stages off the training process entirely;
-  * tasks are ``(seq, partition, epoch, batch_index)`` tuples. Batches are
-    pure functions of those coordinates (the sampler's counter-based RNG
-    streams), so ANY worker may execute ANY task and the result is
-    bit-identical to the single-process path;
+    AND — when a residency core is provided — the stage-2 FEATURE GATHER
+    (``core/residency.ResidencyCore.select_ship_rows``): only the rows
+    non-resident on the batch's target device are read out of the shared
+    feature matrix and shipped, so ring traffic matches the paper's cached
+    gather (resident rows are device-HBM reads the trainer materializes at
+    placement). All of it is pure numpy — workers never import jax;
+  * tasks are ``(seq, partition, epoch, batch_index, device)`` tuples.
+    Batches are pure functions of the RNG coordinates (the sampler's
+    counter-based streams), so ANY worker may execute ANY task and the
+    result is bit-identical to the single-process path; ``device`` only
+    selects WHICH rows ship (the row values are device-independent);
   * completions flow through a sequence-numbered
     :class:`~repro.core.pipeline.ReorderBuffer`, so the consumer sees
     batches in exact submission order no matter which worker finished first.
@@ -28,45 +34,80 @@ payload of a fixed sampler config has STATIC shapes (the same property that
 gives one compiled executable per config), so a :class:`PayloadCodec` packs
 each batch into a fixed-size slot of a preallocated segment and the result
 queue carries only ``(seq, slot, meta)`` — the consumer pays ONE memcpy per
-batch instead of pickling ~1 MB of arrays through a pipe, which would
-otherwise dominate the per-batch cost and cancel the parallel speedup.
+batch instead of pickling ~1 MB of arrays through a pipe. The gathered
+feature rows ride a capacity-bounded VARIABLE-LENGTH tail of the slot (static
+max per config, actual row count in the header), and the consumer copies
+only the bytes actually used.
+
+Worker placement: with ``worker_affinity`` the workers are pinned round-robin
+over the parent's allowed cores via ``os.sched_setaffinity`` (Linux; a
+silent no-op elsewhere), so N gather streams do not migrate across NUMA
+domains mid-epoch.
 
 Failure behavior mirrors ``PrefetchExecutor``: a worker exception re-raises
 in the consumer at the point of ``fetch()`` with the worker's formatted
 traceback attached (``add_note`` on py311+, ``sampler_worker_traceback``
-otherwise). The pool is a context manager; shared segments are closed AND
-unlinked on every exit path, including error paths and KeyboardInterrupt.
+otherwise). The pool is a context manager; shared segments — graph, ring,
+and residency — are closed AND unlinked on every exit path, including error
+paths and KeyboardInterrupt.
 """
 from __future__ import annotations
 
 import multiprocessing as mp
+import os
 import pickle
 import traceback
+from dataclasses import dataclass
 from multiprocessing import shared_memory
-from typing import Any, Iterable, Iterator, List, Optional, Sequence, Tuple
+from typing import Any, Iterable, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.configs.gnn import GNNModelConfig
 from repro.core.pipeline import ReorderBuffer
+from repro.core.residency import ResidencyCore, SharedResidency
 from repro.core.sampler import MiniBatch, NeighborSampler, layer_capacities
 from repro.data.graphs import Graph, SharedGraphSpec
 from repro.kernels.layout import BLK, build_layer_layouts
 
-Task = Tuple[int, int, int]  # (partition, epoch, batch_index)
+# (partition, epoch, batch_index[, device]) — device defaults to partition
+Task = Union[Tuple[int, int, int], Tuple[int, int, int, int]]
+
+
+@dataclass(frozen=True)
+class FeatureShipSpec:
+    """Geometry of the gathered-rows segment of a ring slot.
+
+    ``rows_cap`` bounds how many feature rows one payload may ship (static
+    per config — the layer-0 node capacity covers the worst case of every
+    row missing); ``width`` is the feature dimension; ``p3_full`` selects
+    the P3 all-to-all path (ship the reconstructed full rows for every
+    valid position instead of the miss rows)."""
+
+    rows_cap: int
+    width: int
+    p3_full: bool = False
 
 
 class PayloadCodec:
     """Fixed layout of one sampled payload (MiniBatch + optional stage-2b
-    block-CSR arrays) inside a shared-memory ring slot.
+    block-CSR arrays + optional gathered feature rows) inside a
+    shared-memory ring slot.
 
     Every array of a fixed sampler config has a static padded shape, so the
-    byte layout is a pure function of ``(cfg, blk_caps)`` — parent and
-    workers construct identical codecs independently. Offsets are 8-byte
-    aligned; ``decode`` copies the slot ONCE into private memory and hands
-    out zero-copy views over that copy, so the slot recycles immediately."""
+    byte layout is a pure function of ``(cfg, blk_caps, feat_spec)`` —
+    parent and workers construct identical codecs independently. Offsets
+    are 8-byte aligned; ``decode`` copies the USED bytes of the slot ONCE
+    into private memory and hands out zero-copy views over that copy, so
+    the slot recycles immediately.
 
-    def __init__(self, cfg: GNNModelConfig, blk_caps: Optional[list]):
+    The feature segment is the one variable-length part: ``feat_count``
+    (header) says how many of the ``rows_cap`` row slots are real, and the
+    rows block sits LAST in the slot so the consumer's memcpy stops after
+    the last real row instead of paying for the full capacity."""
+
+    def __init__(self, cfg: GNNModelConfig, blk_caps: Optional[list],
+                 feat_spec: Optional[FeatureShipSpec] = None):
         n_caps, e_caps = layer_capacities(cfg)
         L = cfg.num_layers
         spec: List[Tuple[str, int, tuple, np.dtype]] = []
@@ -98,19 +139,56 @@ class PayloadCodec:
                              np.dtype(np.int32)))
                 spec.append(("agg_cols_t", l, (n_srcb, max_blk_t),
                              np.dtype(np.int32)))
+        self.feat = feat_spec
+        if feat_spec is not None:
+            spec.append(("feat_count", -1, (1,), np.dtype(np.int32)))
+            spec.append(("feat_pos", -1, (feat_spec.rows_cap,),
+                         np.dtype(np.int32)))
         self.entries = []
         off = 0
         for key, l, shape, dtype in spec:
             self.entries.append((key, l, shape, dtype, off))
             size = int(np.prod(shape)) * dtype.itemsize
             off += (size + 7) & ~7  # keep every entry 8-byte aligned
+        self.fixed_nbytes = off
+        self.feat_rows_off = off
+        self.row_nbytes = 0
+        if feat_spec is not None:
+            self.row_nbytes = feat_spec.width * 4
+            off += feat_spec.rows_cap * self.row_nbytes
         self.nbytes = off
         self.num_layers = L
 
+    def used_nbytes(self, feat_count: int) -> int:
+        """Bytes of a slot actually carrying payload: the fixed part plus
+        the shipped feature rows — what one batch really moves through the
+        ring (and what the consumer memcpys out of it)."""
+        if self.feat is None:
+            return self.fixed_nbytes
+        return self.feat_rows_off + feat_count * self.row_nbytes
+
     def encode(self, mb: MiniBatch, layout: Optional[dict],
+               feats: Optional[Tuple[np.ndarray, np.ndarray]],
                buf, base: int) -> None:
+        if self.feat is not None:
+            pos, rows = feats if feats is not None else (
+                np.empty(0, np.int32), np.empty((0, self.feat.width),
+                                                np.float32))
+            m = len(pos)
+            if m > self.feat.rows_cap:
+                raise ValueError(
+                    f"feature ring capacity overflow: batch ships {m} rows "
+                    f"but the slot holds rows_cap={self.feat.rows_cap}; "
+                    f"raise the capacity (layer-0 node cap) or gather fewer "
+                    f"rows per payload")
         for key, l, shape, dtype, off in self.entries:
-            if key.startswith("agg_"):
+            if key == "feat_count":
+                arr = np.array([m], np.int32)
+            elif key == "feat_pos":
+                np.ndarray((m,), np.int32, buffer=buf,
+                           offset=base + off)[...] = pos
+                continue
+            elif key.startswith("agg_"):
                 arr = layout[key][l]
             elif l < 0:
                 arr = getattr(mb, key)
@@ -118,12 +196,24 @@ class PayloadCodec:
                 arr = getattr(mb, key)[l]
             np.ndarray(shape, dtype, buffer=buf,
                        offset=base + off)[...] = arr
+        if self.feat is not None and m:
+            np.ndarray((m, self.feat.width), np.float32, buffer=buf,
+                       offset=base + self.feat_rows_off)[...] = rows
 
-    def decode(self, buf, base: int, partition_id: int,
-               seq_no: int) -> Tuple[MiniBatch, Optional[dict]]:
-        private = np.empty(self.nbytes, np.uint8)
-        private[:] = np.ndarray((self.nbytes,), np.uint8, buffer=buf,
-                                offset=base)
+    def decode(self, buf, base: int, partition_id: int, seq_no: int
+               ) -> Tuple[MiniBatch, Optional[dict], Optional[dict], int]:
+        """One memcpy of the USED slot bytes -> (minibatch, layout, feats,
+        used_bytes). ``feats`` is ``{"pos", "rows"}`` views over the private
+        copy (or None when the codec ships no features)."""
+        m = 0
+        if self.feat is not None:
+            count_off = next(off for key, _, _, _, off in self.entries
+                             if key == "feat_count")
+            m = int(np.ndarray((1,), np.int32, buffer=buf,
+                               offset=base + count_off)[0])
+        used = self.used_nbytes(m)
+        private = np.empty(used, np.uint8)
+        private[:] = np.ndarray((used,), np.uint8, buffer=buf, offset=base)
         fields: dict = {k: [None] * self.num_layers
                         for k in ("nodes", "node_mask", "edge_src",
                                   "edge_dst", "edge_mask", "self_idx")}
@@ -136,7 +226,17 @@ class PayloadCodec:
                                 "agg_cols", "agg_tile_id_t",
                                 "agg_tile_off_t", "agg_cols_t")}
         scalars = {}
+        feats: Optional[dict] = None
         for key, l, shape, dtype, off in self.entries:
+            if key == "feat_count":
+                continue
+            if key == "feat_pos":
+                pos = private[off:off + m * 4].view(np.int32)
+                rows = private[self.feat_rows_off:
+                               self.feat_rows_off + m * self.row_nbytes
+                               ].view(np.float32).reshape(m, self.feat.width)
+                feats = {"pos": pos, "rows": rows}
+                continue
             size = int(np.prod(shape)) * dtype.itemsize
             arr = private[off:off + size].view(dtype).reshape(shape)
             if key.startswith("agg_"):
@@ -150,7 +250,7 @@ class PayloadCodec:
                        fields["edge_mask"], fields["self_idx"],
                        scalars["targets"], scalars["labels"],
                        partition_id, seq_no)
-        return mb, layout
+        return mb, layout, feats, used
 
 
 def _picklable_exc(e: BaseException) -> BaseException:
@@ -164,16 +264,38 @@ def _picklable_exc(e: BaseException) -> BaseException:
         return RuntimeError(f"{type(e).__name__}: {e}")
 
 
+def _pin_worker(worker_id: int, cores: Optional[Sequence[int]]) -> None:
+    """Round-robin CPU pinning for sampler workers (``worker_affinity``).
+
+    Pins worker w to core ``cores[w % len(cores)]`` of the parent's allowed
+    set, so N gather streams stay put instead of migrating across cores/NUMA
+    domains mid-epoch. ``sched_setaffinity`` is Linux-only; everywhere else
+    (and on any OS error) this is a silent no-op — placement is a
+    performance knob, never a correctness one."""
+    if not cores or not hasattr(os, "sched_setaffinity"):
+        return
+    try:
+        os.sched_setaffinity(0, {cores[worker_id % len(cores)]})
+    except OSError:
+        pass
+
+
 def _worker_main(worker_id: int, spec: SharedGraphSpec, cfg: GNNModelConfig,
                  train_ids: List[np.ndarray], seed: int,
                  agg_kind: Optional[str], blk_caps: Optional[list],
+                 res_spec: Optional[object],
+                 feat_spec: Optional[FeatureShipSpec],
+                 affinity_cores: Optional[Sequence[int]],
                  ring_name: str, task_q: Any, free_q: Any,
                  result_q: Any) -> None:
-    """Worker loop: attach the shared graph + result ring, serve tasks until
-    the ``None`` sentinel. Imports only numpy-side modules (sampler + layout
-    builders) — never jax."""
+    """Worker loop: attach the shared graph + residency + result ring, serve
+    tasks until the ``None`` sentinel. Imports only numpy-side modules
+    (sampler + layout builders + residency core) — never jax."""
+    _pin_worker(worker_id, affinity_cores)
     graph = Graph.from_shared(spec)
-    codec = PayloadCodec(cfg, blk_caps)
+    residency = (ResidencyCore.from_shared(res_spec)
+                 if res_spec is not None else None)
+    codec = PayloadCodec(cfg, blk_caps, feat_spec)
     ring = shared_memory.SharedMemory(name=ring_name)
     samplers = [NeighborSampler(graph, cfg, ids, p, seed)
                 for p, ids in enumerate(train_ids)]
@@ -182,7 +304,7 @@ def _worker_main(worker_id: int, spec: SharedGraphSpec, cfg: GNNModelConfig,
             task = task_q.get()
             if task is None:
                 return
-            seq, part, epoch, index = task
+            seq, part, epoch, index, device = task
             try:
                 mb = samplers[part].batch_at(epoch, index)
                 layout = None
@@ -190,12 +312,28 @@ def _worker_main(worker_id: int, spec: SharedGraphSpec, cfg: GNNModelConfig,
                     layout = build_layer_layouts(
                         mb.edge_src, mb.edge_dst, mb.edge_mask, blk_caps,
                         agg_kind)
+                feats = None
+                if residency is not None:
+                    # stage 2 in the worker: gather only what must cross
+                    # the bus to `device` (all valid rows for P3 all-to-all)
+                    feats = residency.select_ship_rows(
+                        device, graph.features, mb.nodes[0], mb.node_mask[0],
+                        p3_full=feat_spec.p3_full)
                 # acquire a ring slot only once the batch is ready: a worker
                 # never sits on a slot while it computes
                 slot = free_q.get()
-                codec.encode(mb, layout, ring.buf, slot * codec.nbytes)
+                try:
+                    codec.encode(mb, layout, feats, ring.buf,
+                                 slot * codec.nbytes)
+                except BaseException:
+                    # the consumer will never see this slot — recycle it
+                    # here or every encode failure (e.g. feature-capacity
+                    # overflow) leaks one slot until the pool wedges
+                    free_q.put(slot)
+                    raise
                 result_q.put((seq, "ok",
-                              (slot, part, index, mb.work_estimate())))
+                              (slot, part, index, device,
+                               mb.work_estimate())))
             except BaseException as e:  # surfaced at the consumer's fetch()
                 result_q.put((seq, "error",
                               (_picklable_exc(e), traceback.format_exc())))
@@ -204,14 +342,17 @@ def _worker_main(worker_id: int, spec: SharedGraphSpec, cfg: GNNModelConfig,
 
 
 class SamplerPool:
-    """N sampler worker processes over one shared-memory graph.
+    """N data-preparation worker processes over one shared-memory store.
 
-    ``submit(partition, epoch, index)`` enqueues a batch task and returns
-    its sequence number; ``fetch()`` returns payloads in exact submission
-    order (reorder buffer). A payload is a dict with keys ``minibatch``
-    (the :class:`MiniBatch`), ``layout`` (the stage-2b compact block-CSR
-    arrays, or None when no capacities were given) and ``load`` (the
-    Eq. 5 work estimate feeding the dynamic device balancer).
+    ``submit(partition, epoch, index, device)`` enqueues a batch task and
+    returns its sequence number; ``fetch()`` returns payloads in exact
+    submission order (reorder buffer). A payload is a dict with keys
+    ``minibatch`` (the :class:`MiniBatch`), ``layout`` (the stage-2b
+    compact block-CSR arrays, or None when no capacities were given),
+    ``features`` (``{"pos", "rows", "device"}`` worker-gathered rows, or
+    None when no residency core was given), ``ring_bytes`` (bytes this
+    payload moved through the ring) and ``load`` (the raw Eq. 5 work
+    estimate).
 
     Use as a context manager — or call :meth:`close` — to tear down worker
     processes and release/unlink the shared-memory segments. ``close`` is
@@ -223,6 +364,10 @@ class SamplerPool:
                  seed: int = 0, num_workers: int = 2,
                  agg_kind: Optional[str] = None,
                  blk_caps: Optional[list] = None,
+                 residency: Optional[ResidencyCore] = None,
+                 p3_full: bool = False,
+                 feat_rows_cap: Optional[int] = None,
+                 worker_affinity: bool = False,
                  num_slots: Optional[int] = None,
                  start_method: str = "spawn",
                  shared: Optional["object"] = None):
@@ -231,12 +376,19 @@ class SamplerPool:
         self.num_workers = num_workers
         self._closed = False
         self._ring: Optional[shared_memory.SharedMemory] = None
+        self._shared_res: Optional[SharedResidency] = None
         # `shared` lets several pools over the SAME graph reuse one set of
         # segments (O(graph) shm total, not O(pools)); the caller then owns
         # its lifetime and this pool never unlinks it.
         self._owns_shared = shared is None
         self._shared = graph.to_shared() if shared is None else shared
-        self._codec = PayloadCodec(cfg, blk_caps)
+        self.feat_spec: Optional[FeatureShipSpec] = None
+        if residency is not None:
+            cap = (feat_rows_cap if feat_rows_cap is not None
+                   else layer_capacities(cfg)[0][0])
+            self.feat_spec = FeatureShipSpec(cap, graph.features.shape[1],
+                                             p3_full)
+        self._codec = PayloadCodec(cfg, blk_caps, self.feat_spec)
         self.num_slots = (num_slots if num_slots is not None
                           else 2 * num_workers + 2)
         ctx = mp.get_context(start_method)
@@ -252,17 +404,25 @@ class SamplerPool:
         self._seq = 0
         self._outstanding = 0
         ids = [np.asarray(t, np.int32) for t in train_ids_per_partition]
+        affinity_cores: Optional[List[int]] = None
+        if worker_affinity and hasattr(os, "sched_getaffinity"):
+            affinity_cores = sorted(os.sched_getaffinity(0))
         try:
+            if residency is not None:
+                self._shared_res = residency.to_shared()
             self._ring = shared_memory.SharedMemory(
                 create=True, size=max(1, self.num_slots * self._codec.nbytes))
             for s in range(self.num_slots):
                 self._free_q.put(s)
+            res_spec = (self._shared_res.spec
+                        if self._shared_res is not None else None)
             self._procs = [
                 ctx.Process(target=_worker_main, name=f"hitgnn-sampler-{w}",
                             args=(w, self._shared.spec, cfg, ids, seed,
-                                  agg_kind, blk_caps, self._ring.name,
-                                  self._task_q, self._free_q,
-                                  self._result_q),
+                                  agg_kind, blk_caps, res_spec,
+                                  self.feat_spec, affinity_cores,
+                                  self._ring.name, self._task_q,
+                                  self._free_q, self._result_q),
                             daemon=True)
                 for w in range(num_workers)]
             for p in self._procs:
@@ -277,12 +437,18 @@ class SamplerPool:
         """Tasks submitted but not yet returned by ``fetch``."""
         return self._outstanding
 
-    def submit(self, partition: int, epoch: int, index: int) -> int:
+    def submit(self, partition: int, epoch: int, index: int,
+               device: Optional[int] = None) -> int:
+        """Enqueue one batch task. ``device`` is the target device whose
+        residency decides which feature rows ship (defaults to the
+        partition, the scheduler's static stage-1 mapping); it is ignored
+        when the pool gathers no features."""
         if self._closed:
             raise RuntimeError("SamplerPool is closed")
         seq = self._seq
         self._seq += 1
-        self._task_q.put((seq, partition, epoch, index))
+        dev = partition if device is None else device
+        self._task_q.put((seq, partition, epoch, index, dev))
         self._outstanding += 1
         return seq
 
@@ -324,19 +490,28 @@ class SamplerPool:
                 # decode ON ARRIVAL (one memcpy out of the ring) and recycle
                 # the slot immediately, so workers never starve for slots
                 # while the consumer waits on an earlier sequence number
-                slot, part, index, load = payload
-                mb, layout = self._codec.decode(
+                slot, part, index, device, load = payload
+                mb, layout, feats, used = self._codec.decode(
                     self._ring.buf, slot * self._codec.nbytes, part, index)
                 self._free_q.put(slot)
-                payload = {"minibatch": mb, "layout": layout, "load": load}
+                if feats is not None:
+                    feats["device"] = device
+                payload = {"minibatch": mb, "layout": layout,
+                           "features": feats, "ring_bytes": used,
+                           "load": load}
             self._rob.put(seq, (kind, payload))
 
     def map_tasks(self, tasks: Iterable[Task],
-                  window: Optional[int] = None) -> Iterator[dict]:
-        """Run ``(partition, epoch, index)`` tasks with a bounded submission
-        window, yielding payloads in task order. The window (default
-        ``4 * num_workers``) caps staged-but-unconsumed batches, bounding
-        host memory exactly like the prefetch executor's queue depth."""
+                  window: Optional[int] = None,
+                  fetch_timeout: float = 300.0) -> Iterator[dict]:
+        """Run ``(partition, epoch, index[, device])`` tasks with a bounded
+        submission window, yielding payloads in task order. The window
+        (default ``4 * num_workers``) caps staged-but-unconsumed batches,
+        bounding host memory exactly like the prefetch executor's queue
+        depth. ``fetch_timeout`` bounds the wait for any single result —
+        generous by default, because a single big-config batch on a loaded
+        host can legitimately take minutes while every worker is healthy
+        (dead workers are detected separately, within a poll interval)."""
         window = window if window is not None else 4 * self.num_workers
         it = iter(tasks)
         exhausted = False
@@ -350,7 +525,7 @@ class SamplerPool:
                 self.submit(*t)
             if exhausted and self._outstanding == 0:
                 return
-            yield self.fetch()
+            yield self.fetch(timeout=fetch_timeout)
 
     def _check_workers(self) -> None:
         dead = [(p.name, p.exitcode) for p in self._procs
@@ -362,8 +537,9 @@ class SamplerPool:
     # -- lifecycle -----------------------------------------------------------
     def close(self) -> None:
         """Idempotent teardown: stop workers, then close AND unlink the
-        shared-memory segments. Safe on error paths — runs from ``__exit__``
-        for any exception type, including KeyboardInterrupt."""
+        shared-memory segments (ring + residency + owned graph store). Safe
+        on error paths — runs from ``__exit__`` for any exception type,
+        including KeyboardInterrupt."""
         if self._closed:
             return
         self._closed = True
@@ -393,6 +569,8 @@ class SamplerPool:
                 self._ring.unlink()
             except FileNotFoundError:
                 pass
+        if self._shared_res is not None:
+            self._shared_res.close(unlink=True)
         if self._owns_shared:
             self._shared.close(unlink=True)
 

@@ -113,10 +113,11 @@ class LoadBalancer:
     synchronous iteration; this balancer decides WHERE each lands once its
     sampled size is known. ``"round_robin"`` keeps the schedule's static
     device assignment. ``"load"`` runs greedy LPT over the epoch's running
-    per-device load totals: the iteration's heaviest batch (by the Eq. 5
-    estimate — vertices + edges traversed) goes to the least-loaded device,
+    per-device load totals: the iteration's heaviest batch (by the
+    :meth:`batch_load` estimate) goes to the least-loaded device,
     deterministic ties broken by index, so the assignment is a pure function
-    of the batch stream and stays identical for any sampler-worker count.
+    of the batch stream and stays identical for any sampler-worker count or
+    gather placement.
     """
 
     def __init__(self, num_devices: int, policy: str = "round_robin"):
@@ -126,6 +127,19 @@ class LoadBalancer:
         self.num_devices = num_devices
         self.policy = policy
         self.load = [0.0] * num_devices
+
+    @staticmethod
+    def batch_load(work_estimate: float, miss_rows: int,
+                   feat_dim: int) -> float:
+        """Eq. 5 per-batch load including stage 2: the device step scales
+        with the vertices updated + edges traversed
+        (``MiniBatch.work_estimate``), and the batch additionally costs the
+        gathered-feature elements that must cross the bus to its device —
+        ``miss_rows * feat_dim`` (rows non-resident on the target device x
+        the feature width). Without this term a batch landing on a device
+        that caches none of its rows looks as cheap as one landing on the
+        device that caches them all."""
+        return float(work_estimate) + float(miss_rows) * float(feat_dim)
 
     def assign(self, assignments: Sequence[Assignment],
                loads: Sequence[float]) -> List[int]:

@@ -49,12 +49,24 @@ class SimConfig:
     sampling_overlap: bool = True    # pipelined host (prefetch executor)
     # Sampling service (core/sampler_pool.py): the sample + layout-build
     # stages parallelize over this many worker processes; gather stays on
-    # the consumer thread. t_ipc is the per-batch marshalling cost the
-    # parent pays to receive a worker result (pickle + queue crossing) —
-    # zero when sampling in-process (num_sampler_workers <= 1 models the
-    # single-stream host, matching the in-process path when t_ipc = 0).
+    # the consumer thread unless gather_in_workers moves it. t_ipc is the
+    # per-batch marshalling cost the parent pays to receive a worker result
+    # (pickle + queue crossing) — zero when sampling in-process
+    # (num_sampler_workers <= 1 models the single-stream host, matching the
+    # in-process path when t_ipc = 0).
     num_sampler_workers: int = 1
     t_ipc: float = 0.0
+    # Stage-2 offload: with gather_in_workers the per-batch feature gather
+    # (t_gather_worker) parallelizes over the workers like sampling, the
+    # consumer keeps only the placement tail (t_placement: resident-row HBM
+    # reads + the shipped-rows memcpy), and the shipped miss rows cost
+    # ring_bytes per batch of host-memory bandwidth to cross the
+    # shared-memory ring. All default 0.0 => the model is unchanged when
+    # the offload is off.
+    gather_in_workers: bool = False
+    t_gather_worker: float = 0.0
+    t_placement: float = 0.0
+    ring_bytes: float = 0.0
 
 
 def partition_batch_counts(train_vertices: int, p: int,
@@ -108,11 +120,20 @@ def simulate_epoch(model: GNNModelConfig, ds: GraphDatasetConfig,
     # the step dispatch, so it lands on the device side of the overlap.
     # Sampling + layout build parallelize over the sampling service's
     # worker processes (each result paying t_ipc to cross back); the
-    # feature gather serializes on the consumer thread.
+    # feature gather serializes on the consumer thread UNLESS the stage-2
+    # offload moves it into the workers too — then only the placement tail
+    # stays serial and each batch's shipped rows pay one host-bandwidth
+    # crossing of the shared-memory ring.
     w = max(1, sim.num_sampler_workers)
     t_gnn = gnn_time() + sim.h2d_layout_bytes / host_share
-    t_host = (sim.t_gather + (sim.t_sampling + sim.t_layout) / w
-              + (sim.t_ipc if sim.num_sampler_workers > 1 else 0.0))
+    t_ipc = sim.t_ipc if sim.num_sampler_workers > 1 else 0.0
+    if sim.gather_in_workers:
+        t_host = (sim.t_placement
+                  + (sim.t_sampling + sim.t_layout + sim.t_gather_worker) / w
+                  + t_ipc + sim.ring_bytes / pf.host_bw)
+    else:
+        t_host = (sim.t_gather + (sim.t_sampling + sim.t_layout) / w
+                  + t_ipc)
     t_exec = max(t_host, t_gnn) if sim.sampling_overlap else t_host + t_gnn
     grad_bytes = 4 * (ds.feat_dim * model.hidden
                       + (model.num_layers - 1) * model.hidden * model.hidden
@@ -136,6 +157,9 @@ def simulate_epoch(model: GNNModelConfig, ds: GraphDatasetConfig,
         "t_sampling": sim.t_sampling, "t_gather": sim.t_gather,
         "t_layout": sim.t_layout, "t_host": t_host,
         "num_sampler_workers": sim.num_sampler_workers,
+        "gather_in_workers": sim.gather_in_workers,
+        "t_gather_worker": sim.t_gather_worker,
+        "ring_bytes": sim.ring_bytes,
         "h2d_layout_bytes": sim.h2d_layout_bytes,
         "host_share_gbs": host_share / 1e9,
         "beta": beta,
@@ -148,9 +172,10 @@ def sampler_worker_curve(model: GNNModelConfig, ds: GraphDatasetConfig,
                          imbalance: float = 0.25, seed: int = 0
                          ) -> List[dict]:
     """Modelled epoch throughput vs sampling-service worker count: the
-    host's sample + layout stages shrink by 1/w (plus the per-batch IPC
-    toll) until the device step or the serial gather dominates Eq. 5's max —
-    the knee tells how many sampler processes the platform can use."""
+    host's sample + layout stages (and, with ``gather_in_workers``, the
+    feature gather) shrink by 1/w (plus the per-batch IPC toll) until the
+    device step or the serial consumer tail dominates Eq. 5's max — the
+    knee tells how many sampler processes the platform can use."""
     from dataclasses import replace
     out = []
     for w in worker_counts:

@@ -6,10 +6,15 @@ Per synchronous iteration (paper Fig. 2 / Alg. 2 + gradient sync):
      feature rows through the FeatureStore (cache hit = device HBM, miss =
      host fetch — DC optimization, with beta accounting), running one
      iteration AHEAD of the device so host work overlaps device compute
-     (paper Eq. 5-6). With ``aggregate_backend="pallas"`` the pipeline stage
-     also precomputes each layer's COMPACT block-CSR layout (forward +
-     transpose derived from a single edge-key sort, ~20 B/edge total) which the
-     device step densifies into tiles on the fly;
+     (paper Eq. 5-6). With a SamplerPool (``num_sampler_workers > 0``) the
+     sample + layout stages run in worker processes, and with
+     ``gather_in_workers`` the feature gather moves there too — workers ship
+     only the target device's miss rows through the shared-memory ring and
+     the training thread keeps just device placement
+     (``FeatureStore.place_gathered``). With ``aggregate_backend="pallas"``
+     the pipeline stage also precomputes each layer's COMPACT block-CSR
+     layout (forward + transpose derived from a single edge-key sort,
+     ~20 B/edge total) which the device step densifies into tiles on the fly;
   3. the p batches are stacked on a leading device axis and executed as ONE
      jit'd step: vmap over the device axis + weight-averaged loss =>
      gradients are the mean over the REAL batches (idle-device fill batches
@@ -101,11 +106,17 @@ class SyncGNNTrainer:
     pipeline: bool = True                  # overlap host stages w/ device step
     prefetch_depth: int = 2
     aggregate_backend: Optional[str] = None  # overrides model_cfg when set
-    # Sampling service knobs — None inherits the model_cfg value; an int/str
+    # Sampling service knobs — None inherits the model_cfg value; a value
     # here overrides it (mirroring aggregate_backend). Workers > 0 routes
-    # stage 1+2b through a SamplerPool of that many processes.
+    # stage 1+2b through a SamplerPool of that many processes;
+    # gather_in_workers additionally moves stage 2 (the feature gather)
+    # into those workers, shipping only the target device's miss rows
+    # through the shared-memory ring; worker_affinity pins the workers
+    # round-robin over the host's cores.
     num_sampler_workers: Optional[int] = None
     balance_policy: Optional[str] = None
+    gather_in_workers: Optional[bool] = None
+    worker_affinity: Optional[bool] = None
 
     def __post_init__(self):
         overrides = {}
@@ -115,10 +126,17 @@ class SyncGNNTrainer:
             overrides["num_sampler_workers"] = self.num_sampler_workers
         if self.balance_policy is not None:
             overrides["balance_policy"] = self.balance_policy
+        if self.gather_in_workers is not None:
+            overrides["gather_in_workers"] = self.gather_in_workers
+        if self.worker_affinity is not None:
+            overrides["worker_affinity"] = self.worker_affinity
         if overrides:
             self.model_cfg = dataclasses.replace(self.model_cfg, **overrides)
         self.num_sampler_workers = self.model_cfg.num_sampler_workers
         self.balance_policy = self.model_cfg.balance_policy
+        self.gather_in_workers = (self.model_cfg.gather_in_workers
+                                  and self.model_cfg.num_sampler_workers > 0)
+        self.worker_affinity = self.model_cfg.worker_affinity
         if self.model_cfg.aggregate_backend not in ("reference", "pallas"):
             raise ValueError(
                 f"unknown aggregate_backend "
@@ -175,6 +193,7 @@ class SyncGNNTrainer:
         self._pool: Optional[SamplerPool] = None
         self._balancer = sched.LoadBalancer(self.num_devices,
                                             self.balance_policy)
+        self._pstats = PipelineStats()
 
     def _use_kernel_layout(self) -> bool:
         return (self.model_cfg.aggregate_backend == "pallas"
@@ -266,22 +285,73 @@ class SyncGNNTrainer:
         return {"minibatch": mb, "layout": layout,
                 "load": mb.work_estimate()}
 
+    def _batch_load(self, a: sched.Assignment, payload: dict) -> float:
+        """Eq. 5 load estimate for the dynamic balancer, INCLUDING stage 2:
+        vertices + edges traversed (``payload["load"]`` — computed where
+        the batch was sampled, never re-derived here) plus the feature
+        elements that must cross the bus to the scheduled device (miss rows
+        x feature dim). When the worker already gathered for ``a.device``,
+        the shipped row count IS that miss count, so the training thread
+        does no residency probe at all. A pure function of the batch
+        stream + residency either way, so the estimate is identical for
+        every sampler-worker count and gather placement.
+
+        Under ``round_robin`` the balancer ignores loads (the assignment is
+        static) and the estimate only feeds the ``load_imbalance`` report
+        metric, so the miss probe is skipped entirely — the training thread
+        pays it only when the ``load`` policy actually consumes it."""
+        if self.balance_policy == "round_robin":
+            return payload["load"]
+        fpay = payload.get("features")
+        if self.algorithm == "p3":
+            miss = 0  # every row resident (sliced) — nothing crosses
+        elif fpay is not None and fpay["device"] == a.device:
+            miss = len(fpay["pos"])
+        else:
+            mb = payload["minibatch"]
+            miss = self.store.core.miss_count(a.device, mb.nodes[0],
+                                              mb.node_mask[0])
+        return sched.LoadBalancer.batch_load(
+            payload["load"], miss, self.graph.features.shape[1])
+
+    def _batch_features(self, dev: int, payload: dict) -> np.ndarray:
+        """Stage 2 tail for one batch: in-process gather, or — when the
+        payload carries worker-gathered rows — just the device placement
+        (shipped miss rows memcpy in, resident rows read from HBM). Timing
+        lands in ``PipelineStats.gather_s`` either way, so the benchmark
+        can show the gather leaving the training process."""
+        mb = payload["minibatch"]
+        t0 = time.perf_counter()
+        fpay = payload.get("features")
+        if fpay is not None:
+            feats = self.store.place_gathered(
+                dev, mb.nodes[0], mb.node_mask[0], fpay["pos"],
+                fpay["rows"], p3_full=self.algorithm == "p3",
+                shipped_for=fpay["device"])
+        else:
+            feats = self._gather_features(dev, mb)
+        self._pstats.gather_s += time.perf_counter() - t0
+        self._pstats.ring_bytes += payload.get("ring_bytes", 0)
+        return feats
+
     def _assemble_group(self, assignments: List[sched.Assignment],
                         payloads: List[dict]) -> dict:
-        """Stage 2 (gather) + device placement + stacking for one
-        synchronous iteration, from sampled payloads (in-process or pool).
-        The balancer maps batches to devices ("round_robin" keeps the
-        scheduler's static assignment bit-exactly; "load" re-assigns by the
-        Eq. 5 estimate), and the stacked device axis follows that mapping."""
-        devices = self._balancer.assign(
-            assignments, [p["load"] for p in payloads])
+        """Stage 2 (gather or placement of worker-gathered rows) + stacking
+        for one synchronous iteration, from sampled payloads (in-process or
+        pool). The balancer maps batches to devices ("round_robin" keeps
+        the scheduler's static assignment bit-exactly; "load" re-assigns by
+        the gather-aware Eq. 5 estimate), and the stacked device axis
+        follows that mapping."""
+        loads = [self._batch_load(a, p)
+                 for a, p in zip(assignments, payloads)]
+        devices = self._balancer.assign(assignments, loads)
         vertices = 0
         slots: List[Optional[dict]] = [None] * self.num_devices
         order = []  # legacy append order for the round_robin path
         for dev, payload in zip(devices, payloads):
             mb = payload["minibatch"]
             vertices += mb.vertices_traversed()
-            arrs = batch_to_arrays(mb, self._gather_features(dev, mb))
+            arrs = batch_to_arrays(mb, self._batch_features(dev, payload))
             if payload["layout"] is not None:
                 arrs.update(payload["layout"])
             slots[dev] = arrs
@@ -296,7 +366,7 @@ class SyncGNNTrainer:
         else:
             # device-indexed stacking: slot d holds device d's batch; empty
             # slots run a zero-weight dup of the last real batch
-            batches = [s if s is not None else None for s in slots]
+            batches = list(slots)
             for d in range(self.num_devices):
                 if batches[d] is None:
                     fill = dict(order[-1])
@@ -354,7 +424,11 @@ class SyncGNNTrainer:
                 [self._train_ids(i) for i in range(self.num_devices)],
                 seed=self.seed, num_workers=self.num_sampler_workers,
                 agg_kind=kind,
-                blk_caps=self._blk_caps if self._blk_caps else None)
+                blk_caps=self._blk_caps if self._blk_caps else None,
+                residency=(self.store.core if self.gather_in_workers
+                           else None),
+                p3_full=self.algorithm == "p3",
+                worker_affinity=self.worker_affinity)
         return self._pool
 
     def _pool_prepared_items(self, groups: List[List[sched.Assignment]],
@@ -368,7 +442,11 @@ class SyncGNNTrainer:
         pool = self._ensure_pool()
         window = max(4 * self.num_sampler_workers,
                      (self.prefetch_depth + 1) * self.num_devices)
-        tasks = ((a.partition, epoch, a.batch_index)
+        # a.device is the scheduler's static target — exact under
+        # round_robin; under "load" it is the residency HINT the worker
+        # gathers for (placement re-accounts if the balancer moves the
+        # batch; values are device-independent so training is unaffected)
+        tasks = ((a.partition, epoch, a.batch_index, a.device)
                  for g in groups for a in g)
         payload_iter = pool.map_tasks(tasks, window)
         for g in groups:
@@ -382,7 +460,7 @@ class SyncGNNTrainer:
         schedule = self.epoch_schedule()
         groups = list(sched.iterations(schedule))
         t0 = time.time()
-        pstats = PipelineStats()
+        pstats = self._pstats = PipelineStats()
         if self.num_sampler_workers > 0:
             # stage 1+2b run in the sampler worker processes; the prefetch
             # thread only gathers features, stacks, and keeps the reorder
@@ -442,8 +520,9 @@ class SyncGNNTrainer:
                        for k in step_metrics[0][0]}
         wall = time.time() - t0
         stats = sched.schedule_stats(schedule, self.num_devices)
+        n_iter = stats["iterations"]
         return {**metrics, "epoch_time_s": wall, "batches": n_batches,
-                "iterations": stats["iterations"],
+                "iterations": n_iter,
                 "utilization": stats["utilization"],
                 "vertices_traversed": vertices,
                 "nvtps": vertices / wall if wall > 0 else 0.0,
@@ -451,9 +530,17 @@ class SyncGNNTrainer:
                 "pipeline": self.pipeline,
                 "sampler_workers": self.num_sampler_workers,
                 "balance_policy": self.balance_policy,
+                "gather_in_workers": self.gather_in_workers,
                 "load_imbalance": self._balancer.imbalance(),
                 "host_produce_s": pstats.produce_s,
-                "host_wait_s": pstats.wait_s}
+                "host_wait_s": pstats.wait_s,
+                # stage-2 split: time the TRAINING PROCESS spent gathering
+                # (in-process) or placing (worker-gathered) feature rows,
+                # and the ring traffic the offload cost per iteration
+                "host_gather_s": pstats.gather_s,
+                "ring_bytes": pstats.ring_bytes,
+                "ring_bytes_per_iter": (pstats.ring_bytes / n_iter
+                                        if n_iter else 0.0)}
 
     def train(self, epochs: int = 1) -> List[dict]:
         return [self.run_epoch() for _ in range(epochs)]

@@ -71,18 +71,7 @@ class Graph:
         :class:`SharedGraph`, whose ``unlink`` removes the single tracker
         entry, and the tracker still reclaims the segments if the owner
         process dies without cleanup."""
-        handles = []
-        arrays: Dict[str, np.ndarray] = {}
-        try:
-            for fld, aspec in spec.arrays.items():
-                shm = shared_memory.SharedMemory(name=aspec.name)
-                handles.append(shm)
-                arrays[fld] = np.ndarray(aspec.shape, np.dtype(aspec.dtype),
-                                         buffer=shm.buf)
-        except BaseException:
-            for shm in handles:
-                shm.close()
-            raise
+        handles, arrays = attach_arrays(spec.arrays)
         g = cls(arrays["indptr"], arrays["indices"], arrays["features"],
                 arrays["labels"], arrays["train_ids"], spec.num_classes,
                 spec.name)
@@ -112,6 +101,63 @@ class SharedGraphSpec:
     name: str
 
 
+def share_arrays(arrays: Dict[str, np.ndarray]
+                 ) -> Tuple[list, Dict[str, SharedArraySpec]]:
+    """Copy named numpy arrays ONCE into fresh shared-memory segments.
+
+    The generic half of the shared stores (graph topology+features,
+    feature residency): returns ``(segments, specs)`` where ``segments``
+    are the owning ``SharedMemory`` handles (caller closes/unlinks) and
+    ``specs`` the picklable attachment descriptors. On any failure the
+    already-created segments are released and unlinked before re-raising,
+    so a half-built store never leaks."""
+    uid = uuid.uuid4().hex[:12]
+    segments: list = []
+    specs: Dict[str, SharedArraySpec] = {}
+    try:
+        for fld, arr in arrays.items():
+            arr = np.ascontiguousarray(arr)
+            # field-keyed names, capped so the whole name stays inside the
+            # 31-char POSIX floor (macOS); the uid keeps them unique
+            shm = shared_memory.SharedMemory(
+                create=True, size=max(1, arr.nbytes),
+                name=f"hitgnn_{fld[:10]}_{uid}")
+            segments.append(shm)
+            np.ndarray(arr.shape, arr.dtype, buffer=shm.buf)[...] = arr
+            specs[fld] = SharedArraySpec(shm.name, tuple(arr.shape),
+                                         str(arr.dtype))
+    except BaseException:
+        for shm in segments:
+            try:
+                shm.close()
+                shm.unlink()
+            except Exception:
+                pass
+        raise
+    return segments, specs
+
+
+def attach_arrays(specs: Dict[str, SharedArraySpec]
+                  ) -> Tuple[list, Dict[str, np.ndarray]]:
+    """Attach zero-copy numpy views over segments created by
+    ``share_arrays``. Returns ``(handles, arrays)``; the handles must stay
+    referenced as long as the views are alive (attachers never unlink —
+    ownership stays with the creator)."""
+    handles: list = []
+    arrays: Dict[str, np.ndarray] = {}
+    try:
+        for fld, aspec in specs.items():
+            shm = shared_memory.SharedMemory(name=aspec.name)
+            handles.append(shm)
+            arrays[fld] = np.ndarray(aspec.shape, np.dtype(aspec.dtype),
+                                     buffer=shm.buf)
+    except BaseException:
+        for shm in handles:
+            shm.close()
+        raise
+    return handles, arrays
+
+
 class SharedGraph:
     """Owner handle for a graph copied into shared memory.
 
@@ -121,23 +167,9 @@ class SharedGraph:
     including KeyboardInterrupt — so no segments outlive the pool."""
 
     def __init__(self, graph: Graph):
-        self._segments: list = []
-        uid = uuid.uuid4().hex[:12]
-        arrays: Dict[str, SharedArraySpec] = {}
-        try:
-            for fld in _SHARED_FIELDS:
-                arr = np.ascontiguousarray(getattr(graph, fld))
-                shm = shared_memory.SharedMemory(
-                    create=True, size=max(1, arr.nbytes),
-                    name=f"hitgnn_{fld}_{uid}")
-                self._segments.append(shm)
-                np.ndarray(arr.shape, arr.dtype, buffer=shm.buf)[...] = arr
-                arrays[fld] = SharedArraySpec(shm.name, tuple(arr.shape),
-                                              str(arr.dtype))
-        except BaseException:
-            self.close(unlink=True)
-            raise
-        self.spec = SharedGraphSpec(arrays, graph.num_classes, graph.name)
+        self._segments, specs = share_arrays(
+            {fld: getattr(graph, fld) for fld in _SHARED_FIELDS})
+        self.spec = SharedGraphSpec(specs, graph.num_classes, graph.name)
         self._closed = False
 
     def nbytes(self) -> int:

@@ -102,3 +102,35 @@ def test_gather_masks_invalid_rows():
     out = fs.gather(0, ids, mask)
     assert (out[~mask] == 0).all()
     assert (out[mask] == G.features[ids[mask]]).all()
+
+
+def test_store_delegates_to_jax_free_core():
+    """The residency math lives in core/residency.ResidencyCore (worker-
+    importable); the store's query API is a thin view over it."""
+    import inspect
+    import repro.core.residency as residency
+    assert "import jax" not in inspect.getsource(residency)
+    _, fs = make("pagraph", "pagraph")
+    ids = np.arange(0, G.num_vertices, 7)
+    for d in range(4):
+        assert (fs.is_resident(d, ids) == fs.core.is_resident(d, ids)).all()
+        assert fs.num_resident(d) == fs.core.num_resident(d)
+        assert fs.device_bytes(d) == fs.core.device_bytes(d)
+
+
+def test_place_gathered_matches_gather_bitwise():
+    """Worker-shipped miss rows + resident HBM reads reassemble to exactly
+    the in-process gather() output, with identical beta accounting."""
+    _, fs = make("distdgl", "metis_like")
+    _, fs2 = make("distdgl", "metis_like")
+    rng = np.random.default_rng(3)
+    for dev in range(4):
+        ids = rng.integers(0, G.num_vertices, 300)
+        mask = rng.random(300) < 0.9
+        pos, rows = fs.core.select_ship_rows(dev, G.features, ids, mask)
+        got = fs.place_gathered(dev, ids, mask, pos, rows)
+        exp = fs2.gather(dev, ids, mask)
+        assert (got == exp).all()
+        assert fs.stats[dev].host_rows == fs2.stats[dev].host_rows
+        assert fs.stats[dev].local_bytes == fs2.stats[dev].local_bytes
+    assert fs.beta() == fs2.beta()

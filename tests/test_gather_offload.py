@@ -1,0 +1,327 @@
+"""Stage-2 offload: worker-side feature gathering (core/residency.py +
+the PayloadCodec rows segment + trainer placement).
+
+Covers the PR's contracts: (1) the extended codec round-trips ragged /
+zero-miss feature payloads and fails loudly on capacity overflow; (2)
+worker-gathered rows — distdgl misses, pagraph misses, and the P3
+full-row all-to-all — are BITWISE identical to the in-process
+``FeatureStore.gather``/``gather_p3_full`` per seed; (3) training with
+``gather_in_workers=True`` is bit-identical (final params AND beta
+accounting) to the workers=0 in-process path, for round_robin and load
+balancing; (4) the residency shared-memory segment is released on every
+pool exit path; (5) ``worker_affinity`` pinning never changes results; (6)
+the balancer's work estimate includes the gathered-feature term.
+"""
+import numpy as np
+import pytest
+from multiprocessing import shared_memory
+
+from repro.configs.gnn import GNNModelConfig
+from repro.core.feature_store import FeatureStore
+from repro.core.partition import get_partitioner
+from repro.core.residency import ResidencyCore
+from repro.core.sampler import NeighborSampler, layer_capacities
+from repro.core.sampler_pool import FeatureShipSpec, PayloadCodec, SamplerPool
+from repro.core.scheduler import LoadBalancer
+from repro.data.graphs import synthetic_graph
+
+G = synthetic_graph(scale=8, edge_factor=5, feat_dim=8, num_classes=4)
+CFG = GNNModelConfig("graphsage", num_layers=2, hidden=8, fanouts=(3, 2),
+                     batch_targets=16)
+
+
+def _store(strategy, partitioner, p=2):
+    part = get_partitioner(partitioner)(G, p, 0)
+    return FeatureStore(G, part, strategy)
+
+
+# ---------------------------------------------------------------------------
+# PayloadCodec: capacity-bounded variable-length rows segment
+# ---------------------------------------------------------------------------
+
+def test_codec_feature_roundtrip_ragged_and_zero_miss():
+    """Ragged (and zero) row counts round-trip through one slot, including
+    slot REUSE with a shrinking count — stale bytes of a previous, larger
+    payload must never leak into a later, smaller one."""
+    cap = layer_capacities(CFG)[0][0]
+    spec = FeatureShipSpec(rows_cap=cap, width=8)
+    codec = PayloadCodec(CFG, None, spec)
+    mb = NeighborSampler(G, CFG, G.train_ids, 0, seed=0).batch_at(0, 0)
+    buf = bytearray(codec.nbytes)
+    rng = np.random.default_rng(0)
+    for m in (cap, 3, 0, 1):  # decreasing then tiny: exercises reuse
+        pos = np.sort(rng.choice(len(mb.nodes[0]), m,
+                                 replace=False)).astype(np.int32)
+        rows = rng.standard_normal((m, 8)).astype(np.float32)
+        codec.encode(mb, None, (pos, rows), buf, 0)
+        mb2, layout, feats, used = codec.decode(buf, 0, 0, 0)
+        assert layout is None
+        assert used == codec.used_nbytes(m)
+        assert used == codec.fixed_nbytes + m * 8 * 4
+        assert (feats["pos"] == pos).all()
+        assert feats["rows"].shape == (m, 8)
+        assert (feats["rows"] == rows).all()
+        assert (mb2.targets == mb.targets).all()
+        for l in range(CFG.num_layers):
+            assert (mb2.nodes[l] == mb.nodes[l]).all()
+            assert (mb2.edge_src[l] == mb.edge_src[l]).all()
+
+
+def test_codec_capacity_overflow_raises_clear_error():
+    spec = FeatureShipSpec(rows_cap=4, width=8)
+    codec = PayloadCodec(CFG, None, spec)
+    mb = NeighborSampler(G, CFG, G.train_ids, 0, seed=0).batch_at(0, 0)
+    buf = bytearray(codec.nbytes)
+    pos = np.arange(5, dtype=np.int32)
+    rows = np.zeros((5, 8), np.float32)
+    with pytest.raises(ValueError, match="capacity overflow.*5 rows.*cap=4"):
+        codec.encode(mb, None, (pos, rows), buf, 0)
+
+
+def test_capacity_overflow_does_not_leak_ring_slots():
+    """Regression: an encode failure inside a worker must recycle its ring
+    slot. With a rows_cap every batch overflows, MORE errors than the ring
+    has slots must still all surface as ValueError at fetch() — a leaked
+    slot per failure would wedge the workers in free_q.get() and turn the
+    clear error into a fetch timeout."""
+    fs = _store("distdgl", "metis_like")
+    with SamplerPool(G, CFG, [G.train_ids], seed=0, num_workers=1,
+                     residency=fs.core, feat_rows_cap=1) as pool:
+        n = pool.num_slots + 3
+        for _ in range(n):
+            pool.submit(0, 0, 0, 0)
+        for _ in range(n):
+            with pytest.raises(ValueError, match="capacity overflow"):
+                pool.fetch(timeout=30)
+
+
+def test_codec_without_features_matches_fixed_layout():
+    codec = PayloadCodec(CFG, None)
+    assert codec.feat is None
+    assert codec.nbytes == codec.fixed_nbytes == codec.used_nbytes(0)
+    mb = NeighborSampler(G, CFG, G.train_ids, 0, seed=0).batch_at(0, 0)
+    buf = bytearray(codec.nbytes)
+    codec.encode(mb, None, None, buf, 0)
+    mb2, layout, feats, used = codec.decode(buf, 0, 0, 0)
+    assert feats is None and used == codec.nbytes
+    assert (mb2.targets == mb.targets).all()
+
+
+# ---------------------------------------------------------------------------
+# worker-gathered rows == in-process gather, bit for bit (per seed)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy,partitioner",
+                         [("distdgl", "metis_like"), ("pagraph", "pagraph")])
+@pytest.mark.parametrize("seed", [0, 7])
+def test_worker_gather_bitwise_matches_inprocess(strategy, partitioner,
+                                                 seed):
+    fs = _store(strategy, partitioner)
+    ref = NeighborSampler(G, CFG, G.train_ids, 0, seed=seed)
+    fs_ref = _store(strategy, partitioner)
+    coords = [(0, 0, 0), (0, 1, 1), (1, 0, 1), (1, 1, 0)]
+    with SamplerPool(G, CFG, [G.train_ids], seed=seed, num_workers=2,
+                     residency=fs.core) as pool:
+        outs = list(pool.map_tasks([(0, e, i, d) for e, i, d in coords]))
+    for (e, i, dev), out in zip(coords, outs):
+        mb, f = out["minibatch"], out["features"]
+        assert f["device"] == dev
+        # only the rows non-resident on `dev` crossed the ring
+        res = fs.core.is_resident(dev, mb.nodes[0][f["pos"]])
+        assert not res.any()
+        got = fs.place_gathered(dev, mb.nodes[0], mb.node_mask[0],
+                                f["pos"], f["rows"])
+        want_mb = ref.batch_at(e, i)
+        exp = fs_ref.gather(dev, want_mb.nodes[0], want_mb.node_mask[0])
+        assert (got == exp).all()
+        assert out["ring_bytes"] == \
+            pool._codec.used_nbytes(len(f["pos"]))
+    # accounting followed the same hits/misses as the in-process store
+    for d in range(2):
+        assert fs.stats[d].local_rows == fs_ref.stats[d].local_rows
+        assert fs.stats[d].host_rows == fs_ref.stats[d].host_rows
+
+
+def test_worker_gather_p3_full_rows_bitwise():
+    """P3 ships the reconstructed full rows (the Listing-3 all-to-all run
+    inside the worker); placement is a pure memcpy and beta stays 1."""
+    fs = _store("p3", "p3")
+    fs_ref = _store("p3", "p3")
+    ref = NeighborSampler(G, CFG, G.train_ids, 0, seed=2)
+    with SamplerPool(G, CFG, [G.train_ids], seed=2, num_workers=1,
+                     residency=fs.core, p3_full=True) as pool:
+        out = next(pool.map_tasks([(0, 0, 0, 1)]))
+    mb, f = out["minibatch"], out["features"]
+    assert len(f["pos"]) == int(mb.node_mask[0].sum())  # every valid row
+    assert f["rows"].shape[1] == G.features.shape[1]    # full width
+    got = fs.place_gathered(1, mb.nodes[0], mb.node_mask[0], f["pos"],
+                            f["rows"], p3_full=True)
+    want_mb = ref.batch_at(0, 0)
+    exp = fs_ref.gather_p3_full(want_mb.nodes[0], want_mb.node_mask[0])
+    assert (got == exp).all()
+    assert fs.beta() == 1.0 == fs_ref.beta()
+
+
+# ---------------------------------------------------------------------------
+# trainer end to end: gather_in_workers == in-process, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm,policy",
+                         [("distdgl", "round_robin"), ("distdgl", "load"),
+                          ("pagraph", "round_robin"),
+                          ("p3", "round_robin")])
+def test_training_with_worker_gather_bit_identical(algorithm, policy):
+    """The acceptance property: gather_in_workers=True + workers>=2 trains
+    to BITWISE identical parameters as the workers=0 in-process path, with
+    identical beta accounting — batch stream, placement values, and stats
+    are all pure functions of the seed."""
+    import jax
+    from repro.core.trainer import SyncGNNTrainer
+    t_in = SyncGNNTrainer(G, CFG, num_devices=2, seed=3,
+                          algorithm=algorithm, balance_policy=policy)
+    t_mp = SyncGNNTrainer(G, CFG, num_devices=2, seed=3,
+                          algorithm=algorithm, balance_policy=policy,
+                          num_sampler_workers=2, gather_in_workers=True)
+    try:
+        for _ in range(2):
+            m_in = t_in.run_epoch()
+            m_mp = t_mp.run_epoch()
+            assert m_in["loss"] == m_mp["loss"]
+            assert m_in["acc"] == m_mp["acc"]
+            assert m_in["beta"] == m_mp["beta"]
+            assert m_in["load_imbalance"] == m_mp["load_imbalance"]
+        assert m_mp["gather_in_workers"] and not m_in["gather_in_workers"]
+        assert m_mp["ring_bytes_per_iter"] > 0
+        assert m_in["ring_bytes"] == 0
+        for a, b in zip(jax.tree.leaves(t_in.params),
+                        jax.tree.leaves(t_mp.params)):
+            assert (np.asarray(a) == np.asarray(b)).all()
+    finally:
+        t_mp.close()
+        t_in.close()
+
+
+def test_worker_affinity_does_not_change_results():
+    """Pinning is a placement knob only: pinned and unpinned pools train
+    bitwise identically (and the knob is a safe no-op off Linux)."""
+    import jax
+    from repro.core.trainer import SyncGNNTrainer
+    t_a = SyncGNNTrainer(G, CFG, num_devices=2, seed=5,
+                         num_sampler_workers=2, gather_in_workers=True,
+                         worker_affinity=True)
+    t_b = SyncGNNTrainer(G, CFG, num_devices=2, seed=5,
+                         num_sampler_workers=2, gather_in_workers=True)
+    try:
+        m_a = t_a.run_epoch()
+        m_b = t_b.run_epoch()
+        assert m_a["loss"] == m_b["loss"]
+        for a, b in zip(jax.tree.leaves(t_a.params),
+                        jax.tree.leaves(t_b.params)):
+            assert (np.asarray(a) == np.asarray(b)).all()
+    finally:
+        t_a.close()
+        t_b.close()
+
+
+def test_gather_knob_ignored_without_workers():
+    """gather_in_workers with workers=0 is a documented no-op: there is no
+    pool to gather in, and training equals the plain in-process path."""
+    import jax
+    from repro.core.trainer import SyncGNNTrainer
+    t_plain = SyncGNNTrainer(G, CFG, num_devices=2, seed=1)
+    t_knob = SyncGNNTrainer(G, CFG, num_devices=2, seed=1,
+                            gather_in_workers=True)
+    try:
+        assert t_knob.gather_in_workers is False
+        m_p = t_plain.run_epoch()
+        m_k = t_knob.run_epoch()
+        assert m_p["loss"] == m_k["loss"]
+        for a, b in zip(jax.tree.leaves(t_plain.params),
+                        jax.tree.leaves(t_knob.params)):
+            assert (np.asarray(a) == np.asarray(b)).all()
+    finally:
+        t_knob.close()
+        t_plain.close()
+
+
+# ---------------------------------------------------------------------------
+# shared-memory lifecycle: residency segment released on all exit paths
+# ---------------------------------------------------------------------------
+
+def _residency_segment_names(pool):
+    return ([pool._shared_res.spec.segment.name]
+            if pool._shared_res is not None else [])
+
+
+def test_residency_segment_unlinked_on_close_and_error():
+    fs = _store("distdgl", "metis_like")
+    pool = SamplerPool(G, CFG, [G.train_ids], seed=0, num_workers=1,
+                       residency=fs.core)
+    names = _residency_segment_names(pool)
+    assert names, "gathering pool must create a residency segment"
+    pool.close()
+    pool.close()  # idempotent
+    for name in names:
+        with pytest.raises(FileNotFoundError):
+            shared_memory.SharedMemory(name=name)
+    # error path: KeyboardInterrupt mid-epoch still unlinks
+    with pytest.raises(KeyboardInterrupt):
+        with SamplerPool(G, CFG, [G.train_ids], seed=0, num_workers=1,
+                         residency=fs.core) as pool:
+            names = _residency_segment_names(pool)
+            next(pool.map_tasks([(0, 0, 0, 0)]))
+            raise KeyboardInterrupt
+    for name in names:
+        with pytest.raises(FileNotFoundError):
+            shared_memory.SharedMemory(name=name)
+
+
+def test_shared_residency_roundtrip_zero_copy():
+    fs = _store("pagraph", "pagraph")
+    sr = fs.core.to_shared()
+    try:
+        core2 = ResidencyCore.from_shared(sr.spec)
+        for d in range(2):
+            assert (core2.resident_ids(d) == fs.core.resident_ids(d)).all()
+            ids = np.arange(G.num_vertices, dtype=np.int32)
+            assert (core2.is_resident(d, ids)
+                    == fs.core.is_resident(d, ids)).all()
+        assert core2.feat_dim == G.features.shape[1]
+        del core2
+    finally:
+        sr.close()
+    with pytest.raises(FileNotFoundError):
+        shared_memory.SharedMemory(name=sr.spec.segment.name)
+
+
+def test_shared_residency_p3_is_flags_only():
+    """P3 residency is all flags + slice bounds — the shared segment
+    carries zero ids and the attached core still answers all-resident."""
+    fs = _store("p3", "p3")
+    sr = fs.core.to_shared()
+    try:
+        core2 = ResidencyCore.from_shared(sr.spec)
+        assert core2.num_resident(0) == G.num_vertices
+        assert core2.slice_width(0) + core2.slice_width(1) \
+            >= G.features.shape[1]
+        assert core2.miss_count(0, np.arange(50), np.ones(50, bool)) == 0
+        del core2
+    finally:
+        sr.close()
+
+
+# ---------------------------------------------------------------------------
+# balancer estimate includes the gathered-feature term
+# ---------------------------------------------------------------------------
+
+def test_batch_load_includes_gathered_feature_bytes():
+    assert LoadBalancer.batch_load(100.0, 0, 8) == 100.0
+    assert LoadBalancer.batch_load(100.0, 30, 8) == 100.0 + 30 * 8
+    fs = _store("distdgl", "metis_like")
+    mb = NeighborSampler(G, CFG, G.train_ids, 0, seed=0).batch_at(0, 0)
+    miss0 = fs.core.miss_count(0, mb.nodes[0], mb.node_mask[0])
+    res = fs.core.is_resident(0, mb.nodes[0])
+    assert miss0 == int(((~res) & mb.node_mask[0]).sum())
+    load = LoadBalancer.batch_load(mb.work_estimate(), miss0,
+                                   G.features.shape[1])
+    assert load == mb.work_estimate() + miss0 * G.features.shape[1]
