@@ -18,10 +18,12 @@ bench:
 
 # CI smoke: quick host-pipeline benchmark; emits BENCH_pipeline.json
 # (stage times, NVTPS, aggregate-path H2D bytes/iter, sampling-service
-# sweep) for the perf trajectory across PRs, then gates the fresh numbers
-# against the committed baseline (>25% NVTPS drop or ANY H2D bytes/iter
-# increase fails; on >=4-CPU hosts the workers=4 sampling speedup must
-# reach 1.5x).
+# sweep, and a training exercise of BOTH aggregate backends — "pallas"
+# HBM-densify vs "pallas_edges" in-VMEM edge streaming, losses must match
+# bitwise) for the perf trajectory across PRs, then gates the fresh
+# numbers against the committed baseline (>25% NVTPS drop, ANY H2D or
+# densified-HBM bytes increase — pallas_edges must record literal 0 —
+# fails; on >=4-CPU hosts the workers=4 sampling speedup must reach 1.5x).
 bench-smoke:
 	@cp BENCH_pipeline.json BENCH_pipeline.baseline.json 2>/dev/null || true
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only pipeline
@@ -29,6 +31,7 @@ bench-smoke:
 		--baseline BENCH_pipeline.baseline.json --fresh BENCH_pipeline.json
 	@python -c "import json, os; \
 	d = json.load(open(os.environ.get('BENCH_PIPELINE_JSON', 'BENCH_pipeline.json'))); \
-	print('bench-smoke:', json.dumps(d['layout'], sort_keys=True))"
+	print('bench-smoke:', json.dumps(d['layout'], sort_keys=True)); \
+	print('bench-smoke:', json.dumps(d['aggregate_backends'], sort_keys=True))"
 
 verify: test bench-smoke

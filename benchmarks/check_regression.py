@@ -11,6 +11,12 @@ Checks (exit code 1 on any failure):
 * Ring bytes/iter — the stage-2 offload's shared-memory ring traffic is
   likewise deterministic (miss rows are a pure function of config + seed),
   so ANY increase over the baseline fails.
+* Densified-tile HBM bytes — the per-batch device-HBM footprint of
+  scatter-added adjacency tiles is a pure function of the config, so ANY
+  increase per aggregate backend fails; the edge-streaming backend
+  ("pallas_edges", which densifies per-tile in VMEM) must record LITERAL
+  ZERO — any nonzero value means someone reintroduced an HBM tile tensor
+  on that path.
 * Gather-stage time — the per-epoch stage-2 time left ON the training
   thread with gather_in_workers must not exceed the baseline by more than
   ``--gather-tolerance`` (default 100%: the record is a min-over-rounds of
@@ -104,6 +110,36 @@ def compare(baseline: dict, fresh: dict, nvtps_tolerance: float,
         print(f"check_regression: gather-stage check skipped (baseline "
               f"host has {go_base_cpus} CPUs, this host {go_fresh_cpus})")
 
+    # densified-tile HBM footprint: deterministic per config + backend, so
+    # any increase fails; the edge-streaming backend must stay at zero
+    # unconditionally (no baseline needed — zero IS the contract).
+    fresh_hbm = _get(fresh,
+                     "aggregate_backends.densified_hbm_bytes_per_batch")
+    base_hbm = _get(baseline,
+                    "aggregate_backends.densified_hbm_bytes_per_batch")
+    if not isinstance(fresh_hbm, dict) or "pallas_edges" not in fresh_hbm:
+        # the fresh report is always produced by the CURRENT bench — a
+        # missing record means the contract check silently vanished, which
+        # is itself a failure (only a schema migration may drop it, and
+        # that path returns before compare() runs)
+        failures.append(
+            "fresh report lacks aggregate_backends."
+            "densified_hbm_bytes_per_batch (pallas_edges zero-HBM "
+            "contract cannot be checked)")
+    else:
+        if fresh_hbm["pallas_edges"] != 0:
+            failures.append(
+                f"densified-tile HBM bytes for pallas_edges must be 0 "
+                f"(in-VMEM densification), got "
+                f"{fresh_hbm['pallas_edges']}")
+        if isinstance(base_hbm, dict):
+            for backend, fval in fresh_hbm.items():
+                bval = base_hbm.get(backend)
+                if bval is not None and fval > bval:
+                    failures.append(
+                        f"densified-tile HBM bytes increased for "
+                        f"{backend}: {fval} > baseline {bval}")
+
     cpus = _get(fresh, "sampler_pool.host_cpu_count") or 0
     s41 = _get(fresh, "sampler_pool.speedup_4v1")
     sbest = _get(fresh, "sampler_pool.speedup_best")
@@ -149,10 +185,14 @@ def main() -> int:
         for f in failures:
             print(f"check_regression: FAIL: {f}")
         return 1
+    hbm = _get(fresh, "aggregate_backends.densified_hbm_bytes_per_batch") \
+        or {}
     print(f"check_regression: PASS "
           f"(nvtps {max(_get(fresh, 'epoch.nvtps_sequential') or 0, _get(fresh, 'epoch.nvtps_pipelined') or 0):.0f}, "
           f"h2d {_get(fresh, 'layout.h2d_bytes_per_iter_compact')} B/iter, "
           f"ring {_get(fresh, 'gather_offload.ring_bytes_per_iter') or 0:.0f} B/iter, "
+          f"densified-HBM {hbm.get('pallas', 0)}/"
+          f"{hbm.get('pallas_edges', 0)} B/batch, "
           f"pool speedup_4v1 {_get(fresh, 'sampler_pool.speedup_4v1'):.2f})")
     return 0
 

@@ -20,12 +20,21 @@ class GNNModelConfig:
     fanouts: Tuple[int, ...] = (25, 10)  # neighbor sampling sizes per layer
     batch_targets: int = 1024            # |V^t| per mini-batch
     # Which aggregation datapath the forward uses (gnn/models.py):
-    #   "reference" — jnp segment_sum scatter-gather (runs everywhere)
-    #   "pallas"    — block-CSR SpMM kernel (kernels/aggregate.py); the
-    #                 compact edge-centric layout is precomputed host-side by
-    #                 the trainer's pipeline stage and densified on device.
-    #                 GAT always uses the reference path (edge softmax
-    #                 weights are device-computed).
+    #   "reference"    — jnp segment_sum scatter-gather (runs everywhere)
+    #   "pallas"       — block-CSR SpMM kernel (kernels/aggregate.py); the
+    #                    compact edge-centric layout is precomputed host-side
+    #                    by the trainer's pipeline stage and the dense tiles
+    #                    are scatter-added in device HBM inside the jit'd
+    #                    step (densify_tiles) before the kernel runs.
+    #   "pallas_edges" — edge-streaming SpMM (aggregate_edges): the layout
+    #                    builder re-sorts the compact triples into per-tile
+    #                    segments and the kernel densifies each 128x128 tile
+    #                    in a VMEM scratch inside the grid step — zero dense
+    #                    tile bytes in HBM, forward and backward. Trains
+    #                    bit-identically per seed to "pallas" in interpret
+    #                    mode.
+    # GAT always uses the reference path (edge softmax weights are
+    # device-computed).
     aggregate_backend: str = "reference"
     # Pallas execution mode: None = auto-detect (compiled Mosaic on a real
     # TPU backend, interpret mode elsewhere); True/False pins it — False

@@ -123,22 +123,40 @@ class PayloadCodec:
         spec.append(("targets", -1, (cfg.batch_targets,), np.dtype(np.int32)))
         spec.append(("labels", -1, (cfg.batch_targets,), np.dtype(np.int32)))
         self.has_layout = blk_caps is not None
+        # the edge-streaming backend reuses the ring's per-edge fields but
+        # swaps tile_id/tile_id_t (which its kernel never reads — the
+        # CSR-style segment offsets replace them) for the independently
+        # sorted transpose values + the two offsets arrays
+        self.edge_stream = (blk_caps is not None
+                            and cfg.aggregate_backend == "pallas_edges")
         if blk_caps is not None:
             for l, (n_src, n_dst, max_blk, max_blk_t, e_cap) in \
                     enumerate(blk_caps):
                 n_srcb = (n_src + BLK - 1) // BLK
                 n_dstb = (n_dst + BLK - 1) // BLK
-                spec.append(("agg_tile_id", l, (e_cap,), np.dtype(np.int32)))
+                if not self.edge_stream:
+                    spec.append(("agg_tile_id", l, (e_cap,),
+                                 np.dtype(np.int32)))
                 spec.append(("agg_tile_off", l, (e_cap,), np.dtype(np.int32)))
                 spec.append(("agg_val", l, (e_cap,), np.dtype(np.float32)))
                 spec.append(("agg_cols", l, (n_dstb, max_blk),
                              np.dtype(np.int32)))
-                spec.append(("agg_tile_id_t", l, (e_cap,),
-                             np.dtype(np.int32)))
+                if not self.edge_stream:
+                    spec.append(("agg_tile_id_t", l, (e_cap,),
+                                 np.dtype(np.int32)))
                 spec.append(("agg_tile_off_t", l, (e_cap,),
                              np.dtype(np.int32)))
                 spec.append(("agg_cols_t", l, (n_srcb, max_blk_t),
                              np.dtype(np.int32)))
+                if self.edge_stream:
+                    spec.append(("agg_val_t", l, (e_cap,),
+                                 np.dtype(np.float32)))
+                    spec.append(("agg_tile_seg", l,
+                                 (n_dstb * max_blk + 1,),
+                                 np.dtype(np.int32)))
+                    spec.append(("agg_tile_seg_t", l,
+                                 (n_srcb * max_blk_t + 1,),
+                                 np.dtype(np.int32)))
         self.feat = feat_spec
         if feat_spec is not None:
             spec.append(("feat_count", -1, (1,), np.dtype(np.int32)))
@@ -221,10 +239,15 @@ class PayloadCodec:
         fields["node_mask"].append(None)
         layout: Optional[dict] = None
         if self.has_layout:
-            layout = {k: [None] * self.num_layers
-                      for k in ("agg_tile_id", "agg_tile_off", "agg_val",
-                                "agg_cols", "agg_tile_id_t",
-                                "agg_tile_off_t", "agg_cols_t")}
+            if self.edge_stream:
+                keys = ["agg_tile_off", "agg_val", "agg_cols",
+                        "agg_tile_off_t", "agg_cols_t", "agg_val_t",
+                        "agg_tile_seg", "agg_tile_seg_t"]
+            else:
+                keys = ["agg_tile_id", "agg_tile_off", "agg_val",
+                        "agg_cols", "agg_tile_id_t", "agg_tile_off_t",
+                        "agg_cols_t"]
+            layout = {k: [None] * self.num_layers for k in keys}
         scalars = {}
         feats: Optional[dict] = None
         for key, l, shape, dtype, off in self.entries:
@@ -311,7 +334,8 @@ def _worker_main(worker_id: int, spec: SharedGraphSpec, cfg: GNNModelConfig,
                 if blk_caps is not None:
                     layout = build_layer_layouts(
                         mb.edge_src, mb.edge_dst, mb.edge_mask, blk_caps,
-                        agg_kind)
+                        agg_kind,
+                        edge_stream=cfg.aggregate_backend == "pallas_edges")
                 feats = None
                 if residency is not None:
                     # stage 2 in the worker: gather only what must cross

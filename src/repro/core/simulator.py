@@ -46,6 +46,13 @@ class SimConfig:
     # Crosses PCIe as part of step dispatch, i.e. on the DEVICE side of the
     # pipeline overlap.
     h2d_layout_bytes: float = 0.0
+    # per-batch DEVICE-DRAM bytes of densified adjacency tiles
+    # (aggregate_backend="pallas": the jit'd step scatter-adds the full
+    # (Nd, max_blk, 128, 128) A + A^T tensors in HBM, which the SpMM then
+    # reads back — two DDR crossings of the whole footprint). The
+    # edge-streaming backend ("pallas_edges") densifies per-tile in VMEM,
+    # so it sets this to 0 and the term vanishes.
+    densified_hbm_bytes: float = 0.0
     sampling_overlap: bool = True    # pipelined host (prefetch executor)
     # Sampling service (core/sampler_pool.py): the sample + layout-build
     # stages parallelize over this many worker processes; gather stays on
@@ -125,7 +132,10 @@ def simulate_epoch(model: GNNModelConfig, ds: GraphDatasetConfig,
     # stays serial and each batch's shipped rows pay one host-bandwidth
     # crossing of the shared-memory ring.
     w = max(1, sim.num_sampler_workers)
-    t_gnn = gnn_time() + sim.h2d_layout_bytes / host_share
+    # densified-tile HBM traffic (scatter write + SpMM read-back) rides the
+    # device side of the overlap, like the layout H2D payload
+    t_densify = 2 * sim.densified_hbm_bytes / pf.fpga.ddr_bw
+    t_gnn = gnn_time() + sim.h2d_layout_bytes / host_share + t_densify
     t_ipc = sim.t_ipc if sim.num_sampler_workers > 1 else 0.0
     if sim.gather_in_workers:
         t_host = (sim.t_placement
@@ -161,6 +171,8 @@ def simulate_epoch(model: GNNModelConfig, ds: GraphDatasetConfig,
         "t_gather_worker": sim.t_gather_worker,
         "ring_bytes": sim.ring_bytes,
         "h2d_layout_bytes": sim.h2d_layout_bytes,
+        "densified_hbm_bytes": sim.densified_hbm_bytes,
+        "t_densify": t_densify,
         "host_share_gbs": host_share / 1e9,
         "beta": beta,
     }

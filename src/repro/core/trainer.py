@@ -55,7 +55,8 @@ from repro.kernels.aggregate import (BLK, block_capacities,
                                      build_layer_layouts,
                                      compact_layout_bytes,
                                      dense_layout_bytes,
-                                     densified_tile_bytes)
+                                     densified_tile_bytes,
+                                     edge_stream_layout_bytes)
 from repro.nn.param import materialize
 from repro.optim.adam import AdamW, SGDM
 from repro.optim.schedules import get_schedule
@@ -137,11 +138,12 @@ class SyncGNNTrainer:
         self.gather_in_workers = (self.model_cfg.gather_in_workers
                                   and self.model_cfg.num_sampler_workers > 0)
         self.worker_affinity = self.model_cfg.worker_affinity
-        if self.model_cfg.aggregate_backend not in ("reference", "pallas"):
+        backends = ("reference",) + gnn_models.KERNEL_BACKENDS
+        if self.model_cfg.aggregate_backend not in backends:
             raise ValueError(
                 f"unknown aggregate_backend "
                 f"{self.model_cfg.aggregate_backend!r}; "
-                f"expected 'reference' or 'pallas'")
+                f"expected one of {backends}")
         if self.balance_policy not in sched.BALANCE_POLICIES:
             raise ValueError(
                 f"unknown balance_policy {self.balance_policy!r}; "
@@ -178,7 +180,7 @@ class SyncGNNTrainer:
         self._blk_caps = []
         if self._use_kernel_layout():
             self._blk_caps = block_capacities(self.model_cfg)
-            blk_bytes = densified_tile_bytes(self._blk_caps)
+            blk_bytes = self.densified_hbm_bytes()
             budget = 4 << 30  # densified-tile device memory per batch
             if blk_bytes > budget:
                 raise ValueError(
@@ -187,7 +189,9 @@ class SyncGNNTrainer:
                     f"batch on device (budget {budget / 2**30:.0f} GiB) at "
                     f"batch_targets={self.model_cfg.batch_targets}, "
                     f"fanouts={self.model_cfg.fanouts}. Reduce the batch "
-                    f"size / fanouts or use aggregate_backend='reference'.")
+                    f"size / fanouts, or use "
+                    f"aggregate_backend='pallas_edges' (densifies in VMEM, "
+                    f"no HBM tile tensor) or 'reference'.")
         # the sampling service + per-epoch balancer are created lazily on
         # the first epoch (close() tears the pool down)
         self._pool: Optional[SamplerPool] = None
@@ -196,16 +200,35 @@ class SyncGNNTrainer:
         self._pstats = PipelineStats()
 
     def _use_kernel_layout(self) -> bool:
-        return (self.model_cfg.aggregate_backend == "pallas"
+        return (self.model_cfg.aggregate_backend
+                in gnn_models.KERNEL_BACKENDS
                 and gnn_models.AGG_KIND[self.model_cfg.name] is not None)
+
+    def _edge_stream(self) -> bool:
+        return self.model_cfg.aggregate_backend == "pallas_edges"
+
+    def densified_hbm_bytes(self) -> int:
+        """Transient DEVICE-HBM bytes per batch spent on densified dense
+        tile tensors: the full (Nd, max_blk, 128, 128) A + A^T footprint
+        under ``aggregate_backend="pallas"``; ZERO under ``"pallas_edges"``
+        (tiles exist only as one VMEM scratch per grid step) and under the
+        reference backend (no tiles at all). Tracked by
+        ``BENCH_pipeline.json`` schema 5 and gated by check_regression."""
+        if not self._blk_caps or self._edge_stream():
+            return 0
+        return densified_tile_bytes(self._blk_caps)
 
     def aggregate_h2d_bytes(self, layout: str = "compact") -> int:
         """Per-batch host->device bytes for the aggregate-path layout.
 
-        ``layout="compact"`` is what the trainer ships (per-edge triples +
-        cols tables); ``layout="dense"`` is what the pre-compact path shipped
-        (full 64 KB tiles) — kept for the benchmark's trajectory ratio."""
+        ``layout="compact"`` is what the trainer ships under
+        ``aggregate_backend="pallas"`` (per-edge triples + cols tables);
+        ``layout="edges"`` is the edge-streaming variant (tile-sorted
+        per-edge arrays + CSR segment offsets, no tile_id);
+        ``layout="dense"`` is what the pre-compact path shipped (full 64 KB
+        tiles) — kept for the benchmark's trajectory ratio."""
         fn = {"compact": compact_layout_bytes,
+              "edges": edge_stream_layout_bytes,
               "dense": dense_layout_bytes}[layout]
         total = 0
         for n_src, n_dst, max_blk, max_blk_t, e_cap in self._blk_caps:
@@ -272,10 +295,12 @@ class SyncGNNTrainer:
         build_layer_layouts, the SAME routine the sampler-pool workers run,
         so layouts are bit-identical wherever the batch was sampled. The
         host stages only ~20 B/edge; densification happens on device inside
-        the jit'd step; shapes are pinned by self._blk_caps."""
+        the jit'd step (HBM scatter under "pallas", per-tile VMEM scratch
+        under "pallas_edges"); shapes are pinned by self._blk_caps."""
         return build_layer_layouts(mb.edge_src, mb.edge_dst, mb.edge_mask,
                                    self._blk_caps,
-                                   gnn_models.AGG_KIND[self.model_cfg.name])
+                                   gnn_models.AGG_KIND[self.model_cfg.name],
+                                   edge_stream=self._edge_stream())
 
     def _sample_payload(self, a: sched.Assignment) -> dict:
         """In-process twin of one SamplerPool task: stage 1 (sample) plus

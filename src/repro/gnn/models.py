@@ -17,8 +17,13 @@ import jax.numpy as jnp
 
 from repro.configs.gnn import GNNModelConfig
 from repro.kernels.aggregate import (BLK, aggregate_compact_vjp,
-                                     resolve_interpret)
+                                     aggregate_edges_vjp, resolve_interpret)
 from repro.nn.param import PSpec
+
+
+# aggregate_backend values that route through the Pallas SpMM datapath (and
+# therefore need the stage-2b layout arrays in the batch)
+KERNEL_BACKENDS = ("pallas", "pallas_edges")
 
 
 # Aggregation semantics per model. "mean"/"sum" models can run through the
@@ -103,21 +108,34 @@ def _blockcsr_aggregate(cfg: GNNModelConfig, batch, l: int, h: jax.Array,
 
     The pipeline stage precomputed the COMPACT edge-centric layout for A
     (and A^T for the VJP) with the model's semantics baked into the edge
-    values (1/deg for mean, 1 for sum); the dense tiles are densified ON
-    DEVICE inside the jit'd step (kernels/aggregate.densify_tiles), so a
-    single masked SpMM reproduces ``aggregate`` exactly while the host ships
-    only ~20 B/edge (A + A^T). Execution mode follows ``cfg.kernel_interpret``
-    (None = compiled on real TPU, interpreted elsewhere)."""
+    values (1/deg for mean, 1 for sum). ``aggregate_backend`` picks how the
+    tiles come to exist: ``"pallas"`` densifies the full tile tensor in
+    device HBM inside the jit'd step (kernels/aggregate.densify_tiles) and
+    feeds the block-CSR kernel; ``"pallas_edges"`` streams the tile-sorted
+    edge segments straight into the kernel, which densifies each 128x128
+    tile in a VMEM scratch right before its matmul — no dense tile tensor
+    in HBM at all. Either way the host ships ~20 B/edge (A + A^T) and a
+    single masked SpMM reproduces ``aggregate`` exactly. Execution mode
+    follows ``cfg.kernel_interpret`` (None = compiled on real TPU,
+    interpreted elsewhere)."""
     cols_t = batch["agg_cols_t"][l]
     n_src_pad = cols_t.shape[0] * BLK
     h32 = h.astype(jnp.float32)
     h_pad = jnp.pad(h32, ((0, n_src_pad - h32.shape[0]), (0, 0)))
-    out = aggregate_compact_vjp(
-        batch["agg_tile_id"][l], batch["agg_tile_off"][l],
-        batch["agg_val"][l], batch["agg_cols"][l],
-        batch["agg_tile_id_t"][l], batch["agg_tile_off_t"][l],
-        cols_t, h_pad,
-        interpret=resolve_interpret(cfg.kernel_interpret))
+    interpret = resolve_interpret(cfg.kernel_interpret)
+    if cfg.aggregate_backend == "pallas_edges":
+        out = aggregate_edges_vjp(
+            batch["agg_tile_off"][l], batch["agg_val"][l],
+            batch["agg_tile_seg"][l], batch["agg_cols"][l],
+            batch["agg_tile_off_t"][l], batch["agg_val_t"][l],
+            batch["agg_tile_seg_t"][l], cols_t, h_pad,
+            interpret=interpret)
+    else:
+        out = aggregate_compact_vjp(
+            batch["agg_tile_id"][l], batch["agg_tile_off"][l],
+            batch["agg_val"][l], batch["agg_cols"][l],
+            batch["agg_tile_id_t"][l], batch["agg_tile_off_t"][l],
+            cols_t, h_pad, interpret=interpret)
     return out[:n_dst].astype(h.dtype)
 
 
@@ -125,9 +143,9 @@ def _layer(cfg: GNNModelConfig, p, h, batch, l: int, n_dst: int):
     src, dst = batch["edge_src"][l], batch["edge_dst"][l]
     emask = batch["edge_mask"][l]
     h_self = h[batch["self_idx"][l]]
-    use_kernel = (cfg.aggregate_backend == "pallas"
+    use_kernel = (cfg.aggregate_backend in KERNEL_BACKENDS
                   and AGG_KIND.get(cfg.name) is not None
-                  and "agg_tile_id" in batch)
+                  and "agg_tile_off" in batch)
 
     def _agg(kind: str) -> jax.Array:
         if use_kernel:

@@ -39,7 +39,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.layout import (  # noqa: F401  (re-exported host builders)
     BLK, block_capacities, build_block_coo_pair, build_block_csr,
     build_block_csr_pair, build_layer_layouts, compact_layout_bytes,
-    dense_layout_bytes, densified_tile_bytes, densify_tiles_np)
+    dense_layout_bytes, densified_tile_bytes, densify_tiles_np,
+    edge_stream_layout_bytes)
 
 
 def densify_tiles(tile_id: jax.Array, tile_off: jax.Array, val: jax.Array,
@@ -47,11 +48,16 @@ def densify_tiles(tile_id: jax.Array, tile_off: jax.Array, val: jax.Array,
     """Device-side tile densification: scatter-add the compact per-edge
     triples into (n_tile_rows, max_blk, BLK, BLK) dense tiles. Runs inside
     the jit'd step (XLA scatter), so the host ships ~20 B/edge instead of
-    64 KB per block slot. Masked edges carry val = 0 at cell (0, 0)."""
-    flat = jnp.zeros(n_tile_rows * max_blk * BLK * BLK, jnp.float32)
-    idx = tile_id.astype(jnp.int32) * (BLK * BLK) + tile_off
-    flat = flat.at[idx].add(val.astype(jnp.float32))
-    return flat.reshape(n_tile_rows, max_blk, BLK, BLK)
+    64 KB per block slot. Masked edges carry val = 0 at cell (0, 0).
+
+    The scatter indexes 2-D ``(tile, cell)``: the flattened
+    ``tile_id * BLK*BLK + tile_off`` form silently overflowed int32 past
+    2**31 / BLK**2 = 131072 tile slots (and int64 is unavailable without
+    jax x64), whereas each 2-D coordinate stays int32-safe on its own for
+    any layout whose tile COUNT fits int32."""
+    tiles = jnp.zeros((n_tile_rows * max_blk, BLK * BLK), jnp.float32)
+    tiles = tiles.at[tile_id, tile_off].add(val.astype(jnp.float32))
+    return tiles.reshape(n_tile_rows, max_blk, BLK, BLK)
 
 
 def resolve_interpret(override: bool | None = None) -> bool:
@@ -78,6 +84,23 @@ def _kernel(cols_ref, a_ref, h_ref, o_ref, acc_ref, *, n_blk: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _pad_feature_dim(h_in: jax.Array, feat_block: int):
+    """Pick the feature-block width and zero-pad F up to a multiple of it.
+
+    The old fallback (``while F % fb: fb -= 1``) degraded to fb = 1 for
+    prime/odd F — a silently SERIALIZED grid of lane-width-1 steps. Instead
+    keep fb = min(feat_block, F) and pad F up to the next multiple (the
+    padded columns are zeros; callers slice the output back to F), so an
+    odd feature width costs one pad/slice, never a degenerate grid.
+    Returns (h_padded, F_pad, fb)."""
+    F = h_in.shape[1]
+    fb = min(feat_block, F)
+    F_pad = -(-F // fb) * fb
+    if F_pad != F:
+        h_in = jnp.pad(h_in, ((0, 0), (0, F_pad - F)))
+    return h_in, F_pad, fb
+
+
 def aggregate_blockcsr(blocks: jax.Array, cols: jax.Array, h_in: jax.Array,
                        *, feat_block: int = 256, interpret: bool = True
                        ) -> jax.Array:
@@ -87,10 +110,8 @@ def aggregate_blockcsr(blocks: jax.Array, cols: jax.Array, h_in: jax.Array,
     h_in: (n_src_pad, F). Returns (Nd*BLK, F)."""
     n_dstb, max_blk = cols.shape
     n_src_pad, F = h_in.shape
-    fb = min(feat_block, F)
-    while F % fb:
-        fb -= 1
-    grid = (n_dstb, F // fb, max_blk)
+    h_in, F_pad, fb = _pad_feature_dim(h_in, feat_block)
+    grid = (n_dstb, F_pad // fb, max_blk)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -102,12 +123,13 @@ def aggregate_blockcsr(blocks: jax.Array, cols: jax.Array, h_in: jax.Array,
         out_specs=pl.BlockSpec((BLK, fb), lambda i, j, k, cols: (i, j)),
         scratch_shapes=[pltpu.VMEM((BLK, fb), jnp.float32)],
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_kernel, n_blk=max_blk),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n_dstb * BLK, F), h_in.dtype),
+        out_shape=jax.ShapeDtypeStruct((n_dstb * BLK, F_pad), h_in.dtype),
         interpret=interpret,
     )(cols, blocks, h_in)
+    return out[:, :F] if F_pad != F else out
 
 
 # ---------------------------------------------------------------------------
@@ -137,8 +159,11 @@ def _agg_fwd(blocks, cols, blocks_t, cols_t, h_in, feat_block, interpret):
 
 def _agg_bwd(feat_block, interpret, res, g):
     blocks, cols, blocks_t, cols_t = res
+    # the kernel computes in fp32; the cotangent of h must come back in the
+    # PRIMAL dtype (== the out dtype g carries) or bf16/f16 training breaks
     dh = aggregate_blockcsr(blocks_t, cols_t, g.astype(jnp.float32),
-                            feat_block=feat_block, interpret=interpret)
+                            feat_block=feat_block,
+                            interpret=interpret).astype(g.dtype)
     return (jnp.zeros_like(blocks),
             np.zeros(cols.shape, jax.dtypes.float0),
             jnp.zeros_like(blocks_t),
@@ -184,8 +209,10 @@ def _agg_compact_fwd(tile_id, tile_off, val, cols, tile_id_t, tile_off_t,
 def _agg_compact_bwd(feat_block, interpret, res, g):
     tile_id, tile_off, val, cols, tile_id_t, tile_off_t, cols_t = res
     blocks_t = densify_tiles(tile_id_t, tile_off_t, val, *cols_t.shape)
+    # cast back to the primal dtype (g carries the out dtype == h_in.dtype)
     dh = aggregate_blockcsr(blocks_t, cols_t, g.astype(jnp.float32),
-                            feat_block=feat_block, interpret=interpret)
+                            feat_block=feat_block,
+                            interpret=interpret).astype(g.dtype)
 
     def f0(a):
         return np.zeros(a.shape, jax.dtypes.float0)
@@ -195,3 +222,158 @@ def _agg_compact_bwd(feat_block, interpret, res, g):
 
 
 aggregate_compact_vjp.defvjp(_agg_compact_fwd, _agg_compact_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Edge-streaming aggregation (tile densification in VMEM)
+# ---------------------------------------------------------------------------
+# The compact path above still scatter-adds the FULL dense tile tensor in
+# device HBM (``densify_tiles``) before the SpMM — the dense footprint the
+# compact layout was built to avoid merely moved from PCIe to HBM. The
+# paper's scatter-gather PEs stream edges and accumulate per-destination in
+# on-chip BRAM (HitGNN §3, Eq. 2/6); this kernel is that datapath on the
+# TPU memory hierarchy: the layout builder re-sorts the per-edge triples
+# into per-tile contiguous segments (CSR-style ``tile_seg`` offsets over
+# the tile slots), and each grid step densifies ITS 128x128 adjacency tile
+# in VMEM — streaming the segment in fixed-size chunks, turning each chunk
+# into a (rows-one-hot * val)^T @ cols-one-hot MXU outer product — right
+# before the tile's matmul. No (Nd, max_blk, 128, 128) tensor ever exists
+# in HBM, forward or backward.
+
+EDGE_CHUNK = 128  # edges densified per MXU outer-product step
+
+
+def _edges_kernel(cols_ref, seg_ref, off_ref, val_ref, h_ref, o_ref,
+                  acc_ref, *, n_blk: int, chunk: int, n_edges: int):
+    del cols_ref  # consumed by the index_map (scalar prefetch)
+    i, k = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    t = i * n_blk + k
+    start = seg_ref[0, t]
+    end = seg_ref[0, t + 1]
+    n_chunks = (end - start + chunk - 1) // chunk
+    lane = jax.lax.broadcasted_iota(jnp.int32, (chunk, BLK), 1)
+
+    def densify_chunk(c, a_tile):
+        # clamp the window into bounds; validity below re-masks the overlap
+        base = jnp.minimum(start + c * chunk, n_edges - chunk)
+        idx = base + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)
+        off = off_ref[0, pl.ds(base, chunk)].reshape(chunk, 1)
+        v = val_ref[0, pl.ds(base, chunk)].reshape(chunk, 1)
+        valid = (idx >= start + c * chunk) & (idx < end)
+        rv = jnp.where((off // BLK == lane) & valid, v, 0.0)
+        cm = (off % BLK == lane).astype(jnp.float32)
+        # a_tile[r, c] += sum_e v_e [row_e == r][col_e == c]: one MXU
+        # contraction over the chunk axis densifies `chunk` edges at once
+        return a_tile + jax.lax.dot_general(
+            rv, cm, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    a_tile = jax.lax.fori_loop(0, n_chunks, densify_chunk,
+                               jnp.zeros((BLK, BLK), jnp.float32))
+    acc_ref[...] += jnp.dot(a_tile, h_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_blk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def aggregate_edges(tile_off: jax.Array, val: jax.Array, seg: jax.Array,
+                    cols: jax.Array, h_in: jax.Array, *,
+                    feat_block: int = 256, edge_chunk: int = EDGE_CHUNK,
+                    interpret: bool = True) -> jax.Array:
+    """out = A @ h_in with A streamed from per-tile edge segments.
+
+    tile_off (E,) i32 cell offsets sorted into per-tile segments;
+    val (E,) f32 matching edge values; seg (n_dstb * max_blk + 1,) i32
+    CSR-style segment offsets over the tile slots (masked/padded edges live
+    past seg[-1] and are never read as valid); cols (n_dstb, max_blk) i32
+    scalar-prefetch source-block table; h_in (n_src_pad, F).
+    Returns (n_dstb * BLK, F).
+
+    Grid and accumulator discipline match ``aggregate_blockcsr`` exactly
+    (same (i, j, k) order, same fp32 VMEM accumulator, same per-tile
+    ``jnp.dot``), and a VMEM-densified tile is bit-identical to its
+    scatter-added twin whenever tile cells are single-edge (the sampler's
+    distinct-pair contract) — so the two backends train bit-identically
+    per seed in interpret mode."""
+    n_dstb, max_blk = cols.shape
+    n_src_pad, F = h_in.shape
+    E = tile_off.shape[0]
+    if E == 0:  # zero-capacity layer: A is empty, the product is zero
+        return jnp.zeros((n_dstb * BLK, F), h_in.dtype)
+    h_in, F_pad, fb = _pad_feature_dim(h_in, feat_block)
+    chunk = min(edge_chunk, E)
+    grid = (n_dstb, F_pad // fb, max_blk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            # seg + the edge stream stay whole (the same VMEM block every
+            # step — Pallas re-uses it); segments are sliced dynamically
+            pl.BlockSpec((1, seg.shape[0]), lambda i, j, k, cols: (0, 0)),
+            pl.BlockSpec((1, E), lambda i, j, k, cols: (0, 0)),
+            pl.BlockSpec((1, E), lambda i, j, k, cols: (0, 0)),
+            pl.BlockSpec((BLK, fb), lambda i, j, k, cols: (cols[i, k], j)),
+        ],
+        out_specs=pl.BlockSpec((BLK, fb), lambda i, j, k, cols: (i, j)),
+        scratch_shapes=[pltpu.VMEM((BLK, fb), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_edges_kernel, n_blk=max_blk, chunk=chunk,
+                          n_edges=E),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_dstb * BLK, F_pad), h_in.dtype),
+        interpret=interpret,
+    )(cols, seg.reshape(1, -1), tile_off.reshape(1, E).astype(jnp.int32),
+      val.reshape(1, E).astype(jnp.float32), h_in)
+    return out[:, :F] if F_pad != F else out
+
+
+# Differentiable wrapper: the cotangent of ``A @ h`` w.r.t. ``h`` is
+# ``A^T @ dout`` — the SAME edge-streaming kernel over the independently
+# tile-sorted transpose segments (tile_off_t / val_t / seg_t / cols_t).
+# The adjacency is sampled data, not a parameter: every layout input gets
+# a zero/float0 cotangent, and no dense tile tensor exists in HBM in
+# either direction.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(9, 10))
+def aggregate_edges_vjp(tile_off: jax.Array, val: jax.Array,
+                        seg: jax.Array, cols: jax.Array,
+                        tile_off_t: jax.Array, val_t: jax.Array,
+                        seg_t: jax.Array, cols_t: jax.Array,
+                        h_in: jax.Array, feat_block: int = 256,
+                        interpret: bool = True) -> jax.Array:
+    """Differentiable ``A @ h_in`` with A in edge-streaming segment form."""
+    return aggregate_edges(tile_off, val, seg, cols, h_in,
+                           feat_block=feat_block, interpret=interpret)
+
+
+def _agg_edges_fwd(tile_off, val, seg, cols, tile_off_t, val_t, seg_t,
+                   cols_t, h_in, feat_block, interpret):
+    out = aggregate_edges_vjp(tile_off, val, seg, cols, tile_off_t, val_t,
+                              seg_t, cols_t, h_in, feat_block, interpret)
+    return out, (tile_off, val, seg, cols, tile_off_t, val_t, seg_t, cols_t)
+
+
+def _agg_edges_bwd(feat_block, interpret, res, g):
+    tile_off, val, seg, cols, tile_off_t, val_t, seg_t, cols_t = res
+    # cast back to the primal dtype (g carries the out dtype == h_in.dtype)
+    dh = aggregate_edges(tile_off_t, val_t, seg_t, cols_t,
+                         g.astype(jnp.float32), feat_block=feat_block,
+                         interpret=interpret).astype(g.dtype)
+
+    def f0(a):
+        return np.zeros(a.shape, jax.dtypes.float0)
+
+    return (f0(tile_off), jnp.zeros_like(val), f0(seg), f0(cols),
+            f0(tile_off_t), jnp.zeros_like(val_t), f0(seg_t), f0(cols_t),
+            dh)
+
+
+aggregate_edges_vjp.defvjp(_agg_edges_fwd, _agg_edges_bwd)

@@ -17,7 +17,12 @@ Two builders feed the kernel:
   emits only per-edge (tile_id, tile_off, value) triples — 12 B per edge for
   A, 20 B with the A^T coordinates (values shared) — derived from ONE sort
   of the edge block keys; tiles are densified ON DEVICE right before the
-  SpMM (``kernels/aggregate.densify_tiles``).
+  SpMM (``kernels/aggregate.densify_tiles``). With ``edge_stream=True`` the
+  triples are additionally RE-SORTED into per-tile contiguous segments with
+  CSR-style ``tile_seg`` offsets over the tile slots, so the edge-streaming
+  Pallas kernel (``kernels/aggregate.aggregate_edges``) can densify each
+  128x128 tile in a VMEM scratch inside the grid step — no dense tile
+  tensor is ever materialized in device HBM.
 """
 from __future__ import annotations
 
@@ -100,7 +105,8 @@ def build_block_coo_pair(edge_src: np.ndarray, edge_dst: np.ndarray,
                          edge_mask: np.ndarray, n_src: int, n_dst: int,
                          values: np.ndarray | None = None,
                          max_blk: int | None = None,
-                         max_blk_t: int | None = None) -> dict:
+                         max_blk_t: int | None = None,
+                         edge_stream: bool = False) -> dict:
     """Single-pass compact layout for A AND A^T from one edge-key sort.
 
     Instead of materializing dense (Nd, max_blk, BLK, BLK) tiles host-side,
@@ -124,6 +130,21 @@ def build_block_coo_pair(edge_src: np.ndarray, edge_dst: np.ndarray,
 
     Returns a dict with keys ``tile_id, tile_off, val, cols, tile_id_t,
     tile_off_t, cols_t, n_src_pad``.
+
+    ``edge_stream=True`` (the ``aggregate_backend="pallas_edges"`` layout)
+    re-sorts the per-edge arrays into PER-TILE CONTIGUOUS SEGMENTS — a
+    stable sort by ``tile_id`` (and, independently, by ``tile_id_t`` for the
+    transpose, which therefore needs its own ``val_t`` copy) with masked
+    edges pushed past the last real segment — and adds the CSR-style offsets
+    ``tile_seg`` (``n_dstb * max_blk + 1``) / ``tile_seg_t``
+    (``n_srcb * max_blk_t + 1``): tile ``t``'s edges occupy
+    ``sorted_arrays[tile_seg[t]:tile_seg[t + 1]]``. The edge-streaming
+    Pallas kernel consumes exactly these segments, one VMEM tile
+    densification per grid step, and never touches ``tile_id`` itself.
+    Within a cell, multi-edges keep their original edge order (stable sort),
+    so densifying the sorted triples stays bit-identical to densifying the
+    unsorted ones whenever cells are single-edge (the sampler's contract:
+    distinct (src, dst) pairs per layer).
     """
     n_srcb = (n_src + BLK - 1) // BLK
     n_dstb = (n_dst + BLK - 1) // BLK
@@ -184,9 +205,34 @@ def build_block_coo_pair(edge_src: np.ndarray, edge_dst: np.ndarray,
     tile_off_t = np.where(mask, (src % BLK) * BLK + dst % BLK,
                           0).astype(np.int32)
 
-    return {"tile_id": tile_id, "tile_off": tile_off, "val": val,
-            "cols": cols, "tile_id_t": tile_id_t, "tile_off_t": tile_off_t,
-            "cols_t": cols_t, "n_src_pad": n_srcb * BLK}
+    out = {"tile_id": tile_id, "tile_off": tile_off, "val": val,
+           "cols": cols, "tile_id_t": tile_id_t, "tile_off_t": tile_off_t,
+           "cols_t": cols_t, "n_src_pad": n_srcb * BLK}
+    if edge_stream:
+        out.update(_edge_stream_sort(out, mask, n_dstb * max_blk,
+                                     n_srcb * max_blk_t))
+    return out
+
+
+def _edge_stream_sort(coo: dict, mask: np.ndarray, n_tiles: int,
+                      n_tiles_t: int) -> dict:
+    """Re-sort the compact triples into per-tile contiguous segments.
+
+    Masked/padded edges sort past every real segment (key = n_tiles), so the
+    static E-length arrays keep their shape while ``tile_seg[-1]`` — the
+    number of real edges — never points at them. The sort is STABLE: edges
+    of one tile (and of one cell) keep their original relative order."""
+    sorted_fields = {}
+    for suffix, n_t in (("", n_tiles), ("_t", n_tiles_t)):
+        tid = coo[f"tile_id{suffix}"]
+        order = np.argsort(np.where(mask, tid, n_t), kind="stable")
+        seg = np.zeros(n_t + 1, np.int32)
+        np.cumsum(np.bincount(tid[mask], minlength=n_t), out=seg[1:])
+        sorted_fields[f"tile_id{suffix}"] = tid[order]
+        sorted_fields[f"tile_off{suffix}"] = coo[f"tile_off{suffix}"][order]
+        sorted_fields[f"val{suffix}"] = coo["val"][order]
+        sorted_fields[f"tile_seg{suffix}"] = seg
+    return sorted_fields
 
 
 def compact_layout_bytes(n_edges: int, n_dstb: int, max_blk: int,
@@ -195,6 +241,19 @@ def compact_layout_bytes(n_edges: int, n_dstb: int, max_blk: int,
     4-byte per-edge arrays for A (tile_id, tile_off, val), two more for A^T
     (the values are shared), plus the two cols tables."""
     return 5 * 4 * n_edges + 4 * (n_dstb * max_blk + n_srcb * max_blk_t)
+
+
+def edge_stream_layout_bytes(n_edges: int, n_dstb: int, max_blk: int,
+                             n_srcb: int, max_blk_t: int) -> int:
+    """Host->device bytes per batch for one layer's EDGE-STREAMING layout
+    (``aggregate_backend="pallas_edges"``): the device consumes two 4-byte
+    per-edge arrays per direction — (tile_off, val) for A and an
+    independently-sorted (tile_off_t, val_t) for A^T; ``tile_id`` never
+    crosses, the CSR-style tile_seg offsets replace it — plus the two
+    offsets arrays and the two cols tables."""
+    return (4 * 4 * n_edges
+            + 4 * (n_dstb * max_blk + 1 + n_srcb * max_blk_t + 1)
+            + 4 * (n_dstb * max_blk + n_srcb * max_blk_t))
 
 
 def dense_layout_bytes(n_edges: int, n_dstb: int, max_blk: int,
@@ -209,10 +268,15 @@ def densify_tiles_np(tile_id: np.ndarray, tile_off: np.ndarray,
                      val: np.ndarray, n_tile_rows: int, max_blk: int
                      ) -> np.ndarray:
     """Numpy twin of ``aggregate.densify_tiles`` (same accumulation order as
-    the dense builder's ``np.add.at``) — used by tests for bit-identity."""
-    flat = np.zeros(n_tile_rows * max_blk * BLK * BLK, np.float32)
-    np.add.at(flat, tile_id.astype(np.int64) * (BLK * BLK) + tile_off, val)
-    return flat.reshape(n_tile_rows, max_blk, BLK, BLK)
+    the dense builder's ``np.add.at``) — used by tests for bit-identity.
+
+    The scatter indexes 2-D ``(tile, cell)`` — NEVER the flattened
+    ``tile_id * BLK*BLK + tile_off`` product, which overflows int32 once the
+    layout exceeds 2**31 / BLK**2 = 131072 tile slots (large fanout/batch
+    configs). Each coordinate stays well inside int32 on its own."""
+    tiles = np.zeros((n_tile_rows * max_blk, BLK * BLK), np.float32)
+    np.add.at(tiles, (tile_id, tile_off), val)
+    return tiles.reshape(n_tile_rows, max_blk, BLK, BLK)
 
 
 # ---------------------------------------------------------------------------
@@ -256,19 +320,31 @@ def densified_tile_bytes(caps: List[Tuple[int, int, int, int, int]]) -> int:
     return total
 
 
+LAYOUT_KEYS = ("tile_id", "tile_off", "val", "cols",
+               "tile_id_t", "tile_off_t", "cols_t")
+# the edge-streaming kernel never reads tile_id — the CSR-style segment
+# offsets replace it — so the payload drops both (e_cap,) i32 arrays and
+# gains val_t + the two (n_tiles + 1,) offsets instead (16 B/edge on the
+# wire vs the densify path's 20)
+EDGE_STREAM_KEYS = ("tile_off", "val", "cols", "tile_off_t", "cols_t",
+                    "val_t", "tile_seg", "tile_seg_t")
+
+
 def build_layer_layouts(edge_src: List[np.ndarray],
                         edge_dst: List[np.ndarray],
                         edge_mask: List[np.ndarray],
                         caps: List[Tuple[int, int, int, int, int]],
-                        kind: Optional[str]) -> dict:
+                        kind: Optional[str],
+                        edge_stream: bool = False) -> dict:
     """Per-layer COMPACT block-CSR layout build for one mini-batch (fwd +
     transpose from one sort — ``build_block_coo_pair``). ``kind`` is the
     aggregation semantic ("mean" bakes 1/deg into the edge values; "sum"
     ships raw 1.0 weights). Shapes are pinned by ``caps``, so every batch of
-    a config reuses one compiled executable."""
-    out: dict = {"agg_tile_id": [], "agg_tile_off": [], "agg_val": [],
-                 "agg_cols": [], "agg_tile_id_t": [], "agg_tile_off_t": [],
-                 "agg_cols_t": []}
+    a config reuses one compiled executable. ``edge_stream`` adds the
+    per-tile segment ordering + CSR offsets the edge-streaming kernel
+    consumes (``aggregate_backend="pallas_edges"``)."""
+    keys = EDGE_STREAM_KEYS if edge_stream else LAYOUT_KEYS
+    out: dict = {f"agg_{k}": [] for k in keys}
     for l, (n_src, n_dst, max_blk, max_blk_t, _) in enumerate(caps):
         src, dst, mask = edge_src[l], edge_dst[l], edge_mask[l]
         vals = None
@@ -276,8 +352,8 @@ def build_layer_layouts(edge_src: List[np.ndarray],
             deg = np.bincount(dst[mask], minlength=n_dst)
             vals = 1.0 / np.maximum(deg[dst], 1.0)
         coo = build_block_coo_pair(src, dst, mask, n_src, n_dst, vals,
-                                   max_blk=max_blk, max_blk_t=max_blk_t)
-        for k in ("tile_id", "tile_off", "val", "cols",
-                  "tile_id_t", "tile_off_t", "cols_t"):
+                                   max_blk=max_blk, max_blk_t=max_blk_t,
+                                   edge_stream=edge_stream)
+        for k in keys:
             out[f"agg_{k}"].append(coo[k])
     return out
