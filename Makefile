@@ -32,6 +32,7 @@ bench-smoke:
 	@python -c "import json, os; \
 	d = json.load(open(os.environ.get('BENCH_PIPELINE_JSON', 'BENCH_pipeline.json'))); \
 	print('bench-smoke:', json.dumps(d['layout'], sort_keys=True)); \
-	print('bench-smoke:', json.dumps(d['aggregate_backends'], sort_keys=True))"
+	print('bench-smoke:', json.dumps(d['aggregate_backends'], sort_keys=True)); \
+	print('bench-smoke:', json.dumps(d['feature_cache'], sort_keys=True))"
 
 verify: test bench-smoke

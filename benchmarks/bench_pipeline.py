@@ -22,10 +22,11 @@ import numpy as np
 
 from repro.configs.gnn import GNNModelConfig
 from repro.data.graphs import scaled_dataset
-from repro.core.sampler import NeighborSampler
+from repro.core.sampler import NeighborSampler, layer_capacities
 from repro.core.partition import metis_like_partition
 from repro.core.feature_store import FeatureStore
-from repro.core.sampler_pool import SamplerPool
+from repro.core.sampler_pool import (FeatureShipSpec, PayloadCodec,
+                                     SamplerPool, suggest_ship_rows_cap)
 from repro.core.simulator import (SimConfig, pipeline_speedup,
                                   sampler_worker_curve, simulate_epoch)
 from repro.core import scheduler as sched
@@ -82,7 +83,7 @@ def run(report, quick: bool = True):
     g = scaled_dataset("ogbn-products", scale=15)
     cfg = GNNModelConfig("graphsage", 2, 128, (5, 5) if quick else (25, 10),
                          64)
-    out = {"schema": 5, "config": {"model": cfg.name, "layers": cfg.num_layers,
+    out = {"schema": 6, "config": {"model": cfg.name, "layers": cfg.num_layers,
                                    "hidden": cfg.hidden,
                                    "fanouts": list(cfg.fanouts),
                                    "batch_targets": cfg.batch_targets,
@@ -302,6 +303,91 @@ def run(report, quick: bool = True):
            f"stage_reduction_x={gather_reduction:.2f} "
            f"ring_KB_per_iter={ring_per_iter/1e3:.1f}")
 
+    # feature cache: frequency-driven per-device HBM cache vs the static
+    # partition at EQUAL capacity (min per-device static resident count),
+    # workers=2 + gather_in_workers — the ring then carries only the true
+    # misses against the refreshed cache. Admission/refresh must not touch
+    # the training math, so per-epoch losses are asserted bitwise equal.
+    # Ring/miss traffic per epoch is a pure function of the seed (the same
+    # fixed set of epochs is measured on both sides), so check_regression
+    # fails ANY increase and demands the cached numbers strictly below the
+    # static baseline.
+    cache_cap = min(fs.num_resident(d) for d in range(4))
+    # ship_rows_cap satellite: size the ring slot from the measured
+    # layer-0 valid-row distribution instead of the worst-case layer
+    # capacity. Shipped misses are a subset of the valid rows, so a cap
+    # covering every batch the two trainers below will draw (epochs 1-4 on
+    # each partition sampler, 100th percentile + 10% margin) cannot
+    # overflow — and the margin keeps headroom for other seeds.
+    worst_rows = layer_capacities(cfg)[0][0]
+    tr_nc = SyncGNNTrainer(g, cfg, num_devices=4, algorithm="distdgl",
+                           num_sampler_workers=2, gather_in_workers=True)
+    valid_counts = [int(smp.batch_at(ep, b).node_mask[0].sum())
+                    for smp in tr_nc.samplers
+                    for ep in range(1, 5)
+                    for b in range(smp.epoch_batches())]
+    ship_cap = min(worst_rows,
+                   suggest_ship_rows_cap(valid_counts, 100.0, 1.1))
+    width = g.features.shape[1]
+    slot_worst = PayloadCodec(cfg, None,
+                              FeatureShipSpec(worst_rows, width)).nbytes
+    slot_capped = PayloadCodec(cfg, None,
+                               FeatureShipSpec(ship_cap, width)).nbytes
+    tr_c = SyncGNNTrainer(g, cfg, num_devices=4, algorithm="distdgl",
+                          num_sampler_workers=2, gather_in_workers=True,
+                          cache_capacity=cache_cap, cache_refresh_every=0,
+                          ship_rows_cap=ship_cap)
+    try:
+        tr_nc.run_epoch()  # warm: jit + pool spawn + cache seeding
+        tr_c.run_epoch()
+        cpairs = []
+        for _ in range(3):  # every measured epoch runs post-refresh
+            m_nc = tr_nc.run_epoch()
+            m_c = tr_c.run_epoch()
+            if m_nc["loss"] != m_c["loss"]:
+                raise AssertionError(
+                    f"feature cache changed the training math: loss "
+                    f"{m_c['loss']} (cache) vs {m_nc['loss']} (static)")
+            cpairs.append((m_nc, m_c))
+    finally:
+        tr_c.close()
+        tr_nc.close()
+
+    def _cmean(side, key):
+        return sum(p[side][key] for p in cpairs) / len(cpairs)
+
+    cache_stats = {
+        "config": {"workers": 2, "gather_in_workers": True,
+                   "cache_capacity": cache_cap, "cache_refresh_every": 0,
+                   "ship_rows_cap": ship_cap},
+        "losses_bitwise_equal": True,
+        # deterministic per seed — check_regression fails ANY increase and
+        # requires cache strictly below static_partition at equal capacity
+        "ring_bytes_per_iter": {"static_partition": _cmean(0, "ring_bytes_per_iter"),
+                                "cache": _cmean(1, "ring_bytes_per_iter")},
+        "miss_bytes_per_iter": {"static_partition": _cmean(0, "miss_bytes_per_iter"),
+                                "cache": _cmean(1, "miss_bytes_per_iter")},
+        "cache_hit_rate": {"static_partition": _cmean(0, "cache_hit_rate"),
+                           "cache": _cmean(1, "cache_hit_rate")},
+        "admissions_per_epoch": _cmean(1, "cache_admissions"),
+        "evictions_per_epoch": _cmean(1, "cache_evictions"),
+        "refresh_bytes_per_epoch": _cmean(1, "cache_refresh_bytes"),
+        "epoch_s": {"static_partition": min(p[0]["epoch_time_s"] for p in cpairs),
+                    "cache": min(p[1]["epoch_time_s"] for p in cpairs)},
+        "ring_slot_bytes": {"worst_case": slot_worst, "capped": slot_capped,
+                            "reduction_x": slot_worst / slot_capped},
+    }
+    cache_stats["ring_reduction_x"] = (
+        cache_stats["ring_bytes_per_iter"]["static_partition"]
+        / max(1e-9, cache_stats["ring_bytes_per_iter"]["cache"]))
+    report("pipe_feature_cache",
+           cache_stats["miss_bytes_per_iter"]["cache"],
+           f"miss_B_static={cache_stats['miss_bytes_per_iter']['static_partition']:.0f} "
+           f"hit_rate={cache_stats['cache_hit_rate']['cache']:.3f} "
+           f"ring_reduction_x={cache_stats['ring_reduction_x']:.2f} "
+           f"slot_shrink_x={slot_worst/slot_capped:.2f} "
+           f"losses_bitwise_equal=True")
+
     # simulator, calibrated with the measured host stage times (the
     # densified-HBM term models the "pallas" backend's scatter-added tiles)
     sim = SimConfig(t_sampling=t_sample, t_gather=t_gather,
@@ -340,21 +426,46 @@ def run(report, quick: bool = True):
            f"speedup_w8_vs_w1={curve[-1]['speedup_vs_1']:.2f}")
     # modelled stage-2 offload: the per-batch gather moves into the worker
     # pool (divided by w), the consumer keeps the measured placement tail,
-    # and the shipped rows pay one host-bandwidth ring crossing per batch
+    # and the shipped rows pay one host-bandwidth ring crossing per batch.
+    # BOTH sides of the model use the gather cost MEASURED ON THE TRAINING
+    # THREAD of the host-gather epochs (host_gather_s / batches) — the
+    # uncontended microbench t_gather under-reads the contended stage ~3x,
+    # which used to drag the modelled speedup below 1 while the measured
+    # epochs showed ~1.3x.
     from dataclasses import replace as dc_replace
     n_gw_batches = max(1, m_gw["batches"])
+    t_gather_epoch = m_gh["host_gather_s"] / max(1, m_gh["batches"])
     sim_g = dc_replace(sim_w, gather_in_workers=True,
-                       t_gather_worker=t_gather,
+                       t_gather_worker=t_gather_epoch,
                        t_placement=m_gw["host_gather_s"] / n_gw_batches,
                        ring_bytes=m_gw["ring_bytes"] / n_gw_batches,
                        num_sampler_workers=2)
     mod_g = simulate_epoch(pool_cfg, DATASETS["ogbn-products"], 4, 0.8,
                            sim_g)
     mod_h = simulate_epoch(pool_cfg, DATASETS["ogbn-products"], 4, 0.8,
-                           dc_replace(sim_w, num_sampler_workers=2))
+                           dc_replace(sim_w, t_gather=t_gather_epoch,
+                                      num_sampler_workers=2))
     report("pipe_modelled_gather_offload", mod_g["epoch_time_s"] * 1e6,
            f"modelled_speedup_vs_host_gather="
            f"{mod_h['epoch_time_s']/mod_g['epoch_time_s']:.2f}")
+    # modelled feature cache on the offloaded-gather platform: the miss
+    # scale (1 - hit) / (1 - calibrated_hit) shrinks the gather + ring
+    # terms, the refresh stream rides the device H2D side
+    hit_static = cache_stats["cache_hit_rate"]["static_partition"]
+    hit_cache = cache_stats["cache_hit_rate"]["cache"]
+    n_c_batches = max(1, cpairs[-1][1]["batches"])
+    mod_c = simulate_epoch(pool_cfg, DATASETS["ogbn-products"], 4, 0.8,
+                           dc_replace(sim_g, cache_hit_rate=hit_cache,
+                                      calibrated_hit_rate=hit_static,
+                                      cache_refresh_bytes=cache_stats[
+                                          "refresh_bytes_per_epoch"]
+                                      / n_c_batches))
+    cache_stats["modelled_speedup"] = (mod_g["epoch_time_s"]
+                                       / mod_c["epoch_time_s"])
+    report("pipe_modelled_feature_cache", mod_c["epoch_time_s"] * 1e6,
+           f"modelled_speedup_vs_static="
+           f"{cache_stats['modelled_speedup']:.3f} "
+           f"miss_scale={mod_c['miss_scale']:.3f}")
 
     # machine-readable trajectory record
     out["stages_s"] = {"sample": t_sample, "gather": t_gather,
@@ -403,6 +514,7 @@ def run(report, quick: bool = True):
         "ring_bytes_per_iter": ring_per_iter,
         "modelled_speedup": mod_h["epoch_time_s"] / mod_g["epoch_time_s"],
     }
+    out["feature_cache"] = cache_stats
     out["epoch"] = {"sequential_s": m_seq["epoch_time_s"],
                     "pipelined_s": m_pipe["epoch_time_s"],
                     "speedup": speedup,

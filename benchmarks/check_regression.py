@@ -24,11 +24,19 @@ Checks (exit code 1 on any failure):
   whole gather moving back onto the thread is signal; same-host-class
   baselines only — the deterministic ring-bytes check above is the sharp
   gate on this path).
+* Feature cache — the ``feature_cache`` section must be present (its
+  absence means the cache-vs-static comparison silently vanished from the
+  bench); the cached ring-bytes/iter AND miss-bytes/iter must be STRICTLY
+  below the static-partition baseline measured in the same run at equal
+  capacity (no committed baseline needed — the reduction IS the contract);
+  and both cached numbers are deterministic per config + seed, so ANY
+  increase over the committed baseline fails.
 * Sampling-service scaling — on hosts with >= 4 CPUs the workers=4 vs
   workers=1 sampled-batches/sec speedup must reach ``--pool-speedup``
   (default 1.5x); smaller hosts cannot physically show 4-way process
-  parallelism, so they only sanity-check that the best worker count beats
-  workers=1 at all (>= 1.02x).
+  parallelism, so 2-3 CPU hosts only sanity-check that the best worker
+  count beats workers=1 at all (>= 1.02x) and 1-CPU hosts skip the check
+  entirely.
 
 A missing or schema-incompatible baseline passes with a warning (first run
 of a new schema), so the gate never blocks the PR that introduces it.
@@ -140,6 +148,38 @@ def compare(baseline: dict, fresh: dict, nvtps_tolerance: float,
                         f"densified-tile HBM bytes increased for "
                         f"{backend}: {fval} > baseline {bval}")
 
+    # feature cache: required-presence contract (like the pallas_edges
+    # zero-HBM record above) + in-run reduction contract + deterministic
+    # no-increase gate against the committed baseline.
+    fresh_fc = _get(fresh, "feature_cache")
+    if not isinstance(fresh_fc, dict):
+        failures.append(
+            "fresh report lacks the feature_cache section (cache-vs-static "
+            "ring/miss-bytes contract cannot be checked)")
+    else:
+        for key in ("ring_bytes_per_iter", "miss_bytes_per_iter"):
+            pair = fresh_fc.get(key)
+            if not isinstance(pair, dict) or "cache" not in pair \
+                    or "static_partition" not in pair:
+                failures.append(
+                    f"fresh feature_cache.{key} lacks the "
+                    f"cache/static_partition pair")
+                continue
+            if not pair["cache"] < pair["static_partition"]:
+                failures.append(
+                    f"feature cache does not reduce {key}: cache "
+                    f"{pair['cache']:.0f} >= static partition "
+                    f"{pair['static_partition']:.0f} at equal capacity")
+            bval = _get(baseline, f"feature_cache.{key}.cache")
+            if bval is not None and pair["cache"] > bval:
+                failures.append(
+                    f"cached {key} increased: {pair['cache']:.0f} > "
+                    f"baseline {bval:.0f}")
+        if fresh_fc.get("losses_bitwise_equal") is not True:
+            failures.append(
+                "feature_cache.losses_bitwise_equal is not True (cache "
+                "admission/refresh changed the training math)")
+
     cpus = _get(fresh, "sampler_pool.host_cpu_count") or 0
     s41 = _get(fresh, "sampler_pool.speedup_4v1")
     sbest = _get(fresh, "sampler_pool.speedup_best")
@@ -149,7 +189,9 @@ def compare(baseline: dict, fresh: dict, nvtps_tolerance: float,
                 f"sampling-service scaling: workers=4 vs 1 speedup "
                 f"{s41:.2f} < required {pool_speedup:.2f} "
                 f"(host has {cpus} CPUs)")
-        elif cpus < 4 and (sbest or 0.0) < 1.02:
+        elif 2 <= cpus < 4 and (sbest or 0.0) < 1.02:
+            # a 1-CPU host cannot physically show process parallelism at
+            # all, so the sanity floor only applies from 2 CPUs up
             failures.append(
                 f"sampling-service scaling: best-workers speedup "
                 f"{sbest:.2f} shows no parallelism on a {cpus}-CPU host")
@@ -191,6 +233,8 @@ def main() -> int:
           f"(nvtps {max(_get(fresh, 'epoch.nvtps_sequential') or 0, _get(fresh, 'epoch.nvtps_pipelined') or 0):.0f}, "
           f"h2d {_get(fresh, 'layout.h2d_bytes_per_iter_compact')} B/iter, "
           f"ring {_get(fresh, 'gather_offload.ring_bytes_per_iter') or 0:.0f} B/iter, "
+          f"miss-bytes {_get(fresh, 'feature_cache.miss_bytes_per_iter.cache') or 0:.0f} B/iter "
+          f"vs static {_get(fresh, 'feature_cache.miss_bytes_per_iter.static_partition') or 0:.0f}, "
           f"densified-HBM {hbm.get('pallas', 0)}/"
           f"{hbm.get('pallas_edges', 0)} B/batch, "
           f"pool speedup_4v1 {_get(fresh, 'sampler_pool.speedup_4v1'):.2f})")

@@ -63,6 +63,30 @@ class GNNModelConfig:
     # (os.sched_setaffinity; Linux-only, silent no-op elsewhere) so N
     # gather streams do not migrate across cores/NUMA domains mid-epoch.
     worker_affinity: bool = False
+    # Frequency-driven per-device HBM feature cache (paper §V static cache +
+    # PaGraph/HyScale-GNN admission; core/feature_cache.py). None = cache
+    # OFF: residency is the algorithm's static partition, exactly the
+    # pre-cache behavior (bit-identical training AND metrics). An int is the
+    # per-device row budget: the cache seeds with the static partition's
+    # highest-out-degree rows up to the budget, counts per-batch accesses,
+    # and periodically promotes hot uncached rows / evicts cold ones —
+    # training math is unchanged by construction (cached rows are device
+    # copies of host rows), only which rows cross the host->device bus.
+    # P3 bypasses the cache entirely (every row already resident as a
+    # feature-dimension slice).
+    cache_capacity: Optional[int] = None
+    # Admission/eviction cadence: 0 = refresh at epoch boundaries only;
+    # K >= 1 = refresh every K synchronous iterations (the admission set is
+    # computed on an async thread one iteration ahead and installed between
+    # iterations; sampler workers handshake on the cache generation).
+    cache_refresh_every: int = 0
+    # Ring sizing: max feature rows one payload may ship through the
+    # sampling service's shared-memory ring. None = the worst-case layer-0
+    # node capacity (every row a miss). Sizing it from a measured miss-row
+    # distribution (core/sampler_pool.suggest_ship_rows_cap) shrinks the
+    # shm footprint per ring slot several-fold; a batch shipping more rows
+    # raises a clear error naming this knob.
+    ship_rows_cap: Optional[int] = None
 
 
 @dataclass(frozen=True)

@@ -163,6 +163,13 @@ class FeatureStore:
         self.account_p3_full(int(valid.sum()))
         return out
 
+    def reset_stats(self) -> None:
+        """Fresh per-device Eq. 7 accounting. The trainer calls this at
+        every epoch start so beta / hit-rate / miss-bytes are PER-EPOCH
+        numbers, comparable across epochs as the feature cache admits and
+        evicts rows."""
+        self.stats = [GatherStats() for _ in range(self.p)]
+
     def beta(self, device: Optional[int] = None) -> float:
         if device is not None:
             return self.stats[device].beta

@@ -25,6 +25,7 @@ materializes at placement time.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
@@ -55,10 +56,16 @@ class GatherStats:
 @dataclass(frozen=True)
 class SharedResidencySpec:
     """Picklable descriptor of a shared-memory-resident ResidencyCore: the
-    segment holding the concatenated id arrays plus the (tiny) geometry."""
+    segment holding the concatenated id buffers, the mutable meta header
+    (generation + per-device lengths), plus the (tiny) geometry.
 
-    segment: "object"               # data.graphs.SharedArraySpec
-    offsets: Tuple[int, ...]        # device i's ids = ids_cat[off[i]:off[i+1]]
+    Offsets are CAPACITY offsets: device i's id buffer is
+    ``ids_cat[off[i]:off[i+1]]`` and its LIVE prefix length is
+    ``meta[1 + i]`` (for an immutable core length == capacity forever)."""
+
+    segment: "object"               # data.graphs.SharedArraySpec (ids)
+    meta: "object"                  # data.graphs.SharedArraySpec (int64 hdr)
+    offsets: Tuple[int, ...]        # capacity offsets into ids_cat
     all_resident: Tuple[bool, ...]
     slices: Tuple[Tuple[int, int], ...]
     num_vertices: int
@@ -73,22 +80,73 @@ class ResidencyCore:
     vertex ids (O(cache size) memory), or the ``all_resident`` flag (P3 —
     every row resident as a feature-dimension slice, O(1)). Membership tests
     are one vectorized ``searchsorted`` per batch.
+
+    The id sets are MUTABLE and generation-stamped: a feature cache
+    (``core/feature_cache.py``) calls :meth:`set_resident` to admit/evict
+    rows between iterations and :meth:`publish_generation` to make the new
+    contents visible, and ``capacities`` bound each device's id buffer so
+    the shared-memory twin can be sized once and updated in place. Sampler
+    workers holding an attached core handshake on the generation
+    (:meth:`wait_generation`) so every batch's hit/miss split is evaluated
+    against exactly the cache contents the trainer accounts it with. A core
+    that is never mutated (no cache configured) behaves exactly like the
+    pre-cache immutable one: generation stays 0 and capacity == length.
     """
 
     def __init__(self, num_vertices: int, feat_dim: int,
                  resident_ids: Sequence[np.ndarray],
                  all_resident: Sequence[bool],
-                 slices: Sequence[Tuple[int, int]]):
+                 slices: Sequence[Tuple[int, int]],
+                 capacities: Optional[Sequence[int]] = None):
         self.num_vertices = num_vertices
         self.feat_dim = feat_dim
         self._resident_ids: List[np.ndarray] = [
             np.asarray(r, np.int32) for r in resident_ids]
         self._all_resident = list(all_resident)
         self._slices = [tuple(s) for s in slices]
+        self.capacities: List[int] = (
+            [len(r) for r in self._resident_ids] if capacities is None
+            else [int(c) for c in capacities])
+        for i, r in enumerate(self._resident_ids):
+            if len(r) > self.capacities[i]:
+                raise ValueError(
+                    f"device {i} resident set ({len(r)} ids) exceeds its "
+                    f"buffer capacity {self.capacities[i]}")
+        self.generation = 0
+        self._shared_mirror: Optional["SharedResidency"] = None
 
     @property
     def num_devices(self) -> int:
         return len(self._all_resident)
+
+    # -- mutation (the feature cache's write path) ----------------------------
+    def set_resident(self, device: int, sorted_ids: np.ndarray) -> None:
+        """Replace ``device``'s resident-id set (must be sorted int32,
+        within the device's buffer capacity). Writes through to the shared
+        twin when one exists — but does NOT bump the generation: callers
+        update every device, then :meth:`publish_generation` once, so
+        attached workers never observe a half-updated cache."""
+        ids = np.asarray(sorted_ids, np.int32)
+        if len(ids) > self.capacities[device]:
+            raise ValueError(
+                f"resident set of {len(ids)} ids exceeds device {device}'s "
+                f"cache capacity {self.capacities[device]}")
+        self._resident_ids[device] = ids
+        if self._shared_mirror is not None:
+            self._shared_mirror.write_device(device, ids)
+
+    def publish_generation(self, generation: int) -> None:
+        """Stamp the current resident sets as ``generation`` (monotone).
+        With a shared twin the stamp is written LAST, after every id write,
+        so an attached worker that observes the new generation also
+        observes the new contents."""
+        if generation < self.generation:
+            raise ValueError(
+                f"generation must be monotone: {generation} < "
+                f"{self.generation}")
+        self.generation = generation
+        if self._shared_mirror is not None:
+            self._shared_mirror.publish(generation)
 
     # -- residency queries ----------------------------------------------------
     def num_resident(self, device: int) -> int:
@@ -167,58 +225,162 @@ class ResidencyCore:
 
     # -- shared-memory residency ----------------------------------------------
     def to_shared(self) -> "SharedResidency":
-        """Copy the resident-id arrays ONCE into a named shared-memory
-        segment. Returns the owning handle (same close/unlink discipline as
+        """Copy the resident-id buffers ONCE into named shared-memory
+        segments (ids at full buffer CAPACITY + the mutable meta header).
+        Returns the owning handle (same close/unlink discipline as
         ``data.graphs.SharedGraph``); its picklable ``spec`` attaches
-        workers zero-copy via :meth:`from_shared`."""
-        return SharedResidency(self)
+        workers zero-copy via :meth:`from_shared`. The handle registers
+        itself as this core's write-through mirror, so later
+        :meth:`set_resident`/:meth:`publish_generation` calls update the
+        segments in place — the cache-refresh path."""
+        shared = SharedResidency(self)
+        self._shared_mirror = shared
+        return shared
 
     @classmethod
     def from_shared(cls, spec: SharedResidencySpec) -> "ResidencyCore":
         """Attach a core whose id arrays are zero-copy views over the shared
         segment described by ``spec``. The attachment handle rides on the
         instance (``_shm_handles``) for its lifetime; attachers never
-        unlink."""
+        unlink. The views cover each device's LIVE prefix (meta lengths) at
+        the meta generation; :meth:`sync_shared` re-derives them after the
+        owner publishes a new generation."""
         from repro.data.graphs import attach_arrays  # local: avoid cycle
-        handles, arrays = attach_arrays({"resident_cat": spec.segment})
+        handles, arrays = attach_arrays({"resident_cat": spec.segment,
+                                         "resident_meta": spec.meta})
         cat = arrays["resident_cat"]
+        meta = arrays["resident_meta"]
         off = spec.offsets
-        ids = [cat[off[i]:off[i + 1]] for i in range(len(off) - 1)]
+        ids = [cat[off[i]:off[i] + int(meta[1 + i])]
+               for i in range(len(off) - 1)]
+        caps = [off[i + 1] - off[i] for i in range(len(off) - 1)]
         core = cls(spec.num_vertices, spec.feat_dim, ids, spec.all_resident,
-                   spec.slices)
+                   spec.slices, capacities=caps)
         core._shm_handles = handles
+        core._shared_cat = cat
+        core._shared_meta = meta
+        core._shared_offsets = off
+        core.generation = int(meta[0])
         return core
+
+    def sync_shared(self) -> None:
+        """Re-derive the resident-id views from the shared meta header
+        (attached cores only): after the owner publishes generation g, the
+        live prefix lengths may have changed. One slice per device — the id
+        bytes themselves are never copied."""
+        meta = self._shared_meta
+        off = self._shared_offsets
+        for i in range(self.num_devices):
+            self._resident_ids[i] = self._shared_cat[
+                off[i]:off[i] + int(meta[1 + i])]
+        self.generation = int(meta[0])
+
+    def wait_generation(self, generation: int, timeout: float = 60.0,
+                        poll_s: float = 2e-4) -> None:
+        """Block until the shared cache reaches exactly ``generation`` and
+        sync the views to it (attached cores only; owners are already
+        current). A task stamped with generation g may arrive at a worker
+        BEFORE the trainer has installed g (the submission window runs
+        ahead of the refresh point) — the worker spins here. The owner
+        never overwrites contents a stamped task still needs (it installs
+        g+1 only after every g-stamped payload was consumed), so observing
+        a generation PAST the stamp means the handshake was violated and
+        raises."""
+        if not hasattr(self, "_shared_meta"):
+            if self.generation != generation:
+                raise RuntimeError(
+                    f"core at generation {self.generation} cannot wait for "
+                    f"{generation} without a shared meta header")
+            return
+        deadline = time.monotonic() + timeout
+        while True:
+            gen = int(self._shared_meta[0])
+            if gen == generation:
+                self.sync_shared()
+                return
+            if gen > generation:
+                raise RuntimeError(
+                    f"cache generation ran ahead of a stamped task: shared "
+                    f"generation {gen} > stamped {generation} (refresh "
+                    f"published before all prior payloads were consumed)")
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"cache generation {generation} not published within "
+                    f"{timeout:.0f}s (shared generation still {gen})")
+            time.sleep(poll_s)
 
 
 class SharedResidency:
     """Owner handle for a ResidencyCore copied into shared memory.
 
-    One segment holds every device's sorted id array back to back (the
-    per-device offsets travel in the picklable spec). ``close`` is
-    idempotent and unlinks; context-manager exit and ``__del__`` both run it
-    so the segment never outlives its pool."""
+    One segment holds every device's sorted id BUFFER back to back at full
+    capacity (the per-device capacity offsets travel in the picklable
+    spec); a second, mutable int64 meta segment holds
+    ``[generation, len_0, ..., len_{p-1}]`` — the cache-refresh write path
+    updates a device's prefix + length in place and publishes the
+    generation LAST. ``close`` is idempotent and unlinks; context-manager
+    exit and ``__del__`` both run it so the segments never outlive their
+    pool."""
 
     def __init__(self, core: ResidencyCore):
         from repro.data.graphs import share_arrays  # local: avoid cycle
         p = core.num_devices
+        caps = [0 if core._all_resident[i] else core.capacities[i]
+                for i in range(p)]
         lengths = [0 if core._all_resident[i] else len(core._resident_ids[i])
                    for i in range(p)]
-        offsets = np.concatenate([[0], np.cumsum(lengths)]).astype(np.int64)
-        cat = (np.concatenate([core._resident_ids[i]
-                               for i in range(p) if not core._all_resident[i]]
-                              ).astype(np.int32)
-               if sum(lengths) else np.empty(0, np.int32))
-        self._segments, specs = share_arrays({"resident_cat": cat})
+        offsets = np.concatenate([[0], np.cumsum(caps)]).astype(np.int64)
+        cat = np.zeros(int(offsets[-1]), np.int32)
+        for i in range(p):
+            if lengths[i]:
+                cat[int(offsets[i]):int(offsets[i]) + lengths[i]] = \
+                    core._resident_ids[i]
+        meta = np.array([core.generation] + lengths, np.int64)
+        self._segments, specs = share_arrays({"resident_cat": cat,
+                                              "resident_meta": meta})
+        # writable views over the OWNER's mapping (share_arrays copied the
+        # seed values in; re-attach the arrays for in-place refresh writes)
+        from repro.data.graphs import attach_arrays
+        self._own_handles, own = attach_arrays(
+            {"resident_cat": specs["resident_cat"],
+             "resident_meta": specs["resident_meta"]})
+        self._cat = own["resident_cat"]
+        self._meta = own["resident_meta"]
+        self._offsets = [int(o) for o in offsets]
+        self._core = core
         self.spec = SharedResidencySpec(
-            specs["resident_cat"], tuple(int(o) for o in offsets),
+            specs["resident_cat"], specs["resident_meta"],
+            tuple(int(o) for o in offsets),
             tuple(core._all_resident), tuple(core._slices),
             core.num_vertices, core.feat_dim)
         self._closed = False
+
+    # -- cache-refresh write path --------------------------------------------
+    def write_device(self, device: int, sorted_ids: np.ndarray) -> None:
+        lo = self._offsets[device]
+        n = len(sorted_ids)
+        if n > self._offsets[device + 1] - lo:
+            raise ValueError(
+                f"device {device} resident set ({n}) exceeds its shared "
+                f"buffer capacity {self._offsets[device + 1] - lo}")
+        self._cat[lo:lo + n] = sorted_ids
+        self._meta[1 + device] = n
+
+    def publish(self, generation: int) -> None:
+        self._meta[0] = generation
 
     def close(self, unlink: bool = True) -> None:
         if getattr(self, "_closed", False):
             return
         self._closed = True
+        core = getattr(self, "_core", None)
+        if core is not None and core._shared_mirror is self:
+            core._shared_mirror = None  # refresh writes stop hitting shm
+        for shm in list(getattr(self, "_own_handles", [])):
+            try:
+                shm.close()
+            except Exception:
+                pass
         for shm in self._segments:
             try:
                 shm.close()

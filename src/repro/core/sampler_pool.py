@@ -20,11 +20,15 @@ shared in-memory store:
     feature matrix and shipped, so ring traffic matches the paper's cached
     gather (resident rows are device-HBM reads the trainer materializes at
     placement). All of it is pure numpy — workers never import jax;
-  * tasks are ``(seq, partition, epoch, batch_index, device)`` tuples.
-    Batches are pure functions of the RNG coordinates (the sampler's
-    counter-based streams), so ANY worker may execute ANY task and the
-    result is bit-identical to the single-process path; ``device`` only
-    selects WHICH rows ship (the row values are device-independent);
+  * tasks are ``(seq, partition, epoch, batch_index, device, generation)``
+    tuples. Batches are pure functions of the RNG coordinates (the
+    sampler's counter-based streams), so ANY worker may execute ANY task
+    and the result is bit-identical to the single-process path; ``device``
+    only selects WHICH rows ship (the row values are device-independent)
+    and ``generation`` names the feature-cache contents the hit/miss split
+    is evaluated against (workers spin on
+    ``ResidencyCore.wait_generation`` until the trainer's refresh lands —
+    the generation handshake that keeps a mutable cache deterministic);
   * completions flow through a sequence-numbered
     :class:`~repro.core.pipeline.ReorderBuffer`, so the consumer sees
     batches in exact submission order no matter which worker finished first.
@@ -70,23 +74,49 @@ from repro.core.sampler import MiniBatch, NeighborSampler, layer_capacities
 from repro.data.graphs import Graph, SharedGraphSpec
 from repro.kernels.layout import BLK, build_layer_layouts
 
-# (partition, epoch, batch_index[, device]) — device defaults to partition
-Task = Union[Tuple[int, int, int], Tuple[int, int, int, int]]
+# (partition, epoch, batch_index[, device[, generation]]) — device defaults
+# to the partition; generation is the cache generation the batch must be
+# gathered against (0 = the immutable static residency)
+Task = Union[Tuple[int, int, int], Tuple[int, int, int, int],
+             Tuple[int, int, int, int, int]]
 
 
 @dataclass(frozen=True)
 class FeatureShipSpec:
     """Geometry of the gathered-rows segment of a ring slot.
 
-    ``rows_cap`` bounds how many feature rows one payload may ship (static
-    per config — the layer-0 node capacity covers the worst case of every
-    row missing); ``width`` is the feature dimension; ``p3_full`` selects
-    the P3 all-to-all path (ship the reconstructed full rows for every
-    valid position instead of the miss rows)."""
+    ``rows_cap`` bounds how many feature rows one payload may ship — the
+    worst case (every valid layer-0 row a miss) is the layer-0 node
+    capacity, but real miss distributions run far below it, so the
+    ``GNNModelConfig.ship_rows_cap`` knob (see
+    :func:`suggest_ship_rows_cap`) sizes the segment from measurement and
+    shrinks the shm footprint per slot several-fold; ``width`` is the
+    feature dimension; ``p3_full`` selects the P3 all-to-all path (ship
+    the reconstructed full rows for every valid position instead of the
+    miss rows)."""
 
     rows_cap: int
     width: int
     p3_full: bool = False
+
+
+def suggest_ship_rows_cap(miss_row_counts: Sequence[int],
+                          percentile: float = 99.0,
+                          margin: float = 1.1) -> int:
+    """Ring-slot rows capacity from a MEASURED miss-row distribution.
+
+    Takes per-payload shipped-row counts (e.g. collected over a calibration
+    epoch), returns ``ceil(percentile(counts) * margin)`` — a cap that
+    admits the observed distribution with headroom instead of reserving the
+    worst-case layer-0 node capacity per slot. A later batch shipping more
+    rows fails loudly in ``PayloadCodec.encode`` naming the knob."""
+    counts = np.asarray(list(miss_row_counts), np.int64)
+    if counts.size == 0:
+        raise ValueError("need at least one measured miss-row count")
+    if counts.min() < 0:
+        raise ValueError("miss-row counts must be >= 0")
+    return max(1, int(np.ceil(float(np.percentile(counts, percentile))
+                              * margin)))
 
 
 class PayloadCodec:
@@ -197,8 +227,10 @@ class PayloadCodec:
                 raise ValueError(
                     f"feature ring capacity overflow: batch ships {m} rows "
                     f"but the slot holds rows_cap={self.feat.rows_cap}; "
-                    f"raise the capacity (layer-0 node cap) or gather fewer "
-                    f"rows per payload")
+                    f"raise GNNModelConfig.ship_rows_cap (None = worst-case "
+                    f"layer-0 node cap), or re-derive it from measured miss "
+                    f"distributions with "
+                    f"core.sampler_pool.suggest_ship_rows_cap")
         for key, l, shape, dtype, off in self.entries:
             if key == "feat_count":
                 arr = np.array([m], np.int32)
@@ -327,7 +359,7 @@ def _worker_main(worker_id: int, spec: SharedGraphSpec, cfg: GNNModelConfig,
             task = task_q.get()
             if task is None:
                 return
-            seq, part, epoch, index, device = task
+            seq, part, epoch, index, device, gen = task
             try:
                 mb = samplers[part].batch_at(epoch, index)
                 layout = None
@@ -338,6 +370,14 @@ def _worker_main(worker_id: int, spec: SharedGraphSpec, cfg: GNNModelConfig,
                         edge_stream=cfg.aggregate_backend == "pallas_edges")
                 feats = None
                 if residency is not None:
+                    # generation handshake: the task names the cache
+                    # contents its hit/miss split must be evaluated
+                    # against. The trainer publishes generations in
+                    # iteration order and never overwrites one a stamped
+                    # task still needs, so a stale view here just means
+                    # the refresh has not landed yet — spin until it does
+                    if gen != residency.generation:
+                        residency.wait_generation(gen)
                     # stage 2 in the worker: gather only what must cross
                     # the bus to `device` (all valid rows for P3 all-to-all)
                     feats = residency.select_ship_rows(
@@ -462,17 +502,19 @@ class SamplerPool:
         return self._outstanding
 
     def submit(self, partition: int, epoch: int, index: int,
-               device: Optional[int] = None) -> int:
+               device: Optional[int] = None, generation: int = 0) -> int:
         """Enqueue one batch task. ``device`` is the target device whose
         residency decides which feature rows ship (defaults to the
-        partition, the scheduler's static stage-1 mapping); it is ignored
-        when the pool gathers no features."""
+        partition, the scheduler's static stage-1 mapping); ``generation``
+        is the cache generation the worker must gather against (0 = the
+        residency as shared — the only generation an immutable core ever
+        has). Both are ignored when the pool gathers no features."""
         if self._closed:
             raise RuntimeError("SamplerPool is closed")
         seq = self._seq
         self._seq += 1
         dev = partition if device is None else device
-        self._task_q.put((seq, partition, epoch, index, dev))
+        self._task_q.put((seq, partition, epoch, index, dev, generation))
         self._outstanding += 1
         return seq
 
@@ -528,7 +570,8 @@ class SamplerPool:
     def map_tasks(self, tasks: Iterable[Task],
                   window: Optional[int] = None,
                   fetch_timeout: float = 300.0) -> Iterator[dict]:
-        """Run ``(partition, epoch, index[, device])`` tasks with a bounded
+        """Run ``(partition, epoch, index[, device[, generation]])`` tasks
+        with a bounded
         submission window, yielding payloads in task order. The window
         (default ``4 * num_workers``) caps staged-but-unconsumed batches,
         bounding host memory exactly like the prefetch executor's queue

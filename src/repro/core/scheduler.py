@@ -136,9 +136,14 @@ class LoadBalancer:
         (``MiniBatch.work_estimate``), and the batch additionally costs the
         gathered-feature elements that must cross the bus to its device —
         ``miss_rows * feat_dim`` (rows non-resident on the target device x
-        the feature width). Without this term a batch landing on a device
-        that caches none of its rows looks as cheap as one landing on the
-        device that caches them all."""
+        the feature width). ``miss_rows`` comes from
+        ``ResidencyCore.miss_count`` (or the worker's shipped-row count),
+        so with a feature cache configured the term follows CACHE
+        residency, not the static partition: load assignment tracks the
+        real bus traffic as admissions move hot rows on-device. Without
+        this term a batch landing on a device that caches none of its rows
+        looks as cheap as one landing on the device that caches them
+        all."""
         return float(work_estimate) + float(miss_rows) * float(feat_dim)
 
     def assign(self, assignments: Sequence[Assignment],

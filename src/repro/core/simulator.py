@@ -19,7 +19,7 @@ CPU runs (benchmarks/bench_scalability.py --calibrate).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -74,6 +74,18 @@ class SimConfig:
     t_gather_worker: float = 0.0
     t_placement: float = 0.0
     ring_bytes: float = 0.0
+    # Feature-cache model (core/feature_cache.py): the per-batch gather and
+    # ring terms above are CALIBRATED from a run whose epoch hit rate was
+    # calibrated_hit_rate; setting cache_hit_rate rescales their
+    # miss-driven cost by (1 - hit) / (1 - calibrated) — a higher hit rate
+    # means fewer rows cross the host bus / the ring per batch. None (the
+    # default) leaves the model untouched. cache_refresh_bytes is the
+    # per-batch host->device refresh stream (admitted rows installed
+    # between iterations); it rides the device side of the overlap like
+    # the layout H2D payload.
+    cache_hit_rate: "Optional[float]" = None
+    calibrated_hit_rate: float = 0.0
+    cache_refresh_bytes: float = 0.0
 
 
 def partition_batch_counts(train_vertices: int, p: int,
@@ -132,17 +144,33 @@ def simulate_epoch(model: GNNModelConfig, ds: GraphDatasetConfig,
     # stays serial and each batch's shipped rows pay one host-bandwidth
     # crossing of the shared-memory ring.
     w = max(1, sim.num_sampler_workers)
+    # feature-cache model: gather time and ring traffic are driven by the
+    # MISS rows of a batch, so both scale with the miss fraction relative
+    # to the hit rate the calibration run measured. Ring bytes are exactly
+    # miss rows x row bytes (the ring carries only true misses); the
+    # gather terms are dominated by the same fancy-indexed row reads, so
+    # the shared scale is applied to them too.
+    miss_scale = 1.0
+    if sim.cache_hit_rate is not None:
+        miss_scale = (max(0.0, 1.0 - sim.cache_hit_rate)
+                      / max(1e-9, 1.0 - sim.calibrated_hit_rate))
+    t_gather = sim.t_gather * miss_scale
+    t_gather_worker = sim.t_gather_worker * miss_scale
+    ring_bytes = sim.ring_bytes * miss_scale
     # densified-tile HBM traffic (scatter write + SpMM read-back) rides the
-    # device side of the overlap, like the layout H2D payload
+    # device side of the overlap, like the layout H2D payload — and so does
+    # the cache-refresh stream installing admitted rows between iterations
     t_densify = 2 * sim.densified_hbm_bytes / pf.fpga.ddr_bw
-    t_gnn = gnn_time() + sim.h2d_layout_bytes / host_share + t_densify
+    t_gnn = (gnn_time()
+             + (sim.h2d_layout_bytes + sim.cache_refresh_bytes) / host_share
+             + t_densify)
     t_ipc = sim.t_ipc if sim.num_sampler_workers > 1 else 0.0
     if sim.gather_in_workers:
         t_host = (sim.t_placement
-                  + (sim.t_sampling + sim.t_layout + sim.t_gather_worker) / w
-                  + t_ipc + sim.ring_bytes / pf.host_bw)
+                  + (sim.t_sampling + sim.t_layout + t_gather_worker) / w
+                  + t_ipc + ring_bytes / pf.host_bw)
     else:
-        t_host = (sim.t_gather + (sim.t_sampling + sim.t_layout) / w
+        t_host = (t_gather + (sim.t_sampling + sim.t_layout) / w
                   + t_ipc)
     t_exec = max(t_host, t_gnn) if sim.sampling_overlap else t_host + t_gnn
     grad_bytes = 4 * (ds.feat_dim * model.hidden
@@ -164,12 +192,15 @@ def simulate_epoch(model: GNNModelConfig, ds: GraphDatasetConfig,
         "iterations": stats["iterations"],
         "utilization": stats["utilization"],
         "t_gnn": t_gnn, "t_sync": t_sync, "t_parallel": t_parallel,
-        "t_sampling": sim.t_sampling, "t_gather": sim.t_gather,
+        "t_sampling": sim.t_sampling, "t_gather": t_gather,
         "t_layout": sim.t_layout, "t_host": t_host,
         "num_sampler_workers": sim.num_sampler_workers,
         "gather_in_workers": sim.gather_in_workers,
-        "t_gather_worker": sim.t_gather_worker,
-        "ring_bytes": sim.ring_bytes,
+        "t_gather_worker": t_gather_worker,
+        "ring_bytes": ring_bytes,
+        "cache_hit_rate": sim.cache_hit_rate,
+        "miss_scale": miss_scale,
+        "cache_refresh_bytes": sim.cache_refresh_bytes,
         "h2d_layout_bytes": sim.h2d_layout_bytes,
         "densified_hbm_bytes": sim.densified_hbm_bytes,
         "t_densify": t_densify,

@@ -45,6 +45,7 @@ import numpy as np
 from repro.configs.gnn import GNNModelConfig
 from repro.data.graphs import Graph
 from repro.core.partition import Partition, get_partitioner
+from repro.core.feature_cache import FeatureCache
 from repro.core.feature_store import FeatureStore
 from repro.core.pipeline import PipelineStats, PrefetchExecutor
 from repro.core.sampler import NeighborSampler, MiniBatch
@@ -118,6 +119,14 @@ class SyncGNNTrainer:
     balance_policy: Optional[str] = None
     gather_in_workers: Optional[bool] = None
     worker_affinity: Optional[bool] = None
+    # Feature-cache knobs — same None-inherits override pattern.
+    # cache_capacity turns the static residency into a frequency-driven
+    # fixed-capacity cache (core/feature_cache.py); cache_refresh_every
+    # picks the admission cadence (0 = epoch boundaries); ship_rows_cap
+    # bounds the ring's variable-length rows segment.
+    cache_capacity: Optional[int] = None
+    cache_refresh_every: Optional[int] = None
+    ship_rows_cap: Optional[int] = None
 
     def __post_init__(self):
         overrides = {}
@@ -131,6 +140,12 @@ class SyncGNNTrainer:
             overrides["gather_in_workers"] = self.gather_in_workers
         if self.worker_affinity is not None:
             overrides["worker_affinity"] = self.worker_affinity
+        if self.cache_capacity is not None:
+            overrides["cache_capacity"] = self.cache_capacity
+        if self.cache_refresh_every is not None:
+            overrides["cache_refresh_every"] = self.cache_refresh_every
+        if self.ship_rows_cap is not None:
+            overrides["ship_rows_cap"] = self.ship_rows_cap
         if overrides:
             self.model_cfg = dataclasses.replace(self.model_cfg, **overrides)
         self.num_sampler_workers = self.model_cfg.num_sampler_workers
@@ -150,10 +165,30 @@ class SyncGNNTrainer:
                 f"expected one of {sched.BALANCE_POLICIES}")
         if self.num_sampler_workers < 0:
             raise ValueError("num_sampler_workers must be >= 0")
+        if self.model_cfg.cache_refresh_every < 0:
+            raise ValueError("cache_refresh_every must be >= 0")
+        if (self.model_cfg.ship_rows_cap is not None
+                and self.model_cfg.ship_rows_cap < 1):
+            raise ValueError("ship_rows_cap must be >= 1")
         part_name, store_name = ALGORITHMS[self.algorithm]
         self.partition: Partition = get_partitioner(part_name)(
             self.graph, self.num_devices, self.seed)
         self.store = FeatureStore(self.graph, self.partition, store_name)
+        # Frequency-driven HBM feature cache over the store's residency
+        # core. P3 bypasses it entirely: every row is already resident as a
+        # feature-dimension slice, so there is nothing to admit or ship.
+        # None = cache OFF — residency stays the immutable static partition
+        # (bit-identical to the pre-cache trainer). Must wrap the core
+        # BEFORE the sampler pool shares it (_ensure_pool), because the
+        # shared segment is sized from the cache capacity.
+        self.cache: Optional[FeatureCache] = None
+        if (self.model_cfg.cache_capacity is not None
+                and self.algorithm != "p3"):
+            self.cache = FeatureCache(
+                self.store.core, self.graph.out_degree(),
+                self.model_cfg.cache_capacity,
+                self.model_cfg.cache_refresh_every)
+        self._iter_no = 0  # global synchronous-iteration counter
         self.samplers = [
             NeighborSampler(self.graph, self.model_cfg,
                             self._train_ids(i), i, self.seed)
@@ -397,6 +432,19 @@ class SyncGNNTrainer:
                     fill = dict(order[-1])
                     fill["weight"] = np.float32(0.0)
                     batches[d] = fill
+        if self.cache is not None:
+            # fold this iteration's accesses into the admission counter in
+            # CONSUMPTION order (deterministic for any worker count), then
+            # run the refresh hook: when (iter+1) % K == 0 it installs the
+            # pending admitted set so iteration iter+1 onward — stamped
+            # gen(i) = i // K at submission — gathers against it, and one
+            # iteration earlier it launches the next ranking on a
+            # background thread (overlapped with the device step)
+            for payload in payloads:
+                mb = payload["minibatch"]
+                self.cache.observe(mb.nodes[0], mb.node_mask[0])
+            self.cache.end_iteration(self._iter_no)
+        self._iter_no += 1
         return {"stacked": stack_batches(batches), "vertices": vertices,
                 "n_batches": len(assignments)}
 
@@ -453,6 +501,7 @@ class SyncGNNTrainer:
                 residency=(self.store.core if self.gather_in_workers
                            else None),
                 p3_full=self.algorithm == "p3",
+                feat_rows_cap=self.model_cfg.ship_rows_cap,
                 worker_affinity=self.worker_affinity)
         return self._pool
 
@@ -470,16 +519,44 @@ class SyncGNNTrainer:
         # a.device is the scheduler's static target — exact under
         # round_robin; under "load" it is the residency HINT the worker
         # gathers for (placement re-accounts if the balancer moves the
-        # batch; values are device-independent so training is unaffected)
-        tasks = ((a.partition, epoch, a.batch_index, a.device)
-                 for g in groups for a in g)
+        # batch; values are device-independent so training is unaffected).
+        # The generation stamp names the cache contents the worker must
+        # gather against — a pure function of the batch's global iteration
+        # number, so the hit/miss split is identical for every worker
+        # count and completion order.
+        base = self._iter_no
+        tasks = ((a.partition, epoch, a.batch_index, a.device,
+                  self._task_gen(base + gi))
+                 for gi, g in enumerate(groups) for a in g)
         payload_iter = pool.map_tasks(tasks, window)
         for g in groups:
             yield g, [next(payload_iter) for _ in g]
 
+    def _task_gen(self, global_iter: int) -> int:
+        """Cache generation the batch of synchronous iteration
+        ``global_iter`` must be gathered against. Without a cache the
+        residency is immutable and the stamp stays 0. With periodic
+        refresh (K > 0): generation ``i // K`` — installed at the END of
+        iteration ``i//K * K - 1``'s assembly, i.e. strictly before any of
+        iteration i's payloads are consumed, and AFTER every payload of
+        the previous generation was consumed (so the single shared buffer
+        is never overwritten under a reader). With epoch-boundary refresh
+        (K == 0) the generation is constant within an epoch."""
+        if self.cache is None:
+            return 0
+        K = self.model_cfg.cache_refresh_every
+        return global_iter // K if K > 0 else self.cache.generation
+
     def run_epoch(self) -> dict:
         for s in self.samplers:
             s.reset_epoch()
+        # per-epoch beta/miss accounting (hit rates comparable across
+        # epochs) + the cache's epoch hook: counter reset, and in
+        # epoch-boundary mode the synchronous admission/eviction pass —
+        # BEFORE any task submission so workers stamp the new generation
+        self.store.reset_stats()
+        if self.cache is not None:
+            self.cache.start_epoch()
         self._balancer = sched.LoadBalancer(self.num_devices,
                                             self.balance_policy)
         schedule = self.epoch_schedule()
@@ -546,6 +623,14 @@ class SyncGNNTrainer:
         wall = time.time() - t0
         stats = sched.schedule_stats(schedule, self.num_devices)
         n_iter = stats["iterations"]
+        # cache-facing traffic split for THIS epoch (stats reset at epoch
+        # start): hits are device-HBM reads, misses cross the host bus —
+        # miss_bytes_per_iter is the number the regression gate pins
+        local_rows = sum(s.local_rows for s in self.store.stats)
+        host_rows = sum(s.host_rows for s in self.store.stats)
+        host_bytes = sum(s.host_bytes for s in self.store.stats)
+        total_rows = local_rows + host_rows
+        cache = self.cache
         return {**metrics, "epoch_time_s": wall, "batches": n_batches,
                 "iterations": n_iter,
                 "utilization": stats["utilization"],
@@ -565,7 +650,18 @@ class SyncGNNTrainer:
                 "host_gather_s": pstats.gather_s,
                 "ring_bytes": pstats.ring_bytes,
                 "ring_bytes_per_iter": (pstats.ring_bytes / n_iter
-                                        if n_iter else 0.0)}
+                                        if n_iter else 0.0),
+                "cache_enabled": cache is not None,
+                "cache_hit_rate": (local_rows / total_rows
+                                   if total_rows else 1.0),
+                "miss_bytes": host_bytes,
+                "miss_bytes_per_iter": (host_bytes / n_iter
+                                        if n_iter else 0.0),
+                "cache_admissions": (cache.admissions_epoch if cache
+                                     else 0),
+                "cache_evictions": (cache.evictions_epoch if cache else 0),
+                "cache_refresh_bytes": (cache.refresh_bytes_epoch if cache
+                                        else 0)}
 
     def train(self, epochs: int = 1) -> List[dict]:
         return [self.run_epoch() for _ in range(epochs)]
@@ -573,10 +669,13 @@ class SyncGNNTrainer:
     # -- lifecycle --------------------------------------------------------------
     def close(self) -> None:
         """Tear down the sampling service (worker processes + shared-memory
-        segments). Idempotent; trainers without workers are no-ops."""
+        segments) and any in-flight cache-refresh thread. Idempotent;
+        trainers without workers are no-ops."""
         if getattr(self, "_pool", None) is not None:
             self._pool.close()
             self._pool = None
+        if getattr(self, "cache", None) is not None:
+            self.cache.close()
 
     def __enter__(self) -> "SyncGNNTrainer":
         return self

@@ -1,0 +1,338 @@
+"""Frequency-driven per-device HBM feature cache (core/feature_cache.py +
+the mutable generation-stamped shared residency + trainer wiring).
+
+Covers the PR's contracts: (1) degree-ranked seeding from the static
+partition; (2) cache admission/refresh NEVER changes the training math —
+parameters are bitwise identical per seed across cache on/off, worker
+counts, gather placement, and algorithms (P3 bypasses the cache entirely);
+(3) the generation handshake keeps workers=0 and workers=2 training
+bit-identical even with MID-epoch refreshes; (4) admission actually reduces
+miss traffic across epochs; (5) the refresh pipeline is deterministic;
+(6) the mutable shared residency round-trips generation bumps to attached
+cores; (7) ``ship_rows_cap`` shrinks the ring slot and the overflow error
+names the knob; (8) the Eq. 5 load estimate follows CACHE residency.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.gnn import GNNModelConfig
+from repro.core.feature_cache import FeatureCache
+from repro.core.feature_store import FeatureStore
+from repro.core.partition import get_partitioner
+from repro.core.residency import ResidencyCore
+from repro.core.sampler import NeighborSampler, layer_capacities
+from repro.core.sampler_pool import (FeatureShipSpec, PayloadCodec,
+                                     suggest_ship_rows_cap)
+from repro.core.scheduler import LoadBalancer
+from repro.data.graphs import synthetic_graph
+
+G = synthetic_graph(scale=8, edge_factor=5, feat_dim=8, num_classes=4)
+CFG = GNNModelConfig("graphsage", num_layers=2, hidden=8, fanouts=(3, 2),
+                     batch_targets=16)
+
+
+def _store(strategy="distdgl", partitioner="metis_like", p=2):
+    part = get_partitioner(partitioner)(G, p, 0)
+    return FeatureStore(G, part, strategy)
+
+
+def _params_equal(a, b):
+    import jax
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert (np.asarray(x) == np.asarray(y)).all()
+
+
+# ---------------------------------------------------------------------------
+# seeding + admission ranking
+# ---------------------------------------------------------------------------
+
+def test_cache_seeds_static_partition_by_out_degree():
+    fs = _store()
+    deg = G.out_degree()
+    static = [fs.core.resident_ids(d).copy() for d in range(2)]
+    cap = min(len(s) for s in static) // 2
+    FeatureCache(fs.core, deg, cap)
+    for d in range(2):
+        got = fs.core.resident_ids(d)
+        assert len(got) == cap
+        assert fs.core.capacities[d] == cap
+        # exactly the top-cap static rows by degree (stable tie-break)
+        order = np.argsort(-deg[static[d]], kind="stable")
+        want = np.sort(static[d][order[:cap]])
+        assert (got == want).all()
+        # still a subset of the device's own static partition rows
+        assert np.isin(got, static[d]).all()
+
+
+def test_cache_seed_keeps_full_static_set_when_it_fits():
+    fs = _store()
+    static = [fs.core.resident_ids(d).copy() for d in range(2)]
+    cap = max(len(s) for s in static) + 10
+    FeatureCache(fs.core, G.out_degree(), cap)
+    for d in range(2):
+        assert (fs.core.resident_ids(d) == static[d]).all()
+        assert fs.core.capacities[d] == cap  # headroom for admissions
+
+
+def test_observe_counts_every_occurrence_and_select_is_deterministic():
+    fs = _store()
+    cache = FeatureCache(fs.core, G.out_degree(), 4)
+    ids = np.array([5, 5, 9, 9, 9, 2, 7], np.int32)
+    mask = np.array([1, 1, 1, 1, 1, 1, 0], bool)
+    cache.observe(ids, mask)
+    assert cache.freq[5] == 2 and cache.freq[9] == 3
+    assert cache.freq[7] == 0  # masked-out padding never counts
+    top = cache._select(cache.freq)
+    assert 9 in top and 5 in top and 2 in top
+    assert (top == np.sort(top)).all()
+    assert (cache._select(cache.freq) == top).all()  # pure function
+
+
+def test_cache_validates_inputs_and_shared_ordering():
+    fs = _store()
+    deg = G.out_degree()
+    with pytest.raises(ValueError, match="cache_capacity"):
+        FeatureCache(fs.core, deg, 0)
+    with pytest.raises(ValueError, match="cache_refresh_every"):
+        FeatureCache(fs.core, deg, 8, refresh_every=-1)
+    sr = fs.core.to_shared()
+    try:
+        with pytest.raises(ValueError, match="before to_shared"):
+            FeatureCache(fs.core, deg, 8)
+    finally:
+        sr.close()
+
+
+# ---------------------------------------------------------------------------
+# training math is untouched: cache on == cache off, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm", ["distdgl", "pagraph"])
+def test_cache_never_changes_training_math(algorithm):
+    """Cached rows are device COPIES of host rows: admission moves where a
+    gather reads from, never what it reads — params stay bitwise identical
+    to the cache-off trainer even with a capacity well below the static
+    partition (worse hit rate, same values)."""
+    from repro.core.trainer import SyncGNNTrainer
+    t_off = SyncGNNTrainer(G, CFG, num_devices=2, seed=3,
+                           algorithm=algorithm)
+    t_on = SyncGNNTrainer(G, CFG, num_devices=2, seed=3,
+                          algorithm=algorithm, cache_capacity=30,
+                          cache_refresh_every=0)
+    try:
+        assert t_on.cache is not None and t_off.cache is None
+        for _ in range(3):
+            m_off = t_off.run_epoch()
+            m_on = t_on.run_epoch()
+            assert m_off["loss"] == m_on["loss"]
+            assert m_off["acc"] == m_on["acc"]
+        _params_equal(t_off.params, t_on.params)
+        assert not m_off["cache_enabled"] and m_on["cache_enabled"]
+    finally:
+        t_on.close()
+        t_off.close()
+
+
+def test_p3_bypasses_cache_entirely():
+    """P3 keeps every row resident as a feature-dimension slice — nothing
+    to admit or ship, so the knob is a documented no-op there."""
+    from repro.core.trainer import SyncGNNTrainer
+    t_plain = SyncGNNTrainer(G, CFG, num_devices=2, seed=1, algorithm="p3")
+    t_knob = SyncGNNTrainer(G, CFG, num_devices=2, seed=1, algorithm="p3",
+                            cache_capacity=30)
+    try:
+        assert t_knob.cache is None
+        m_p = t_plain.run_epoch()
+        m_k = t_knob.run_epoch()
+        assert m_p["loss"] == m_k["loss"]
+        assert not m_k["cache_enabled"]
+        _params_equal(t_plain.params, t_knob.params)
+    finally:
+        t_knob.close()
+        t_plain.close()
+
+
+def test_midepoch_refresh_bit_identical_across_worker_counts():
+    """The generation handshake property: with refresh_every=K>0 the
+    residency MUTATES mid-epoch, and the workers=2 + gather_in_workers
+    trainer must still produce bitwise-identical params AND metrics (miss
+    bytes, hit rate, admissions) to the workers=0 path — every worker
+    gathers iteration i against generation i//K, no matter when its
+    process gets scheduled. ship_rows_cap rides along at the worst-case
+    bound to exercise the knob end to end."""
+    from repro.core.trainer import SyncGNNTrainer
+    worst = layer_capacities(CFG)[0][0]
+    kw = dict(num_devices=2, seed=3, algorithm="distdgl",
+              cache_capacity=40, cache_refresh_every=2)
+    t_in = SyncGNNTrainer(G, CFG, **kw)
+    t_mp = SyncGNNTrainer(G, CFG, **kw, num_sampler_workers=2,
+                          gather_in_workers=True, ship_rows_cap=worst)
+    try:
+        for _ in range(3):
+            m_in = t_in.run_epoch()
+            m_mp = t_mp.run_epoch()
+            for key in ("loss", "acc", "beta", "cache_hit_rate",
+                        "miss_bytes", "miss_bytes_per_iter",
+                        "cache_admissions", "cache_evictions"):
+                assert m_in[key] == m_mp[key], key
+        assert t_in.cache.refreshes == t_mp.cache.refreshes > 0
+        assert t_in.cache.generation == t_mp.cache.generation > 0
+        _params_equal(t_in.params, t_mp.params)
+    finally:
+        t_mp.close()
+        t_in.close()
+
+
+def test_refresh_pipeline_deterministic_across_identical_trainers():
+    from repro.core.trainer import SyncGNNTrainer
+    kw = dict(num_devices=2, seed=7, algorithm="distdgl",
+              cache_capacity=40, cache_refresh_every=3)
+    t_a = SyncGNNTrainer(G, CFG, **kw)
+    t_b = SyncGNNTrainer(G, CFG, **kw)
+    try:
+        for _ in range(2):
+            m_a = t_a.run_epoch()
+            m_b = t_b.run_epoch()
+            assert m_a["cache_admissions"] == m_b["cache_admissions"]
+        assert (t_a.cache.freq == t_b.cache.freq).all()
+        for d in range(2):
+            assert (t_a.store.core.resident_ids(d)
+                    == t_b.store.core.resident_ids(d)).all()
+        _params_equal(t_a.params, t_b.params)
+    finally:
+        t_b.close()
+        t_a.close()
+
+
+# ---------------------------------------------------------------------------
+# the payoff: admission reduces miss traffic
+# ---------------------------------------------------------------------------
+
+def test_admission_reduces_miss_bytes_across_epochs():
+    """Epoch 1 runs on the degree seed (capacity below the static set, so
+    misses are WORSE than static); after the epoch-boundary refresh the
+    frequency-admitted hot set must cut miss bytes/iter below epoch 1 and
+    report the admissions that did it."""
+    from repro.core.trainer import SyncGNNTrainer
+    fs = _store()
+    cap = min(fs.num_resident(d) for d in range(2))
+    tr = SyncGNNTrainer(G, CFG, num_devices=2, seed=0, algorithm="distdgl",
+                        cache_capacity=cap, cache_refresh_every=0)
+    try:
+        m1 = tr.run_epoch()
+        m2 = tr.run_epoch()
+        m3 = tr.run_epoch()
+    finally:
+        tr.close()
+    assert m2["cache_admissions"] > 0
+    assert m3["miss_bytes_per_iter"] < m1["miss_bytes_per_iter"]
+    assert m3["cache_hit_rate"] > m1["cache_hit_rate"]
+    # refresh stream accounting: admitted rows x width x 4 bytes
+    assert m2["cache_refresh_bytes"] \
+        == m2["cache_admissions"] * G.features.shape[1] * 4
+    # per-epoch metrics reset: stats are NOT cumulative across epochs
+    assert m3["miss_bytes"] < m1["miss_bytes"] + m2["miss_bytes"]
+
+
+def test_epoch_metrics_present_with_and_without_cache():
+    from repro.core.trainer import SyncGNNTrainer
+    tr = SyncGNNTrainer(G, CFG, num_devices=2, seed=0)
+    try:
+        m = tr.run_epoch()
+    finally:
+        tr.close()
+    assert m["cache_enabled"] is False
+    assert m["cache_admissions"] == m["cache_evictions"] == 0
+    assert m["miss_bytes"] > 0  # beta accounting still feeds the metric
+    assert 0.0 <= m["cache_hit_rate"] <= 1.0
+    assert m["miss_bytes_per_iter"] == m["miss_bytes"] / m["iterations"]
+
+
+# ---------------------------------------------------------------------------
+# mutable shared residency: generation handshake primitives
+# ---------------------------------------------------------------------------
+
+def test_shared_residency_generation_roundtrip():
+    fs = _store()
+    cache = FeatureCache(fs.core, G.out_degree(), 50)
+    sr = fs.core.to_shared()
+    try:
+        core2 = ResidencyCore.from_shared(sr.spec)
+        assert core2.generation == 0
+        for d in range(2):
+            assert (core2.resident_ids(d)
+                    == fs.core.resident_ids(d)).all()
+        # owner admits a new set and publishes the next generation;
+        # the attached core sees it after the handshake
+        rng = np.random.default_rng(0)
+        new_ids = np.sort(rng.choice(G.num_vertices, 50,
+                                     replace=False)).astype(np.int32)
+        cache._apply(new_ids, generation=1)
+        core2.wait_generation(1)
+        assert core2.generation == 1
+        for d in range(2):
+            assert (core2.resident_ids(d) == new_ids).all()
+        # waiting on an ALREADY-SUPERSEDED stamp is a protocol violation
+        with pytest.raises(RuntimeError, match="generation"):
+            core2.wait_generation(0)
+        # a future generation that never arrives times out loudly
+        with pytest.raises(TimeoutError):
+            core2.wait_generation(2, timeout=0.05)
+        del core2
+    finally:
+        sr.close()
+
+
+def test_set_resident_respects_capacity():
+    fs = _store()
+    FeatureCache(fs.core, G.out_degree(), 10)
+    with pytest.raises(ValueError, match="capacity"):
+        fs.core.set_resident(0, np.arange(11, dtype=np.int32))
+
+
+# ---------------------------------------------------------------------------
+# ship_rows_cap: measured slot sizing
+# ---------------------------------------------------------------------------
+
+def test_suggest_ship_rows_cap():
+    assert suggest_ship_rows_cap([10, 20, 30], 100.0, 1.0) == 30
+    assert suggest_ship_rows_cap([10, 20, 30], 100.0, 1.1) == 33
+    assert suggest_ship_rows_cap([0, 0]) == 1  # never below one row
+    with pytest.raises(ValueError, match="at least one"):
+        suggest_ship_rows_cap([])
+    with pytest.raises(ValueError, match=">= 0"):
+        suggest_ship_rows_cap([-1, 5])
+
+
+def test_ship_rows_cap_shrinks_slot_and_overflow_names_knob():
+    worst = layer_capacities(CFG)[0][0]
+    full = PayloadCodec(CFG, None, FeatureShipSpec(worst, 8))
+    small = PayloadCodec(CFG, None, FeatureShipSpec(4, 8))
+    assert small.nbytes < full.nbytes
+    # each dropped row slot frees its feature row AND its int32 pos entry
+    assert full.nbytes - small.nbytes == (worst - 4) * (8 * 4 + 4)
+    mb = NeighborSampler(G, CFG, G.train_ids, 0, seed=0).batch_at(0, 0)
+    buf = bytearray(small.nbytes)
+    pos = np.arange(5, dtype=np.int32)
+    rows = np.zeros((5, 8), np.float32)
+    with pytest.raises(ValueError, match="ship_rows_cap"):
+        small.encode(mb, None, (pos, rows), buf, 0)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 5 load estimate follows CACHE residency, not the static partition
+# ---------------------------------------------------------------------------
+
+def test_batch_load_miss_term_follows_cache_residency():
+    fs = _store()
+    mb = NeighborSampler(G, CFG, G.train_ids, 0, seed=0).batch_at(0, 0)
+    ids, mask = mb.nodes[0], mb.node_mask[0]
+    miss_static = fs.core.miss_count(0, ids, mask)
+    cache = FeatureCache(fs.core, G.out_degree(), G.num_vertices)
+    # admit EVERY vertex this batch touches: the miss term must hit zero
+    cache._apply(np.arange(G.num_vertices, dtype=np.int32), generation=1)
+    miss_cached = fs.core.miss_count(0, ids, mask)
+    assert miss_static > 0 and miss_cached == 0
+    f = G.features.shape[1]
+    assert LoadBalancer.batch_load(mb.work_estimate(), miss_cached, f) \
+        < LoadBalancer.batch_load(mb.work_estimate(), miss_static, f)
