@@ -1,9 +1,20 @@
 PYTHONPATH := src
 
-.PHONY: verify test lint bench bench-smoke
+.PHONY: verify test test-faults lint bench bench-smoke
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+# Fault-tolerance suite in isolation (supervised sampler pool, fault
+# injection, mid-epoch resume, checkpoint integrity). Runs under
+# pytest-timeout when the plugin is importable — a wedged worker or
+# deadlocked queue then fails the one test with a stack dump instead of
+# hanging the job — and falls back to a plain run where it is not
+# installed (the container image ships without it; CI installs it).
+test-faults:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q \
+		$$(python -c "import importlib.util as u; print('--timeout=300 --timeout-method=thread' if u.find_spec('pytest_timeout') else '')") \
+		tests/test_fault_tolerance.py
 
 # ruff check = the semantic lint gate (pyflakes/pycodestyle families per
 # pyproject). The per-file `ruff format --check` gate was dropped: the

@@ -31,6 +31,15 @@ Checks (exit code 1 on any failure):
   capacity (no committed baseline needed — the reduction IS the contract);
   and both cached numbers are deterministic per config + seed, so ANY
   increase over the committed baseline fails.
+* Fault tolerance — the ``fault_tolerance`` section must be present (its
+  absence means the per-fault-class recovery measurement silently vanished
+  from the bench); ``payloads_bitwise_equal`` must be True (recovery that
+  changes a single payload byte breaks the determinism contract); every
+  fault class must record ``completed``; and each class's recovery
+  overhead must stay under ``--recovery-ceiling`` seconds (default 10 —
+  an absolute ceiling, not a relative tolerance: the gate catches
+  pathological regressions such as a recovery path that waits out a
+  multi-second timeout per fault, not wall-clock drift on a shared host).
 * Sampling-service scaling — on hosts with >= 4 CPUs the workers=4 vs
   workers=1 sampled-batches/sec speedup must reach ``--pool-speedup``
   (default 1.5x); smaller hosts cannot physically show 4-way process
@@ -59,7 +68,8 @@ def _get(d: dict, path: str):
 
 
 def compare(baseline: dict, fresh: dict, nvtps_tolerance: float,
-            pool_speedup: float, gather_tolerance: float = 1.0) -> list:
+            pool_speedup: float, gather_tolerance: float = 1.0,
+            recovery_ceiling: float = 10.0) -> list:
     """Returns a list of failure strings (empty = gate passes)."""
     failures = []
 
@@ -180,6 +190,42 @@ def compare(baseline: dict, fresh: dict, nvtps_tolerance: float,
                 "feature_cache.losses_bitwise_equal is not True (cache "
                 "admission/refresh changed the training math)")
 
+    # fault tolerance: required-presence contract + bitwise-recovery
+    # contract + an ABSOLUTE per-class recovery-time ceiling. No baseline
+    # comparison: recovery overhead is wall-clock on a contended host, so
+    # only an order-of-magnitude blow-up (a recovery path that sits out a
+    # multi-second timeout per fault) is signal.
+    fresh_ft = _get(fresh, "fault_tolerance")
+    if not isinstance(fresh_ft, dict):
+        failures.append(
+            "fresh report lacks the fault_tolerance section (per-class "
+            "recovery overhead and bitwise-recovery contract cannot be "
+            "checked)")
+    else:
+        if fresh_ft.get("payloads_bitwise_equal") is not True:
+            failures.append(
+                "fault_tolerance.payloads_bitwise_equal is not True "
+                "(recovery changed a payload — determinism contract "
+                "broken)")
+        completed = fresh_ft.get("completed") or {}
+        overhead = fresh_ft.get("recovery_overhead_s") or {}
+        for cls in ("kill", "straggler", "encode_overflow",
+                    "corrupt_slot"):
+            if completed.get(cls) is not True:
+                failures.append(
+                    f"fault_tolerance: class '{cls}' did not complete")
+            ov = overhead.get(cls)
+            if ov is None:
+                failures.append(
+                    f"fault_tolerance: class '{cls}' records no "
+                    f"recovery_overhead_s")
+            elif ov > recovery_ceiling:
+                failures.append(
+                    f"fault_tolerance: '{cls}' recovery overhead "
+                    f"{ov:.2f}s exceeds the {recovery_ceiling:.0f}s "
+                    f"ceiling (recovery path likely waiting out a "
+                    f"timeout per fault)")
+
     cpus = _get(fresh, "sampler_pool.host_cpu_count") or 0
     s41 = _get(fresh, "sampler_pool.speedup_4v1")
     sbest = _get(fresh, "sampler_pool.speedup_best")
@@ -205,6 +251,7 @@ def main() -> int:
     ap.add_argument("--nvtps-tolerance", type=float, default=0.25)
     ap.add_argument("--pool-speedup", type=float, default=1.5)
     ap.add_argument("--gather-tolerance", type=float, default=1.0)
+    ap.add_argument("--recovery-ceiling", type=float, default=10.0)
     args = ap.parse_args()
 
     with open(args.fresh) as fh:
@@ -222,7 +269,8 @@ def main() -> int:
         return 0
 
     failures = compare(baseline, fresh, args.nvtps_tolerance,
-                       args.pool_speedup, args.gather_tolerance)
+                       args.pool_speedup, args.gather_tolerance,
+                       args.recovery_ceiling)
     if failures:
         for f in failures:
             print(f"check_regression: FAIL: {f}")
@@ -237,6 +285,8 @@ def main() -> int:
           f"vs static {_get(fresh, 'feature_cache.miss_bytes_per_iter.static_partition') or 0:.0f}, "
           f"densified-HBM {hbm.get('pallas', 0)}/"
           f"{hbm.get('pallas_edges', 0)} B/batch, "
+          f"max recovery overhead "
+          f"{max((_get(fresh, 'fault_tolerance.recovery_overhead_s') or {'-': 0.0}).values()):.2f}s, "
           f"pool speedup_4v1 {_get(fresh, 'sampler_pool.speedup_4v1'):.2f})")
     return 0
 

@@ -7,16 +7,31 @@ tested save-on-mesh-A / restore-on-mesh-B (elastic scaling). Writes happen on
 a background thread (training is never blocked on disk); ``wait()`` drains.
 Retention keeps the newest k checkpoints; a ``latest`` symlink supports
 crash-restart (fault tolerance: restart resumes step + data-pipeline state).
+
+Integrity: every array gets a CRC32 in the manifest and the manifest itself
+a checksum over its canonical JSON, so a checkpoint torn by the very crash
+it exists to survive (truncated npz, half-written meta) is DETECTED —
+``latest_step``/``restore`` skip it and fall back to the newest earlier
+checkpoint that verifies, instead of resuming from garbage.
 """
 from __future__ import annotations
 
 import json
 import os
 import threading
+import zlib
 from typing import Optional
 
 import jax
 import numpy as np
+
+
+def _manifest_crc(meta: dict) -> int:
+    """Checksum of the manifest's integrity-relevant fields over their
+    canonical (sorted-keys) JSON — a half-written or edited meta file fails
+    to reproduce it."""
+    body = {k: meta[k] for k in ("step", "extra", "array_crc")}
+    return zlib.crc32(json.dumps(body, sort_keys=True).encode()) & 0xFFFFFFFF
 
 
 def _flatten_with_paths(tree):
@@ -63,6 +78,11 @@ class Checkpointer:
         path = os.path.join(self.dir, f"ckpt_{step:08d}")
 
         def write():
+            # per-array CRC32 + a checksum of the manifest's canonical JSON:
+            # computed on THIS thread (training is never blocked on it)
+            meta["array_crc"] = {k: zlib.crc32(v.tobytes()) & 0xFFFFFFFF
+                                 for k, v in host.items()}
+            meta["manifest_crc"] = _manifest_crc(meta)
             np.savez(path + ".tmp.npz", **host)
             os.replace(path + ".tmp.npz", path + ".npz")
             with open(path + ".json", "w") as f:
@@ -103,20 +123,85 @@ class Checkpointer:
                 except OSError:
                     pass
 
+    # -- integrity -------------------------------------------------------------
+    def _candidate_steps(self) -> list:
+        """Every step with a manifest on disk, newest first."""
+        steps = []
+        for f in os.listdir(self.dir):
+            if f.startswith("ckpt_") and f.endswith(".json"):
+                try:
+                    steps.append(int(f[len("ckpt_"):-len(".json")]))
+                except ValueError:
+                    pass
+        return sorted(steps, reverse=True)
+
+    def _validate(self, step: int) -> bool:
+        """True iff step's checkpoint verifies end to end: manifest JSON
+        parses and matches its own checksum, the npz opens, and every
+        array's CRC32 matches the manifest. Any torn write — truncated npz,
+        half-written meta, a byte flip — returns False."""
+        path = os.path.join(self.dir, f"ckpt_{step:08d}")
+        try:
+            with open(path + ".json") as f:
+                meta = json.load(f)
+            crcs = meta.get("array_crc")
+            if crcs is not None:
+                if meta.get("manifest_crc") != _manifest_crc(meta):
+                    return False
+            with np.load(path + ".npz") as data:
+                if crcs is None:  # pre-CRC checkpoint: readable = valid
+                    for k in data.files:
+                        data[k]
+                    return True
+                if set(crcs) != set(data.files):
+                    return False
+                for k, want in crcs.items():
+                    if zlib.crc32(data[k].tobytes()) & 0xFFFFFFFF != want:
+                        return False
+            return True
+        except Exception:
+            return False
+
     # -- restore ---------------------------------------------------------------
     def latest_step(self) -> Optional[int]:
+        """Newest step whose checkpoint VERIFIES — the latest.json pointer
+        when its target is intact, else the newest earlier valid step, else
+        None. Drains in-flight writes first so a just-saved checkpoint is
+        never misjudged mid-write."""
+        self.wait()
         latest = os.path.join(self.dir, "latest.json")
-        if not os.path.exists(latest):
-            return None
-        with open(latest) as f:
-            return int(json.load(f)["step"])
+        if os.path.exists(latest):
+            try:
+                with open(latest) as f:
+                    step = int(json.load(f)["step"])
+                if self._validate(step):
+                    return step
+            except Exception:
+                pass
+        for step in self._candidate_steps():
+            if self._validate(step):
+                return step
+        return None
 
     def restore(self, step: int, like_params, like_opt=None,
                 shardings=None) -> dict:
         """Restore into the structure of ``like_params`` (abstract or real).
         ``shardings``: optional matching tree of NamedShardings for elastic
-        re-sharding onto the current mesh."""
+        re-sharding onto the current mesh. A corrupted/truncated ``step``
+        falls back to the newest EARLIER valid checkpoint (the crash that
+        tore the newest file is exactly when restore must still work);
+        raises FileNotFoundError when none verifies."""
         self.wait()
+        if not self._validate(step):
+            fallback = next((s for s in self._candidate_steps()
+                             if s < step and self._validate(s)), None)
+            if fallback is None:
+                raise FileNotFoundError(
+                    f"checkpoint step {step} in {self.dir} is corrupted or "
+                    f"incomplete and no earlier valid checkpoint exists")
+            print(f"checkpointing: step {step} failed integrity checks; "
+                  f"falling back to step {fallback}")
+            step = fallback
         path = os.path.join(self.dir, f"ckpt_{step:08d}")
         data = np.load(path + ".npz")
         with open(path + ".json") as f:

@@ -87,6 +87,27 @@ class GNNModelConfig:
     # shm footprint per ring slot several-fold; a batch shipping more rows
     # raises a clear error naming this knob.
     ship_rows_cap: Optional[int] = None
+    # Supervised sampling service (fault tolerance; core/sampler_pool.py).
+    # A sampler worker that dies is respawned against the existing shared
+    # segments and its in-flight tasks are resubmitted (counter-based RNG
+    # makes the re-executed payloads bit-identical, so recovery is
+    # invisible to training). After max_respawns lifetime deaths the pool
+    # DEGRADES to in-process sampling — training finishes slower instead
+    # of dying.
+    max_respawns: int = 2
+    # Straggler watch: when the head-of-line task has been in flight
+    # longer than this many seconds, speculatively re-execute it on a
+    # healthy worker (first result wins; the reorder buffer drops the
+    # loser). None = no straggler watch.
+    straggler_timeout_s: Optional[float] = None
+    # Master switch for speculative re-execution (straggler_timeout_s is
+    # inert when this is False).
+    speculative_sampling: bool = True
+    # Fault-injection spec (core/faults.py grammar, e.g. "kill@0.0.3" or
+    # "encode_overflow#8"); None falls back to the HITGNN_FAULT_SPEC
+    # environment variable. Test/bench harness only — never set in real
+    # training.
+    fault_spec: Optional[str] = None
 
 
 @dataclass(frozen=True)

@@ -153,19 +153,29 @@ class ReorderBuffer:
     The multi-process sampling service completes batches in whatever order
     its workers finish them; training consumes them in schedule order so a
     pipelined multi-worker epoch stays BIT-IDENTICAL to the single-process
-    path. ``put(seq, item)`` accepts any completion; ``pop()`` returns the
-    next in-order item or None if it has not arrived yet. Duplicate or
-    already-consumed sequence numbers are rejected loudly — they would mean
-    a worker double-executed a task."""
+    path. ``put(seq, item)`` accepts any completion and returns True;
+    duplicate or already-consumed sequence numbers are DROPPED (False) —
+    under speculative resubmission the same task legitimately completes
+    twice (straggler + its speculative copy) and the first result wins;
+    the payloads are bit-identical by the counter-based RNG argument, so
+    dropping the loser changes nothing. ``pop()`` returns the next
+    in-order item or None if it has not arrived yet."""
 
     def __init__(self, first_seq: int = 0):
         self._next = first_seq
         self._pending: dict[int, Any] = {}
 
-    def put(self, seq: int, item: Any) -> None:
+    @property
+    def next_seq(self) -> int:
+        """Sequence number ``pop()`` is waiting on — the supervisor's
+        head-of-line task for straggler detection."""
+        return self._next
+
+    def put(self, seq: int, item: Any) -> bool:
         if seq < self._next or seq in self._pending:
-            raise ValueError(f"duplicate completion for seq {seq}")
+            return False
         self._pending[seq] = item
+        return True
 
     def ready(self) -> bool:
         return self._next in self._pending

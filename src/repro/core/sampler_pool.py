@@ -48,11 +48,29 @@ over the parent's allowed cores via ``os.sched_setaffinity`` (Linux; a
 silent no-op elsewhere), so N gather streams do not migrate across NUMA
 domains mid-epoch.
 
-Failure behavior mirrors ``PrefetchExecutor``: a worker exception re-raises
-in the consumer at the point of ``fetch()`` with the worker's formatted
-traceback attached (``add_note`` on py311+, ``sampler_worker_traceback``
-otherwise). The pool is a context manager; shared segments — graph, ring,
-and residency — are closed AND unlinked on every exit path, including error
+Failure model (the supervisor): tasks are pure functions of their RNG
+coordinates, so the pool treats every worker as DISPOSABLE. The consumer
+side keeps an in-flight table keyed by sequence number; a worker that dies
+(crash, OOM kill, segfault) is detected within one poll interval, its ring
+slots are reclaimed through a lease array (each worker stamps the slot it
+holds, so the supervisor knows exactly which slots died with it), a
+replacement process is spawned against the SAME shared segments (graph,
+residency, ring — nothing is re-copied), and every in-flight task is
+resubmitted: the counter-based RNG makes the re-executed payloads
+bit-identical, so recovery is invisible to training. Stragglers get
+speculative duplicates (``straggler_timeout_s``) whose losers the in-flight
+table drops; per-slot CRC32 turns silent payload corruption into a detected
+decode failure that retries instead of training on garbage; worker-reported
+errors retry a bounded number of times (transient faults heal, deterministic
+bugs still surface at ``fetch()`` with the worker's formatted traceback
+attached — ``add_note`` on py311+, ``sampler_worker_traceback`` otherwise).
+After ``max_respawns`` process deaths the pool DEGRADES to in-process
+execution of the remaining tasks (the ``workers=0`` twin): training finishes
+slower instead of dying. ``core/faults.py`` injects each of these fault
+classes on demand.
+
+The pool is a context manager; shared segments — graph, ring, and
+residency — are closed AND unlinked on every exit path, including error
 paths and KeyboardInterrupt.
 """
 from __future__ import annotations
@@ -60,7 +78,11 @@ from __future__ import annotations
 import multiprocessing as mp
 import os
 import pickle
+import shutil
+import tempfile
+import time
 import traceback
+import zlib
 from dataclasses import dataclass
 from multiprocessing import shared_memory
 from typing import Any, Iterable, Iterator, List, Optional, Sequence, Tuple, Union
@@ -68,6 +90,7 @@ from typing import Any, Iterable, Iterator, List, Optional, Sequence, Tuple, Uni
 import numpy as np
 
 from repro.configs.gnn import GNNModelConfig
+from repro.core.faults import FaultInjector, FaultSpec, resolve_fault_spec
 from repro.core.pipeline import ReorderBuffer
 from repro.core.residency import ResidencyCore, SharedResidency
 from repro.core.sampler import MiniBatch, NeighborSampler, layer_capacities
@@ -79,6 +102,33 @@ from repro.kernels.layout import BLK, build_layer_layouts
 # gathered against (0 = the immutable static residency)
 Task = Union[Tuple[int, int, int], Tuple[int, int, int, int],
              Tuple[int, int, int, int, int]]
+
+# bytes reserved at the head of every ring slot for [crc32, used_bytes]
+# (two uint32 — already 8-byte aligned, so the payload entries follow
+# without extra padding)
+CRC_HEADER = 8
+
+
+class RingCorruptionError(RuntimeError):
+    """A ring slot failed its integrity check on decode (CRC mismatch or an
+    impossible geometry header). The supervisor treats it like a transient
+    worker fault: recycle the slot and re-execute the task — never hand
+    silently-corrupted arrays (= silently wrong gradients) to training."""
+
+
+class GenerationStallError(RuntimeError):
+    """A worker timed out waiting for a task's stamped cache generation.
+
+    Not the task's fault: after a recovery resubmission, tasks stamped with
+    the NEXT generation can sit AHEAD of the resubmitted task in the FIFO
+    task queue — but the trainer publishes that generation only after the
+    resubmitted task's iteration assembles. A single worker would deadlock;
+    instead it bounds the wait, reports this error, and the supervisor
+    requeues the stalled task WITHOUT charging a retry attempt (the requeue
+    lands behind the pending older-generation work, so the queue drains
+    front-first and the publish eventually happens). The fetch deadline
+    still bounds total progress, so a generation that never publishes — a
+    real bug — surfaces as a TimeoutError rather than an infinite loop."""
 
 
 @dataclass(frozen=True)
@@ -140,7 +190,10 @@ class PayloadCodec:
                  feat_spec: Optional[FeatureShipSpec] = None):
         n_caps, e_caps = layer_capacities(cfg)
         L = cfg.num_layers
-        spec: List[Tuple[str, int, tuple, np.dtype]] = []
+        # slot integrity header FIRST: crc32 over every used byte after it
+        # + the used-byte count, stamped by encode, verified by decode
+        spec: List[Tuple[str, int, tuple, np.dtype]] = [
+            ("slot_crc", -1, (2,), np.dtype(np.uint32))]
         for l, n in enumerate(n_caps):
             spec.append(("nodes", l, (n,), np.dtype(np.int32)))
             spec.append(("node_mask", l, (n,), np.dtype(bool)))
@@ -217,7 +270,18 @@ class PayloadCodec:
 
     def encode(self, mb: MiniBatch, layout: Optional[dict],
                feats: Optional[Tuple[np.ndarray, np.ndarray]],
-               buf, base: int) -> None:
+               buf, base: int, inject: Optional[str] = None) -> None:
+        """Pack one payload into the slot at ``base`` and stamp its CRC.
+        ``inject`` hooks the fault harness (core/faults.py):
+        ``"encode_overflow"`` raises the capacity error regardless of the
+        real row count; ``"corrupt_slot"`` flips payload bytes AFTER the
+        CRC stamp, so the consumer's decode must catch it."""
+        m = 0
+        if inject == "encode_overflow":
+            cap = self.feat.rows_cap if self.feat is not None else 0
+            raise ValueError(
+                f"feature ring capacity overflow (injected fault): batch "
+                f"ships more rows than rows_cap={cap}")
         if self.feat is not None:
             pos, rows = feats if feats is not None else (
                 np.empty(0, np.int32), np.empty((0, self.feat.width),
@@ -232,6 +296,8 @@ class PayloadCodec:
                     f"distributions with "
                     f"core.sampler_pool.suggest_ship_rows_cap")
         for key, l, shape, dtype, off in self.entries:
+            if key == "slot_crc":
+                continue
             if key == "feat_count":
                 arr = np.array([m], np.int32)
             elif key == "feat_pos":
@@ -249,21 +315,48 @@ class PayloadCodec:
         if self.feat is not None and m:
             np.ndarray((m, self.feat.width), np.float32, buffer=buf,
                        offset=base + self.feat_rows_off)[...] = rows
+        used = self.used_nbytes(m)
+        view = np.ndarray((used,), np.uint8, buffer=buf, offset=base)
+        hdr = np.ndarray((2,), np.uint32, buffer=buf, offset=base)
+        hdr[0] = zlib.crc32(view[CRC_HEADER:])
+        hdr[1] = used & 0xFFFFFFFF
+        if inject == "corrupt_slot":
+            # flip a byte run PAST the header: the CRC no longer matches
+            # the payload, exactly what a torn write / bad DMA looks like
+            view[CRC_HEADER:CRC_HEADER + 16] ^= 0xFF
 
     def decode(self, buf, base: int, partition_id: int, seq_no: int
                ) -> Tuple[MiniBatch, Optional[dict], Optional[dict], int]:
         """One memcpy of the USED slot bytes -> (minibatch, layout, feats,
         used_bytes). ``feats`` is ``{"pos", "rows"}`` views over the private
-        copy (or None when the codec ships no features)."""
+        copy (or None when the codec ships no features). The slot's CRC is
+        verified over that private copy (so a concurrent slot reuse cannot
+        race the check); any mismatch — or a geometry header no valid
+        encode could have produced — raises :class:`RingCorruptionError`
+        and the supervisor re-executes the task."""
         m = 0
         if self.feat is not None:
             count_off = next(off for key, _, _, _, off in self.entries
                              if key == "feat_count")
             m = int(np.ndarray((1,), np.int32, buffer=buf,
                                offset=base + count_off)[0])
+            if not 0 <= m <= self.feat.rows_cap:
+                raise RingCorruptionError(
+                    f"ring slot geometry corrupted: feat_count {m} outside "
+                    f"[0, rows_cap={self.feat.rows_cap}]")
         used = self.used_nbytes(m)
         private = np.empty(used, np.uint8)
         private[:] = np.ndarray((used,), np.uint8, buffer=buf, offset=base)
+        hdr = private[:CRC_HEADER].view(np.uint32)
+        if int(hdr[1]) != used & 0xFFFFFFFF:
+            raise RingCorruptionError(
+                f"ring slot geometry corrupted: header says "
+                f"{int(hdr[1])} used bytes, decode derives {used}")
+        crc = zlib.crc32(private[CRC_HEADER:])
+        if int(hdr[0]) != crc:
+            raise RingCorruptionError(
+                f"ring slot CRC mismatch: stored {int(hdr[0]):#010x}, "
+                f"computed {crc:#010x} over {used} bytes")
         fields: dict = {k: [None] * self.num_layers
                         for k in ("nodes", "node_mask", "edge_src",
                                   "edge_dst", "edge_mask", "self_idx")}
@@ -283,7 +376,7 @@ class PayloadCodec:
         scalars = {}
         feats: Optional[dict] = None
         for key, l, shape, dtype, off in self.entries:
-            if key == "feat_count":
+            if key in ("slot_crc", "feat_count"):
                 continue
             if key == "feat_pos":
                 pos = private[off:off + m * 4].view(np.int32)
@@ -341,17 +434,32 @@ def _worker_main(worker_id: int, spec: SharedGraphSpec, cfg: GNNModelConfig,
                  res_spec: Optional[object],
                  feat_spec: Optional[FeatureShipSpec],
                  affinity_cores: Optional[Sequence[int]],
-                 ring_name: str, task_q: Any, free_q: Any,
-                 result_q: Any) -> None:
+                 ring_name: str, num_slots: int,
+                 fault_spec: Optional[FaultSpec],
+                 fault_latch_dir: Optional[str],
+                 task_q: Any, free_q: Any, result_q: Any) -> None:
     """Worker loop: attach the shared graph + residency + result ring, serve
     tasks until the ``None`` sentinel. Imports only numpy-side modules
-    (sampler + layout builders + residency core) — never jax."""
+    (sampler + layout builders + residency core) — never jax.
+
+    Respawn-compatible by construction: everything the loop touches lives
+    in the named shared segments, so a replacement worker started with the
+    SAME arguments attaches the same state and serves the same task queue —
+    the supervisor's recovery path. The lease array (tail of the ring
+    segment) records which worker holds each slot between ``free_q.get``
+    and the consumer's recycle, so the supervisor can reclaim the slots a
+    dead worker took with it."""
     _pin_worker(worker_id, affinity_cores)
     graph = Graph.from_shared(spec)
     residency = (ResidencyCore.from_shared(res_spec)
                  if res_spec is not None else None)
     codec = PayloadCodec(cfg, blk_caps, feat_spec)
     ring = shared_memory.SharedMemory(name=ring_name)
+    lease = np.ndarray((num_slots,), np.int32, buffer=ring.buf,
+                       offset=num_slots * codec.nbytes)
+    injector = (FaultInjector(fault_spec, fault_latch_dir)
+                if fault_spec is not None and fault_latch_dir is not None
+                else None)
     samplers = [NeighborSampler(graph, cfg, ids, p, seed)
                 for p, ids in enumerate(train_ids)]
     try:
@@ -361,6 +469,20 @@ def _worker_main(worker_id: int, spec: SharedGraphSpec, cfg: GNNModelConfig,
                 return
             seq, part, epoch, index, device, gen = task
             try:
+                inject = None
+                if injector is not None:
+                    tid = (part, epoch, index)
+                    if injector.fire("kill", tid) is not None:
+                        # simulate SIGKILL/OOM: no cleanup, no report — the
+                        # supervisor must detect, respawn and resubmit
+                        os._exit(137)
+                    hang = injector.fire("hang", tid)
+                    if hang is not None:
+                        time.sleep(hang.hang_s)
+                    if injector.fire("encode_overflow", tid) is not None:
+                        inject = "encode_overflow"
+                    elif injector.fire("corrupt_slot", tid) is not None:
+                        inject = "corrupt_slot"
                 mb = samplers[part].batch_at(epoch, index)
                 layout = None
                 if blk_caps is not None:
@@ -377,22 +499,30 @@ def _worker_main(worker_id: int, spec: SharedGraphSpec, cfg: GNNModelConfig,
                     # task still needs, so a stale view here just means
                     # the refresh has not landed yet — spin until it does
                     if gen != residency.generation:
-                        residency.wait_generation(gen)
+                        try:
+                            residency.wait_generation(gen, timeout=2.0)
+                        except TimeoutError as e:
+                            raise GenerationStallError(str(e)) from None
                     # stage 2 in the worker: gather only what must cross
                     # the bus to `device` (all valid rows for P3 all-to-all)
                     feats = residency.select_ship_rows(
                         device, graph.features, mb.nodes[0], mb.node_mask[0],
                         p3_full=feat_spec.p3_full)
                 # acquire a ring slot only once the batch is ready: a worker
-                # never sits on a slot while it computes
+                # never sits on a slot while it computes. The lease stamp
+                # (this worker's id) is what lets the supervisor reclaim
+                # the slot if this process dies before the consumer
+                # recycles it.
                 slot = free_q.get()
+                lease[slot] = worker_id
                 try:
                     codec.encode(mb, layout, feats, ring.buf,
-                                 slot * codec.nbytes)
+                                 slot * codec.nbytes, inject=inject)
                 except BaseException:
                     # the consumer will never see this slot — recycle it
                     # here or every encode failure (e.g. feature-capacity
                     # overflow) leaks one slot until the pool wedges
+                    lease[slot] = -1
                     free_q.put(slot)
                     raise
                 result_q.put((seq, "ok",
@@ -402,11 +532,24 @@ def _worker_main(worker_id: int, spec: SharedGraphSpec, cfg: GNNModelConfig,
                 result_q.put((seq, "error",
                               (_picklable_exc(e), traceback.format_exc())))
     finally:
+        lease = None  # release the exported view before the mmap closes
         ring.close()
 
 
+class _TaskRecord:
+    """Supervisor bookkeeping for one submitted-but-undelivered task."""
+
+    __slots__ = ("task", "attempts", "submitted_at")
+
+    def __init__(self, task: Tuple[int, int, int, int, int]):
+        self.task = task
+        self.attempts = 1
+        self.submitted_at = time.monotonic()
+
+
 class SamplerPool:
-    """N data-preparation worker processes over one shared-memory store.
+    """N *supervised* data-preparation worker processes over one
+    shared-memory store.
 
     ``submit(partition, epoch, index, device)`` enqueues a batch task and
     returns its sequence number; ``fetch()`` returns payloads in exact
@@ -417,6 +560,18 @@ class SamplerPool:
     None when no residency core was given), ``ring_bytes`` (bytes this
     payload moved through the ring) and ``load`` (the raw Eq. 5 work
     estimate).
+
+    The supervisor runs inside ``fetch``'s poll loop (no extra thread): it
+    keeps every submitted task in an in-flight table until its payload is
+    delivered, detects dead workers within one poll interval, reclaims their
+    leased ring slots, respawns them against the existing shared segments
+    (exponential backoff, at most ``max_respawns`` lifetime respawns before
+    the pool degrades to in-process execution), resubmits in-flight tasks
+    after a death, speculatively re-executes the head-of-line task when it
+    exceeds ``straggler_timeout_s``, and retries worker-reported errors and
+    CRC-failed slots up to ``max_task_retries`` executions. ``stats``
+    counts every recovery action; ``degraded`` reports whether the pool has
+    fallen back to in-process sampling.
 
     Use as a context manager — or call :meth:`close` — to tear down worker
     processes and release/unlink the shared-memory segments. ``close`` is
@@ -434,13 +589,21 @@ class SamplerPool:
                  worker_affinity: bool = False,
                  num_slots: Optional[int] = None,
                  start_method: str = "spawn",
-                 shared: Optional["object"] = None):
+                 shared: Optional["object"] = None,
+                 max_respawns: int = 2,
+                 straggler_timeout_s: Optional[float] = None,
+                 speculative: bool = True,
+                 max_task_retries: int = 3,
+                 fault_spec: Optional[Union[str, FaultSpec]] = None):
         if num_workers < 1:
             raise ValueError("num_workers must be >= 1")
         self.num_workers = num_workers
         self._closed = False
         self._ring: Optional[shared_memory.SharedMemory] = None
         self._shared_res: Optional[SharedResidency] = None
+        self._lease: Optional[np.ndarray] = None
+        self._latch_dir: Optional[str] = None
+        self._procs: List[Any] = []
         # `shared` lets several pools over the SAME graph reuse one set of
         # segments (O(graph) shm total, not O(pools)); the caller then owns
         # its lifetime and this pool never unlinks it.
@@ -455,7 +618,23 @@ class SamplerPool:
         self._codec = PayloadCodec(cfg, blk_caps, self.feat_spec)
         self.num_slots = (num_slots if num_slots is not None
                           else 2 * num_workers + 2)
-        ctx = mp.get_context(start_method)
+        # construction state kept for respawns and the degraded fallback —
+        # respawned workers get byte-identical arguments, so they attach
+        # the same segments and serve the same queues
+        self._graph = graph
+        self._cfg = cfg
+        self._ids = [np.asarray(t, np.int32) for t in train_ids_per_partition]
+        self._seed = seed
+        self._agg_kind = agg_kind
+        self._blk_caps = blk_caps
+        self._residency = residency
+        self._fault_spec = resolve_fault_spec(fault_spec)
+        self.max_respawns = max_respawns
+        self.straggler_timeout_s = straggler_timeout_s
+        self.speculative = speculative
+        self.max_task_retries = max_task_retries
+        self._ctx = mp.get_context(start_method)
+        ctx = self._ctx
         # SimpleQueues, deliberately: mp.Queue hands every put to a feeder
         # THREAD that must win the producer's GIL to pickle — on a busy
         # host that adds ~ms latency per message and throttles the whole
@@ -467,33 +646,59 @@ class SamplerPool:
         self._rob = ReorderBuffer()
         self._seq = 0
         self._outstanding = 0
-        ids = [np.asarray(t, np.int32) for t in train_ids_per_partition]
-        affinity_cores: Optional[List[int]] = None
+        self._inflight: dict[int, _TaskRecord] = {}
+        self._degraded = False
+        self._respawn_count = 0
+        self._local_samplers: Optional[List[NeighborSampler]] = None
+        self._last_supervise = 0.0
+        self.stats = {"respawns": 0, "resubmissions": 0, "speculative": 0,
+                      "duplicates_dropped": 0, "retried_errors": 0,
+                      "crc_failures": 0, "degraded_tasks": 0,
+                      "gen_stalls": 0, "recovery_s": 0.0}
+        self._affinity_cores: Optional[List[int]] = None
         if worker_affinity and hasattr(os, "sched_getaffinity"):
-            affinity_cores = sorted(os.sched_getaffinity(0))
+            self._affinity_cores = sorted(os.sched_getaffinity(0))
         try:
             if residency is not None:
                 self._shared_res = residency.to_shared()
+            if self._fault_spec is not None:
+                # latch files must outlive individual workers (one-shot
+                # across respawns) — the POOL owns the directory
+                self._latch_dir = tempfile.mkdtemp(prefix="hitgnn-faults-")
+            # slot payloads first, then the int32 lease array (slot ->
+            # worker id holding it, -1 = unleased) the supervisor reads to
+            # reclaim a dead worker's slots
             self._ring = shared_memory.SharedMemory(
-                create=True, size=max(1, self.num_slots * self._codec.nbytes))
+                create=True,
+                size=max(1, self.num_slots * self._codec.nbytes
+                         + 4 * self.num_slots))
+            self._lease = np.ndarray((self.num_slots,), np.int32,
+                                     buffer=self._ring.buf,
+                                     offset=self.num_slots
+                                     * self._codec.nbytes)
+            self._lease[:] = -1
             for s in range(self.num_slots):
                 self._free_q.put(s)
-            res_spec = (self._shared_res.spec
-                        if self._shared_res is not None else None)
             self._procs = [
                 ctx.Process(target=_worker_main, name=f"hitgnn-sampler-{w}",
-                            args=(w, self._shared.spec, cfg, ids, seed,
-                                  agg_kind, blk_caps, res_spec,
-                                  self.feat_spec, affinity_cores,
-                                  self._ring.name, self._task_q,
-                                  self._free_q, self._result_q),
-                            daemon=True)
+                            args=self._worker_args(w), daemon=True)
                 for w in range(num_workers)]
             for p in self._procs:
                 p.start()
         except BaseException:
             self.close()
             raise
+
+    def _worker_args(self, worker_id: int) -> tuple:
+        """Identical argument tuple for a worker's first start and every
+        respawn — the recovery path's whole contract."""
+        res_spec = (self._shared_res.spec
+                    if self._shared_res is not None else None)
+        return (worker_id, self._shared.spec, self._cfg, self._ids,
+                self._seed, self._agg_kind, self._blk_caps, res_spec,
+                self.feat_spec, self._affinity_cores, self._ring.name,
+                self.num_slots, self._fault_spec, self._latch_dir,
+                self._task_q, self._free_q, self._result_q)
 
     # -- task flow -----------------------------------------------------------
     @property
@@ -514,21 +719,37 @@ class SamplerPool:
         seq = self._seq
         self._seq += 1
         dev = partition if device is None else device
-        self._task_q.put((seq, partition, epoch, index, dev, generation))
+        task = (partition, epoch, index, dev, generation)
+        self._inflight[seq] = _TaskRecord(task)
+        if not self._degraded:
+            self._task_q.put((seq,) + task)
         self._outstanding += 1
         return seq
+
+    @property
+    def degraded(self) -> bool:
+        """True once the pool has exhausted ``max_respawns`` and fallen
+        back to executing tasks in-process."""
+        return self._degraded
 
     def fetch(self, timeout: float = 60.0) -> dict:
         """Next payload in submission order; blocks until it arrives.
 
-        Worker exceptions re-raise HERE with the worker traceback attached;
-        a worker that died without reporting (segfault, kill) raises
-        RuntimeError naming its exit code."""
+        One ABSOLUTE monotonic deadline (``now + timeout``) governs the
+        whole call — every poll, result drain and supervision pass spends
+        from the same budget, so a slow worker cannot stretch the wait past
+        ``timeout`` by trickling results. Worker exceptions that exhaust
+        their retry budget re-raise HERE with the worker traceback
+        attached; deaths, stragglers and corrupted slots are recovered
+        silently by the supervisor."""
         if self._outstanding <= 0:
             raise RuntimeError("fetch() with no outstanding tasks")
-        deadline = timeout
+        deadline = time.monotonic() + timeout
         while True:
             item = self._rob.pop()
+            if item is None and self._degraded:
+                self._run_degraded_head()
+                item = self._rob.pop()
             if item is not None:
                 self._outstanding -= 1
                 kind, payload = item
@@ -541,31 +762,225 @@ class SamplerPool:
                         exc.sampler_worker_traceback = worker_tb
                     raise exc
                 return payload
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError(
+                    f"no sampler result within {timeout:.0f}s "
+                    f"({self._outstanding} outstanding)")
             # SimpleQueue has no get(timeout); poll the read end so worker
             # death is still detected while blocked
-            if not self._result_q._reader.poll(0.2):
-                deadline -= 0.2
-                self._check_workers()
-                if deadline <= 0:
-                    raise TimeoutError(
-                        f"no sampler result within {timeout:.0f}s "
-                        f"({self._outstanding} outstanding)")
-                continue
-            seq, kind, payload = self._result_q.get()
+            if self._result_q._reader.poll(min(0.2, remaining)):
+                self._handle_result(self._result_q.get())
+            if time.monotonic() - self._last_supervise >= 0.2:
+                self._supervise()
+
+    # -- supervisor ----------------------------------------------------------
+    def _handle_result(self, msg: tuple) -> None:
+        """Route one worker message: deliver, retry, or drop a duplicate."""
+        seq, kind, payload = msg
+        rec = self._inflight.get(seq)
+        if rec is None:
+            # already delivered by a speculative twin — first result won;
+            # the payloads are bit-identical (counter-based RNG), so just
+            # recycle the loser's slot
             if kind == "ok":
-                # decode ON ARRIVAL (one memcpy out of the ring) and recycle
-                # the slot immediately, so workers never starve for slots
-                # while the consumer waits on an earlier sequence number
-                slot, part, index, device, load = payload
-                mb, layout, feats, used = self._codec.decode(
-                    self._ring.buf, slot * self._codec.nbytes, part, index)
-                self._free_q.put(slot)
-                if feats is not None:
-                    feats["device"] = device
-                payload = {"minibatch": mb, "layout": layout,
-                           "features": feats, "ring_bytes": used,
-                           "load": load}
-            self._rob.put(seq, (kind, payload))
+                self._recycle_slot(payload[0])
+            self.stats["duplicates_dropped"] += 1
+            return
+        if kind == "error":
+            if isinstance(payload[0], GenerationStallError):
+                # queue-order hazard, not a task failure (see the class
+                # docstring): requeue without charging a retry attempt —
+                # the fetch deadline bounds a never-publishing generation
+                rec.submitted_at = time.monotonic()
+                self.stats["gen_stalls"] += 1
+                self.stats["resubmissions"] += 1
+                if not self._degraded:
+                    self._task_q.put((seq,) + rec.task)
+                return
+            self._retry_or_surface(seq, rec, payload, "retried_errors")
+            return
+        slot, part, index, device, load = payload
+        try:
+            mb, layout, feats, used = self._codec.decode(
+                self._ring.buf, slot * self._codec.nbytes, part, index)
+        except RingCorruptionError as e:
+            # detected corruption = transient fault: recycle the slot and
+            # re-execute rather than train on garbage
+            self._recycle_slot(slot)
+            self.stats["crc_failures"] += 1
+            self._retry_or_surface(
+                seq, rec, (e, traceback.format_exc()), "crc_failures")
+            return
+        # decode ON ARRIVAL (one memcpy out of the ring) and recycle the
+        # slot immediately, so workers never starve for slots while the
+        # consumer waits on an earlier sequence number
+        self._recycle_slot(slot)
+        if feats is not None:
+            feats["device"] = device
+        del self._inflight[seq]
+        self._rob.put(seq, ("ok", {"minibatch": mb, "layout": layout,
+                                   "features": feats, "ring_bytes": used,
+                                   "load": load}))
+
+    def _recycle_slot(self, slot: int) -> None:
+        if self._lease is not None:
+            self._lease[slot] = -1
+        self._free_q.put(slot)
+
+    def _retry_or_surface(self, seq: int, rec: _TaskRecord,
+                          err_payload: tuple, counter: str) -> None:
+        """Resubmit a failed task while it has retry budget; surface the
+        error through the reorder buffer once it runs out (a deterministic
+        bug fails every attempt — it must reach the caller)."""
+        if rec.attempts >= self.max_task_retries:
+            del self._inflight[seq]
+            self._rob.put(seq, ("error", err_payload))
+            return
+        rec.attempts += 1
+        rec.submitted_at = time.monotonic()
+        if counter != "crc_failures":  # crc counter already bumped
+            self.stats[counter] += 1
+        self.stats["resubmissions"] += 1
+        if not self._degraded:
+            self._task_q.put((seq,) + rec.task)
+
+    def _supervise(self) -> None:
+        """One supervision pass: detect/recover worker deaths, then watch
+        the head-of-line task for straggling. Called from ``fetch``'s poll
+        loop at most every 0.2 s."""
+        self._last_supervise = time.monotonic()
+        if self._degraded or self._closed:
+            return
+        dead = [w for w, p in enumerate(self._procs)
+                if p.exitcode is not None]
+        if dead:
+            t0 = time.perf_counter()
+            # drain what the dead worker managed to report before its
+            # death — those results are valid and must not be re-executed
+            self._drain_results()
+            for w in dead:
+                self._procs[w].join()
+                self._reclaim_slots(w)
+            for w in dead:
+                if self._respawn_count >= self.max_respawns:
+                    self._enter_degraded()
+                    break
+                self._respawn(w)
+            if not self._degraded:
+                self._resubmit_inflight()
+            self.stats["recovery_s"] += time.perf_counter() - t0
+            return
+        if not (self.speculative and self.straggler_timeout_s):
+            return
+        seq = self._rob.next_seq
+        rec = self._inflight.get(seq)
+        if rec is None:
+            return
+        overdue = time.monotonic() - rec.submitted_at
+        if overdue >= self.straggler_timeout_s \
+                and rec.attempts < self.max_task_retries:
+            # the head task is what training blocks on — race a duplicate
+            # on a healthy worker; ReorderBuffer drops whichever loses
+            rec.attempts += 1
+            rec.submitted_at = time.monotonic()
+            self.stats["speculative"] += 1
+            self.stats["resubmissions"] += 1
+            self._task_q.put((seq,) + rec.task)
+
+    def _respawn(self, worker_id: int) -> None:
+        """Start a replacement process against the SAME shared segments."""
+        self._respawn_count += 1
+        self.stats["respawns"] += 1
+        # exponential backoff caps a crash-looping worker's churn
+        time.sleep(min(0.05 * 2 ** (self._respawn_count - 1), 1.0))
+        p = self._ctx.Process(target=_worker_main,
+                              name=f"hitgnn-sampler-{worker_id}",
+                              args=self._worker_args(worker_id), daemon=True)
+        p.start()
+        self._procs[worker_id] = p
+
+    def _reclaim_slots(self, worker_id: int) -> None:
+        """Free every ring slot the dead worker still leased — without this
+        each death leaks a slot until the ring wedges."""
+        if self._lease is None:
+            return
+        for slot in np.flatnonzero(self._lease[:] == worker_id):
+            self._recycle_slot(int(slot))
+
+    def _drain_results(self) -> None:
+        while self._result_q._reader.poll(0):
+            self._handle_result(self._result_q.get())
+
+    def _resubmit_inflight(self) -> None:
+        """Re-enqueue every undelivered task after a worker death. No
+        attempts increment: a crash is not the task's fault, and the
+        respawn budget already bounds crash loops. The sequence numbers are
+        unchanged, so delivery order — and therefore training — is
+        bit-identical to the fault-free run."""
+        now = time.monotonic()
+        for seq, rec in sorted(self._inflight.items()):
+            rec.submitted_at = now
+            self.stats["resubmissions"] += 1
+            self._task_q.put((seq,) + rec.task)
+
+    def _enter_degraded(self) -> None:
+        """Respawn budget exhausted: stop every worker and finish the
+        remaining tasks in-process — training completes slower instead of
+        dying."""
+        self._degraded = True
+        for p in self._procs:
+            if p.is_alive():
+                p.terminate()
+        for p in self._procs:
+            p.join(timeout=3.0)
+            if p.is_alive():
+                p.kill()
+                p.join(timeout=1.0)
+        # late results that landed before the terminate are still valid
+        self._drain_results()
+        self._procs = []
+
+    def _run_degraded_head(self) -> None:
+        """Execute the head-of-line task in-process (degraded mode)."""
+        seq = self._rob.next_seq
+        rec = self._inflight.pop(seq, None)
+        if rec is None:
+            return
+        try:
+            payload = self._run_task_inprocess(rec.task)
+        except BaseException as e:
+            self._rob.put(seq, ("error", (e, traceback.format_exc())))
+            return
+        self.stats["degraded_tasks"] += 1
+        self._rob.put(seq, ("ok", payload))
+
+    def _run_task_inprocess(self, task: tuple) -> dict:
+        """The workers=0 twin of ``_worker_main``'s task body, against the
+        parent-held graph/residency (no ring, ring_bytes=0). Counter-based
+        RNG makes the payload bit-identical to a worker's."""
+        part, epoch, index, device, gen = task
+        if self._local_samplers is None:
+            self._local_samplers = [
+                NeighborSampler(self._graph, self._cfg, ids, p, self._seed)
+                for p, ids in enumerate(self._ids)]
+        mb = self._local_samplers[part].batch_at(epoch, index)
+        layout = None
+        if self._blk_caps is not None:
+            layout = build_layer_layouts(
+                mb.edge_src, mb.edge_dst, mb.edge_mask, self._blk_caps,
+                self._agg_kind,
+                edge_stream=self._cfg.aggregate_backend == "pallas_edges")
+        feats = None
+        if self._residency is not None:
+            if gen != self._residency.generation:
+                self._residency.wait_generation(gen)
+            pos, rows = self._residency.select_ship_rows(
+                device, self._graph.features, mb.nodes[0], mb.node_mask[0],
+                p3_full=self.feat_spec.p3_full)
+            feats = {"pos": pos, "rows": rows, "device": device}
+        return {"minibatch": mb, "layout": layout, "features": feats,
+                "ring_bytes": 0, "load": mb.work_estimate()}
 
     def map_tasks(self, tasks: Iterable[Task],
                   window: Optional[int] = None,
@@ -594,39 +1009,47 @@ class SamplerPool:
                 return
             yield self.fetch(timeout=fetch_timeout)
 
-    def _check_workers(self) -> None:
-        dead = [(p.name, p.exitcode) for p in self._procs
-                if p.exitcode is not None]
-        if dead:
-            raise RuntimeError(
-                f"sampler worker(s) died without reporting a result: {dead}")
-
     # -- lifecycle -----------------------------------------------------------
     def close(self) -> None:
         """Idempotent teardown: stop workers, then close AND unlink the
         shared-memory segments (ring + residency + owned graph store). Safe
         on error paths — runs from ``__exit__`` for any exception type,
-        including KeyboardInterrupt."""
+        including KeyboardInterrupt — and with workers mid-crash: every
+        per-process step is individually guarded, so one dying worker (a
+        broken queue pipe, an unjoinable zombie) cannot skip the segment
+        unlinks that follow."""
         if self._closed:
             return
         self._closed = True
         procs = getattr(self, "_procs", [])
-        try:
-            for _ in procs:
+        for _ in procs:
+            try:
                 self._task_q.put(None)
-        except Exception:
-            pass
+            except Exception:
+                break  # queue already broken — terminate below instead
         for p in procs:
-            p.join(timeout=3.0)
-        for p in procs:
-            if p.is_alive():
-                p.terminate()
+            try:
                 p.join(timeout=3.0)
+            except Exception:
+                pass  # e.g. never started
+        for p in procs:
+            try:
+                if p.is_alive():
+                    p.terminate()
+                    p.join(timeout=3.0)
+                if p.is_alive():
+                    p.kill()
+                    p.join(timeout=1.0)
+            except Exception:
+                pass
         for q in (self._task_q, self._free_q, self._result_q):
             try:
                 q.close()
             except Exception:
                 pass
+        # release the exported lease view BEFORE closing the ring — an
+        # outstanding numpy view over the buffer makes mmap.close() raise
+        self._lease = None
         if self._ring is not None:
             try:
                 self._ring.close()
@@ -637,9 +1060,14 @@ class SamplerPool:
             except FileNotFoundError:
                 pass
         if self._shared_res is not None:
-            self._shared_res.close(unlink=True)
+            try:
+                self._shared_res.close(unlink=True)
+            except Exception:
+                pass
         if self._owns_shared:
             self._shared.close(unlink=True)
+        if self._latch_dir is not None:
+            shutil.rmtree(self._latch_dir, ignore_errors=True)
 
     def __enter__(self) -> "SamplerPool":
         return self

@@ -86,6 +86,15 @@ class SimConfig:
     cache_hit_rate: "Optional[float]" = None
     calibrated_hit_rate: float = 0.0
     cache_refresh_bytes: float = 0.0
+    # Recovery-overhead model (the supervised sampling service,
+    # core/sampler_pool.py): faults_per_epoch worker deaths per epoch, each
+    # costing t_respawn (process spawn + shared-segment re-attach) plus the
+    # re-execution of resubmit_batches in-flight batches at the host's
+    # per-batch rate. Stragglers/CRC retries fold into resubmit_batches.
+    # All default 0 => fault-free model unchanged.
+    faults_per_epoch: float = 0.0
+    t_respawn: float = 0.0
+    resubmit_batches: float = 0.0
 
 
 def partition_batch_counts(train_vertices: int, p: int,
@@ -184,10 +193,18 @@ def simulate_epoch(model: GNNModelConfig, ds: GraphDatasetConfig,
     schedule = (sched.two_stage_schedule(counts) if sim.workload_balancing
                 else sched.naive_schedule(counts))
     stats = sched.schedule_stats(schedule, p)
-    epoch_time = stats["iterations"] * t_parallel
+    # recovery overhead: each fault pays the respawn latency plus the
+    # re-execution of its in-flight batches ON the host path (re-sampled
+    # work, not device work) — additive because recovery serializes the
+    # consumer until the resubmitted head-of-line batch lands
+    t_recovery = sim.faults_per_epoch * (
+        sim.t_respawn + sim.resubmit_batches
+        * (sim.t_sampling + sim.t_layout + t_gather_worker) / w)
+    epoch_time = stats["iterations"] * t_parallel + t_recovery
     vertices = sum(mb.v) * stats["batches"]
     return {
         "p": p, "epoch_time_s": epoch_time,
+        "t_recovery": t_recovery,
         "nvtps": vertices / epoch_time,
         "iterations": stats["iterations"],
         "utilization": stats["utilization"],

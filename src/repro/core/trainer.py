@@ -33,6 +33,7 @@ scheduler state. Optional int8+error-feedback gradient compression
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass
@@ -127,6 +128,25 @@ class SyncGNNTrainer:
     cache_capacity: Optional[int] = None
     cache_refresh_every: Optional[int] = None
     ship_rows_cap: Optional[int] = None
+    # Fault-tolerance knobs (supervised sampling service) — same
+    # None-inherits override pattern. max_respawns bounds worker respawns
+    # before the pool degrades to in-process sampling;
+    # straggler_timeout_s arms speculative re-execution of the head-of-line
+    # task; fault_spec injects faults (core/faults.py grammar, tests/bench
+    # only).
+    max_respawns: Optional[int] = None
+    straggler_timeout_s: Optional[float] = None
+    speculative_sampling: Optional[bool] = None
+    fault_spec: Optional[str] = None
+    # Mid-epoch checkpointing: a checkpoint.Checkpointer plus a cadence —
+    # every checkpoint_every synchronous iterations the trainer snapshots
+    # host state (sampler cursors, balancer loads, cache
+    # frequency/residency/generation) at assembly time and saves it with
+    # the matching post-update params/opt state (0 = off). A killed run
+    # restores with restore_checkpoint() + run_epoch(resume=True) and
+    # finishes bit-identical to an uninterrupted one.
+    checkpointer: Optional[object] = None
+    checkpoint_every: int = 0
 
     def __post_init__(self):
         overrides = {}
@@ -146,6 +166,14 @@ class SyncGNNTrainer:
             overrides["cache_refresh_every"] = self.cache_refresh_every
         if self.ship_rows_cap is not None:
             overrides["ship_rows_cap"] = self.ship_rows_cap
+        if self.max_respawns is not None:
+            overrides["max_respawns"] = self.max_respawns
+        if self.straggler_timeout_s is not None:
+            overrides["straggler_timeout_s"] = self.straggler_timeout_s
+        if self.speculative_sampling is not None:
+            overrides["speculative_sampling"] = self.speculative_sampling
+        if self.fault_spec is not None:
+            overrides["fault_spec"] = self.fault_spec
         if overrides:
             self.model_cfg = dataclasses.replace(self.model_cfg, **overrides)
         self.num_sampler_workers = self.model_cfg.num_sampler_workers
@@ -189,6 +217,8 @@ class SyncGNNTrainer:
                 self.model_cfg.cache_capacity,
                 self.model_cfg.cache_refresh_every)
         self._iter_no = 0  # global synchronous-iteration counter
+        self._epoch_iter = 0  # iterations assembled within the current epoch
+        self._pool_stats0: Dict[str, float] = {}  # epoch-start pool stats
         self.samplers = [
             NeighborSampler(self.graph, self.model_cfg,
                             self._train_ids(i), i, self.seed)
@@ -445,8 +475,18 @@ class SyncGNNTrainer:
                 self.cache.observe(mb.nodes[0], mb.node_mask[0])
             self.cache.end_iteration(self._iter_no)
         self._iter_no += 1
-        return {"stacked": stack_batches(batches), "vertices": vertices,
-                "n_batches": len(assignments)}
+        self._epoch_iter += 1
+        out = {"stacked": stack_batches(batches), "vertices": vertices,
+               "n_batches": len(assignments)}
+        if (self.checkpointer is not None and self.checkpoint_every > 0
+                and self._epoch_iter % self.checkpoint_every == 0):
+            # host state LEADS params: assembly (this prefetch-thread hook)
+            # runs ahead of the device step, so the snapshot is taken HERE
+            # — describing state after this iteration's assembly — and
+            # saved by the MAIN loop right after this same iteration's
+            # parameter update, keeping the pair consistent.
+            out["host_ckpt"] = self._host_snapshot()
+        return out
 
     def _prepare_group(self, assignments: List[sched.Assignment]) -> dict:
         """Stages 1+2 (sample + gather [+ block-CSR build]) for one
@@ -502,7 +542,11 @@ class SyncGNNTrainer:
                            else None),
                 p3_full=self.algorithm == "p3",
                 feat_rows_cap=self.model_cfg.ship_rows_cap,
-                worker_affinity=self.worker_affinity)
+                worker_affinity=self.worker_affinity,
+                max_respawns=self.model_cfg.max_respawns,
+                straggler_timeout_s=self.model_cfg.straggler_timeout_s,
+                speculative=self.model_cfg.speculative_sampling,
+                fault_spec=self.model_cfg.fault_spec)
         return self._pool
 
     def _pool_prepared_items(self, groups: List[List[sched.Assignment]],
@@ -547,36 +591,62 @@ class SyncGNNTrainer:
         K = self.model_cfg.cache_refresh_every
         return global_iter // K if K > 0 else self.cache.generation
 
-    def run_epoch(self) -> dict:
-        for s in self.samplers:
-            s.reset_epoch()
+    def run_epoch(self, resume: bool = False) -> dict:
+        """One synchronous epoch. ``resume=True`` continues the epoch a
+        restored checkpoint interrupted (see :meth:`restore_checkpoint`):
+        sampler cursors, balancer loads and cache state are already the
+        mid-epoch values, so resets are skipped, the FULL epoch schedule is
+        rebuilt from the cursor-independent batch counts, and the first
+        ``_epoch_iter`` iteration groups — already executed before the
+        kill — are skipped."""
+        if not resume:
+            for s in self.samplers:
+                s.reset_epoch()
+            self._epoch_iter = 0
         # per-epoch beta/miss accounting (hit rates comparable across
         # epochs) + the cache's epoch hook: counter reset, and in
         # epoch-boundary mode the synchronous admission/eviction pass —
         # BEFORE any task submission so workers stamp the new generation
         self.store.reset_stats()
-        if self.cache is not None:
+        if self.cache is not None and not resume:
             self.cache.start_epoch()
-        self._balancer = sched.LoadBalancer(self.num_devices,
-                                            self.balance_policy)
-        schedule = self.epoch_schedule()
+        if not resume:
+            self._balancer = sched.LoadBalancer(self.num_devices,
+                                                self.balance_policy)
+        if resume:
+            # the interrupted epoch's schedule, reconstructed: the counts
+            # must be the FULL epoch's (in-process cursors sit mid-epoch),
+            # and the schedule is a pure function of the counts
+            counts = [s.epoch_batches() for s in self.samplers]
+            fn = (sched.two_stage_schedule if self.workload_balancing
+                  else sched.naive_schedule)
+            schedule = fn(counts)
+        else:
+            schedule = self.epoch_schedule()
         groups = list(sched.iterations(schedule))
+        run_groups = groups[self._epoch_iter:] if resume else groups
         t0 = time.time()
         pstats = self._pstats = PipelineStats()
         if self.num_sampler_workers > 0:
             # stage 1+2b run in the sampler worker processes; the prefetch
             # thread only gathers features, stacks, and keeps the reorder
             # buffer drained while the main thread dispatches device steps
-            items = self._pool_prepared_items(groups, self.samplers[0].epoch)
+            self._ensure_pool()
+            items = self._pool_prepared_items(run_groups,
+                                              self.samplers[0].epoch)
 
             def prepare(item):
                 return self._assemble_group(*item)
         else:
-            items = groups
+            items = run_groups
             prepare = self._prepare_group
+        # per-epoch recovery metrics = the pool's lifetime counters deltaed
+        # against this snapshot
+        self._pool_stats0 = (dict(self._pool.stats)
+                             if self._pool is not None else {})
         try:
-            return self._run_epoch_loop(schedule, groups, items, prepare,
-                                        pstats, t0)
+            return self._run_epoch_loop(schedule, run_groups, items,
+                                        prepare, pstats, t0)
         except BaseException:
             # an abandoned epoch leaves in-flight pool tasks whose sequence
             # numbers would bleed into the next epoch's reorder stream —
@@ -602,6 +672,13 @@ class SyncGNNTrainer:
                 m = self._execute(prepared, sync=False)
                 inflight.append(m)
                 step_metrics.append((m, prepared["n_batches"]))
+                if "host_ckpt" in prepared:
+                    # params/opt now hold THIS iteration's update (async is
+                    # fine — the save thread blocks materializing them),
+                    # matching the host state snapshotted at its assembly
+                    self.checkpointer.save(self.step_no, self.params,
+                                           self.opt_state,
+                                           extra=prepared["host_ckpt"])
                 if len(inflight) > self.prefetch_depth:
                     jax.block_until_ready(inflight.popleft())
                 vertices += prepared["vertices"]
@@ -613,6 +690,10 @@ class SyncGNNTrainer:
                 m = self._execute(prepared)
                 vertices += m.pop("vertices_traversed")
                 step_metrics.append((m, prepared["n_batches"]))
+                if "host_ckpt" in prepared:
+                    self.checkpointer.save(self.step_no, self.params,
+                                           self.opt_state,
+                                           extra=prepared["host_ckpt"])
                 n_batches += prepared["n_batches"]
         metrics: Dict[str, float] = {}
         if step_metrics:
@@ -631,7 +712,25 @@ class SyncGNNTrainer:
         host_bytes = sum(s.host_bytes for s in self.store.stats)
         total_rows = local_rows + host_rows
         cache = self.cache
+        # this epoch's recovery actions: the supervisor's lifetime counters
+        # minus the epoch-start snapshot
+        pool = self._pool
+        base = self._pool_stats0
+        pstat = pool.stats if pool is not None else {}
+        recov = {k: pstat.get(k, 0) - base.get(k, 0)
+                 for k in ("respawns", "resubmissions", "speculative",
+                           "duplicates_dropped", "crc_failures",
+                           "degraded_tasks", "recovery_s")}
         return {**metrics, "epoch_time_s": wall, "batches": n_batches,
+                "pool_respawns": recov["respawns"],
+                "pool_resubmissions": recov["resubmissions"],
+                "pool_speculative_hits": recov["duplicates_dropped"],
+                "pool_speculative_launched": recov["speculative"],
+                "pool_crc_failures": recov["crc_failures"],
+                "pool_degraded_batches": recov["degraded_tasks"],
+                "pool_recovery_s": recov["recovery_s"],
+                "pool_degraded": pool.degraded if pool is not None
+                else False,
                 "iterations": n_iter,
                 "utilization": stats["utilization"],
                 "vertices_traversed": vertices,
@@ -665,6 +764,99 @@ class SyncGNNTrainer:
 
     def train(self, epochs: int = 1) -> List[dict]:
         return [self.run_epoch() for _ in range(epochs)]
+
+    # -- mid-epoch checkpoint/resume --------------------------------------------
+    def _host_snapshot(self) -> dict:
+        """JSON-serializable host-pipeline state as of the just-assembled
+        iteration: global/epoch iteration cursors, per-partition sampler
+        cursors (the permutation regenerates from the RNG counters),
+        balancer running loads, and — with a cache — the frequency counter,
+        per-device resident sets, generation and any pending (already
+        ranked) admission set. Runs on the prefetch thread inside
+        ``_assemble_group``, where this state is exactly one iteration
+        ahead of params — the save pairs it with that iteration's update."""
+        snap: dict = {"iter_no": self._iter_no,
+                      "epoch_iter": self._epoch_iter,
+                      "samplers": [s.state() for s in self.samplers],
+                      "balancer_load": [float(x)
+                                        for x in self._balancer.load]}
+        c = self.cache
+        if c is not None:
+            pending = None
+            if c._pending is not None:
+                gen, t, holder = c._pending
+                # the ranking is determined by the freq snapshot taken at
+                # launch — joining here only changes timing, never content
+                t.join()
+                pending = {"gen": int(gen), "ids": holder[0].tolist()}
+            resident = {str(d): c.core.resident_ids(d).tolist()
+                        for d in range(c.core.num_devices)
+                        if not c.core._all_resident[d]}
+            snap["cache"] = {
+                "freq": c.freq.tolist(),
+                "epochs_run": c._epochs_run,
+                "generation": int(c.generation),
+                "resident": resident,
+                "pending": pending,
+                "counters": [c.admissions_total, c.evictions_total,
+                             c.refresh_bytes_total, c.refreshes,
+                             c.admissions_epoch, c.evictions_epoch,
+                             c.refresh_bytes_epoch]}
+        return snap
+
+    def restore_checkpoint(self, step: Optional[int] = None) -> int:
+        """Restore params + optimizer + host-pipeline state from the newest
+        (or the given) verified checkpoint into THIS trainer — construct it
+        with the same arguments as the killed run first. Follow with
+        ``run_epoch(resume=True)`` to finish the interrupted epoch; the
+        completed run's final params are bit-identical to an uninterrupted
+        one (counter-based sampler RNG + the restored cursors/cache
+        timeline). Returns the restored step."""
+        if self.checkpointer is None:
+            raise RuntimeError("trainer has no checkpointer")
+        if step is None:
+            step = self.checkpointer.latest_step()
+            if step is None:
+                raise FileNotFoundError("no valid checkpoint to restore")
+        out = self.checkpointer.restore(step, self.params, self.opt_state)
+        self.params = out["params"]
+        self.opt_state = out["opt"]
+        self.step_no = int(out["step"])
+        extra = out["extra"]
+        self._iter_no = int(extra["iter_no"])
+        self._epoch_iter = int(extra["epoch_iter"])
+        for s, st in zip(self.samplers, extra["samplers"]):
+            s.restore_state(st)
+        self._balancer = sched.LoadBalancer(self.num_devices,
+                                            self.balance_policy)
+        self._balancer.load = [float(x) for x in extra["balancer_load"]]
+        cstate = extra.get("cache")
+        if self.cache is not None and cstate is not None:
+            c = self.cache
+            c.freq[:] = np.asarray(cstate["freq"], np.int64)
+            c._epochs_run = int(cstate["epochs_run"])
+            (c.admissions_total, c.evictions_total, c.refresh_bytes_total,
+             c.refreshes, c.admissions_epoch, c.evictions_epoch,
+             c.refresh_bytes_epoch) = cstate["counters"]
+            for d_str, ids in cstate["resident"].items():
+                c.core.set_resident(int(d_str),
+                                    np.asarray(ids, np.int32))
+            c.core.publish_generation(int(cstate["generation"]))
+            if c._pending is not None:  # drop any stale in-flight ranking
+                _, t, _ = c._pending
+                c._pending = None
+                t.join()
+            p = cstate.get("pending")
+            if p is not None:
+                # reconstruct the pending refresh as already-finished: the
+                # checkpoint stored its RESULT, so a dummy joined thread +
+                # a filled holder make _join_apply behave identically
+                holder = [np.asarray(p["ids"], np.int32)]
+                t = threading.Thread(target=lambda: None,
+                                     name="hitgnn-cache-refresh")
+                t.start()
+                c._pending = (int(p["gen"]), t, holder)
+        return int(out["step"])
 
     # -- lifecycle --------------------------------------------------------------
     def close(self) -> None:

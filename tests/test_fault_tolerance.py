@@ -1,0 +1,524 @@
+"""Fault-tolerant host runtime (supervised SamplerPool + faults.py +
+mid-epoch checkpoint/resume).
+
+The central property under test: every recovered fault is BITWISE INVISIBLE
+to training. Tasks are pure functions of their RNG coordinates
+(SeedSequence((seed, partition, epoch, index))), so a resubmitted task —
+after a worker kill, a straggler's speculative duplicate, a ring-capacity
+overflow, or a CRC-detected slot corruption — re-materializes the identical
+payload, and the epoch's losses and final parameters match the fault-free
+run exactly. Likewise a run killed mid-epoch and resumed from a checkpoint
+(params + sampler cursors + balancer loads + cache timeline) finishes with
+bit-identical final parameters.
+
+The suite also pins the supervisor's mechanics (respawn accounting, lease
+reclaim, degradation to in-process sampling after max_respawns, absolute
+fetch deadlines, crash-safe teardown) and the Checkpointer's integrity
+fallback (truncated/corrupted newest checkpoint -> previous step).
+
+batch_targets=4 over the 25 synthetic train vertices gives each of the two
+partitions 3-4 batches per epoch — enough indices to target a mid-epoch
+task and to leave work after a mid-epoch checkpoint.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+from multiprocessing import shared_memory
+
+import numpy as np
+import pytest
+
+from repro.configs.gnn import GNNModelConfig
+from repro.core.faults import Fault, FaultInjector, FaultSpec
+from repro.core.sampler import NeighborSampler
+from repro.core.sampler_pool import SamplerPool
+from repro.data.graphs import synthetic_graph
+
+G = synthetic_graph(scale=8, edge_factor=5, feat_dim=8, num_classes=4)
+CFG = GNNModelConfig("graphsage", num_layers=2, hidden=8, fanouts=(3, 2),
+                     batch_targets=4)
+
+
+def _segment_names(pool):
+    names = [a.name for a in pool._shared.spec.arrays.values()]
+    if pool._ring is not None:
+        names.append(pool._ring.name)
+    return names
+
+
+def _assert_all_unlinked(names):
+    for name in names:
+        with pytest.raises(FileNotFoundError):
+            shared_memory.SharedMemory(name=name)
+
+
+def _assert_payload_matches(ref: NeighborSampler, out: dict, epoch: int,
+                            index: int) -> None:
+    want = ref.batch_at(epoch, index)
+    mb = out["minibatch"]
+    assert (mb.targets == want.targets).all()
+    for l in range(CFG.num_layers):
+        for f in ("nodes", "node_mask", "edge_src", "edge_dst",
+                  "edge_mask", "self_idx"):
+            assert (getattr(mb, f)[l] == getattr(want, f)[l]).all(), (f, l)
+
+
+# ---------------------------------------------------------------------------
+# fault spec grammar + one-shot latching
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_parses_the_grammar():
+    spec = FaultSpec.parse(
+        "kill@0.1.3; hang:1.5@1.0.2 ;encode_overflow#8;corrupt_slot")
+    assert spec.faults == (
+        Fault("kill", (0, 1, 3)),
+        Fault("hang", (1, 0, 2), hang_s=1.5),
+        Fault("encode_overflow", None, count=8),
+        Fault("corrupt_slot", None))
+
+
+@pytest.mark.parametrize("bad", ["", "explode@0.0.0", "hang@0.0.0",
+                                 "kill#0"])
+def test_fault_spec_rejects_invalid(bad):
+    with pytest.raises(ValueError):
+        FaultSpec.parse(bad)
+
+
+def test_injector_targeted_fault_fires_exactly_once(tmp_path):
+    spec = FaultSpec.parse("kill@0.0.3")
+    inj = FaultInjector(spec, str(tmp_path))
+    assert inj.fire("kill", (0, 0, 2)) is None  # wrong task
+    assert inj.fire("kill", (0, 0, 3)) is not None
+    # a resubmission of the same task (any injector over the same latch
+    # dir — e.g. the respawned worker) never re-fires
+    assert FaultInjector(spec, str(tmp_path)).fire("kill", (0, 0, 3)) is None
+
+
+def test_injector_wildcard_budget_shared_across_workers(tmp_path):
+    spec = FaultSpec.parse("encode_overflow#2")
+    a = FaultInjector(spec, str(tmp_path))
+    b = FaultInjector(spec, str(tmp_path))
+    assert a.fire("encode_overflow", (0, 0, 0)) is not None
+    # the task that already consulted the fault neither re-fires nor burns
+    # budget on resubmission
+    assert b.fire("encode_overflow", (0, 0, 0)) is None
+    assert b.fire("encode_overflow", (0, 0, 1)) is not None  # budget slot 2
+    assert a.fire("encode_overflow", (0, 0, 2)) is None      # exhausted
+
+
+# ---------------------------------------------------------------------------
+# supervisor mechanics at the pool level
+# ---------------------------------------------------------------------------
+
+def test_pool_recovers_worker_kill_bitwise():
+    ref = NeighborSampler(G, CFG, G.train_ids, 0, seed=3)
+    with SamplerPool(G, CFG, [G.train_ids], seed=3, num_workers=1,
+                     fault_spec="kill@0.0.1") as pool:
+        outs = list(pool.map_tasks([(0, 0, i) for i in range(4)],
+                                   fetch_timeout=120.0))
+        assert pool.stats["respawns"] == 1
+        assert pool.stats["resubmissions"] >= 1
+        assert not pool.degraded
+    for i, out in enumerate(outs):
+        _assert_payload_matches(ref, out, 0, i)
+
+
+def test_pool_retries_crc_corrupted_slot_bitwise():
+    ref = NeighborSampler(G, CFG, G.train_ids, 0, seed=3)
+    with SamplerPool(G, CFG, [G.train_ids], seed=3, num_workers=1,
+                     fault_spec="corrupt_slot@0.0.1") as pool:
+        outs = list(pool.map_tasks([(0, 0, i) for i in range(4)],
+                                   fetch_timeout=120.0))
+        assert pool.stats["crc_failures"] == 1
+    for i, out in enumerate(outs):
+        _assert_payload_matches(ref, out, 0, i)
+
+
+def test_pool_speculative_duplicate_first_result_wins():
+    ref = NeighborSampler(G, CFG, G.train_ids, 0, seed=3)
+    with SamplerPool(G, CFG, [G.train_ids], seed=3, num_workers=2,
+                     straggler_timeout_s=0.2,
+                     fault_spec="hang:2.0@0.0.1") as pool:
+        outs = list(pool.map_tasks([(0, 0, i) for i in range(4)],
+                                   fetch_timeout=120.0))
+        assert pool.stats["speculative"] >= 1
+    for i, out in enumerate(outs):
+        _assert_payload_matches(ref, out, 0, i)
+
+
+def test_pool_ring_overflow_beyond_slot_count_recycles_and_completes():
+    """More encode-overflow faults than ring slots: every failed encode
+    must recycle its slot (worker side) and resubmit (supervisor side), or
+    the ring wedges well before the epoch completes."""
+    ref = NeighborSampler(G, CFG, G.train_ids, 0, seed=3)
+    n_tasks, n_faults = 6, 4
+    with SamplerPool(G, CFG, [G.train_ids], seed=3, num_workers=1,
+                     num_slots=2,
+                     fault_spec=f"encode_overflow#{n_faults}") as pool:
+        assert n_faults > pool.num_slots
+        outs = list(pool.map_tasks([(0, 0, i) for i in range(n_tasks)],
+                                   fetch_timeout=120.0))
+        assert pool.stats["retried_errors"] == n_faults
+    assert len(outs) == n_tasks
+    for i, out in enumerate(outs):
+        _assert_payload_matches(ref, out, 0, i)
+
+
+def test_pool_degrades_to_inprocess_after_max_respawns():
+    ref = NeighborSampler(G, CFG, G.train_ids, 0, seed=3)
+    with SamplerPool(G, CFG, [G.train_ids], seed=3, num_workers=1,
+                     max_respawns=1, fault_spec="kill#5") as pool:
+        outs = list(pool.map_tasks([(0, 0, i) for i in range(6)],
+                                   fetch_timeout=120.0))
+        assert pool.degraded
+        assert pool.stats["respawns"] == 1
+        assert pool.stats["degraded_tasks"] >= 1
+    assert len(outs) == 6
+    for i, out in enumerate(outs):
+        _assert_payload_matches(ref, out, 0, i)
+
+
+def test_deterministic_worker_error_still_surfaces_after_retries():
+    """Bounded retries must not turn a real bug into an infinite loop: a
+    task that fails every attempt surfaces at fetch() with the worker's
+    traceback."""
+    with SamplerPool(G, CFG, [G.train_ids], seed=0, num_workers=1) as pool:
+        pool.submit(5, 0, 0)  # partition 5 does not exist: deterministic
+        with pytest.raises(IndexError):
+            pool.fetch(timeout=120.0)
+        assert pool.stats["resubmissions"] == pool.max_task_retries - 1
+
+
+def test_fetch_honors_one_absolute_deadline_with_slow_worker():
+    """A deliberately slow worker must not stretch fetch() past its
+    timeout: the deadline is absolute across the whole poll loop."""
+    with SamplerPool(G, CFG, [G.train_ids], seed=0, num_workers=1,
+                     fault_spec="hang:30.0@0.0.0") as pool:
+        pool.submit(0, 0, 0)
+        time.sleep(0.3)  # let the worker pick the task up and start hanging
+        t0 = time.monotonic()
+        with pytest.raises(TimeoutError):
+            pool.fetch(timeout=0.5)
+        elapsed = time.monotonic() - t0
+        assert 0.4 <= elapsed < 5.0, elapsed
+
+
+def test_close_mid_crash_unlinks_all_segments():
+    """close() while a worker is dying (kill fault in flight) must still
+    join the carcasses and unlink every shared segment."""
+    pool = SamplerPool(G, CFG, [G.train_ids], seed=0, num_workers=2,
+                       fault_spec="kill@0.0.0")
+    names = _segment_names(pool)
+    try:
+        pool.submit(0, 0, 0)
+        time.sleep(0.3)  # the fault fires: one worker is now mid-death
+    finally:
+        pool.close()
+    _assert_all_unlinked(names)
+
+
+def test_sigterm_during_epoch_leaks_no_shared_memory(tmp_path):
+    """SIGTERM a training process mid-epoch: every shared-memory segment
+    it created must be unlinked afterwards (run_epoch's error path tears
+    the pool down; the multiprocessing resource tracker is the backstop)."""
+    script = tmp_path / "train_forever.py"
+    script.write_text(
+        "import signal, sys\n"
+        "signal.signal(signal.SIGTERM, lambda *a: sys.exit(143))\n"
+        "from repro.configs.gnn import GNNModelConfig\n"
+        "from repro.core.trainer import SyncGNNTrainer\n"
+        "from repro.data.graphs import synthetic_graph\n"
+        "if __name__ == '__main__':\n"
+        "    g = synthetic_graph(scale=8, edge_factor=5, feat_dim=8, "
+        "num_classes=4)\n"
+        "    cfg = GNNModelConfig('graphsage', num_layers=2, hidden=8, "
+        "fanouts=(3, 2), batch_targets=4)\n"
+        "    tr = SyncGNNTrainer(g, cfg, num_devices=2, seed=0, "
+        "num_sampler_workers=2, gather_in_workers=True)\n"
+        "    try:\n"
+        "        pool = tr._ensure_pool()\n"
+        "        names = [a.name for a in "
+        "pool._shared.spec.arrays.values()]\n"
+        "        names.append(pool._ring.name)\n"
+        "        if pool._shared_res is not None:\n"
+        "            names += [pool._shared_res.spec.segment.name, "
+        "pool._shared_res.spec.meta.name]\n"
+        "        print('SEGMENTS ' + ' '.join(names), flush=True)\n"
+        "        while True:\n"
+        "            tr.run_epoch()\n"
+        "    finally:\n"
+        "        tr.close()\n")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath("src")
+    proc = subprocess.Popen([sys.executable, str(script)],
+                            stdout=subprocess.PIPE, text=True, env=env)
+    try:
+        line = proc.stdout.readline()
+        assert line.startswith("SEGMENTS "), line
+        names = line.split()[1:]
+        time.sleep(1.0)  # well inside an epoch
+        proc.send_signal(signal.SIGTERM)
+        proc.wait(timeout=60)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait()
+    # the resource tracker may unlink asynchronously after child exit
+    deadline = time.monotonic() + 10.0
+    leaked = list(names)
+    while leaked and time.monotonic() < deadline:
+        leaked = [n for n in leaked if os.path.exists(f"/dev/shm/{n}")]
+        if leaked:
+            time.sleep(0.2)
+    assert not leaked, f"leaked shared memory segments: {leaked}"
+
+
+# ---------------------------------------------------------------------------
+# the bitwise-invisibility property, end to end through the trainer
+# ---------------------------------------------------------------------------
+
+FAULTS = {
+    # one mid-epoch fault per class, at task (partition 0, epoch 1, index 1)
+    "kill": {"fault_spec": "kill@0.1.1"},
+    "straggler": {"fault_spec": "hang:1.0@0.1.1",
+                  "straggler_timeout_s": 0.2},
+    "encode_overflow": {"fault_spec": "encode_overflow@0.1.1"},
+    "corrupt_slot": {"fault_spec": "corrupt_slot@0.1.1"},
+}
+
+CACHE_KW = dict(cache_capacity=24, cache_refresh_every=2,
+                gather_in_workers=True)
+
+_BASELINE = {}
+
+
+def _final_state(trainer, epochs=2):
+    import jax
+    losses = [trainer.run_epoch()["loss"] for _ in range(epochs)]
+    params = [np.asarray(a) for a in jax.tree.leaves(trainer.params)]
+    return losses, params
+
+
+def _baseline(cache: bool):
+    """Fault-free reference per cache mode, computed once: the in-process
+    (workers=0) trainer — existing suites already pin that workers=N
+    matches it bitwise, so one reference per cache mode serves the whole
+    matrix."""
+    if cache not in _BASELINE:
+        from repro.core.trainer import SyncGNNTrainer
+        kw = dict(cache_capacity=24, cache_refresh_every=2) if cache else {}
+        tr = SyncGNNTrainer(G, CFG, num_devices=2, seed=7, **kw)
+        try:
+            _BASELINE[cache] = _final_state(tr)
+        finally:
+            tr.close()
+    return _BASELINE[cache]
+
+
+@pytest.mark.parametrize("fault", sorted(FAULTS))
+@pytest.mark.parametrize("workers", [1, 2])
+@pytest.mark.parametrize("cache", [False, True])
+def test_injected_fault_is_bitwise_invisible(fault, workers, cache):
+    """THE property: a fault injected mid-epoch (worker kill, straggler,
+    ring overflow, slot corruption) changes nothing the training math can
+    see — per-epoch losses and final params equal the fault-free run at the
+    same seed, across worker counts and cache on/off."""
+    from repro.core.trainer import SyncGNNTrainer
+    kw = dict(FAULTS[fault])
+    if cache:
+        kw.update(CACHE_KW)
+    tr = SyncGNNTrainer(G, CFG, num_devices=2, seed=7,
+                        num_sampler_workers=workers, **kw)
+    try:
+        losses, params = _final_state(tr)
+        pool = tr._pool
+        assert not pool.degraded
+        if fault == "kill":
+            assert pool.stats["respawns"] == 1
+        elif fault == "corrupt_slot":
+            assert pool.stats["crc_failures"] == 1
+        elif fault == "encode_overflow":
+            assert pool.stats["retried_errors"] == 1
+    finally:
+        tr.close()
+    ref_losses, ref_params = _baseline(cache)
+    assert losses == ref_losses
+    for a, b in zip(params, ref_params):
+        assert (a == b).all()
+
+
+def test_degraded_training_stays_bitwise_identical():
+    """Respawn budget exhausted mid-epoch: the pool degrades to in-process
+    sampling and training still finishes bit-identical to fault-free."""
+    from repro.core.trainer import SyncGNNTrainer
+    tr = SyncGNNTrainer(G, CFG, num_devices=2, seed=7,
+                        num_sampler_workers=1, max_respawns=1,
+                        fault_spec="kill#8")
+    try:
+        losses, params = _final_state(tr)
+        m = tr.run_epoch()  # a third epoch entirely in degraded mode
+        assert tr._pool.degraded and m["pool_degraded"]
+        assert m["pool_degraded_batches"] == m["batches"]
+    finally:
+        tr.close()
+    ref_losses, ref_params = _baseline(False)
+    assert losses == ref_losses
+    for a, b in zip(params, ref_params):
+        assert (a == b).all()
+
+
+def test_epoch_metrics_report_recovery_actions():
+    from repro.core.trainer import SyncGNNTrainer
+    tr = SyncGNNTrainer(G, CFG, num_devices=2, seed=7,
+                        num_sampler_workers=1, fault_spec="kill@0.1.0")
+    try:
+        m1 = tr.run_epoch()
+        m2 = tr.run_epoch()
+    finally:
+        tr.close()
+    assert m1["pool_respawns"] == 1 and m1["pool_resubmissions"] >= 1
+    assert m1["pool_recovery_s"] > 0.0
+    # per-epoch deltas: the second (fault-free) epoch reports zero actions
+    assert m2["pool_respawns"] == 0 and m2["pool_resubmissions"] == 0
+
+
+# ---------------------------------------------------------------------------
+# mid-epoch checkpoint/resume
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("workers", [0, 2])
+def test_killed_run_resumes_bitwise_from_mid_epoch_checkpoint(
+        tmp_path, workers):
+    """A run checkpointing every iteration is 'killed' after epoch 2's
+    second iteration (simulated by restoring exactly that checkpoint into
+    a fresh trainer, which sees only the on-disk state a real crash would
+    leave) and resumed; its final params must equal the uninterrupted
+    run's bitwise."""
+    import jax
+    from repro.checkpoint.checkpointing import Checkpointer
+    from repro.core.trainer import SyncGNNTrainer
+    kw = dict(num_devices=2, seed=11, num_sampler_workers=workers)
+    if workers:
+        kw.update(CACHE_KW)
+    ck = Checkpointer(str(tmp_path), keep=1000)
+    ref = SyncGNNTrainer(G, CFG, checkpointer=ck, checkpoint_every=1, **kw)
+    try:
+        m1 = ref.run_epoch()
+        m2 = ref.run_epoch()
+        ref_params = [np.asarray(a) for a in jax.tree.leaves(ref.params)]
+    finally:
+        ref.close()
+    ck.wait()
+    # find the checkpoint taken mid-epoch-2 (epoch_iter == 2, strictly
+    # before the epoch's last iteration)
+    assert m2["iterations"] > 2
+    step = None
+    for s in ck._candidate_steps():
+        with open(os.path.join(str(tmp_path),
+                               f"ckpt_{s:08d}.json")) as fh:
+            extra = json.load(fh)["extra"]
+        if extra["iter_no"] > m1["iterations"] and extra["epoch_iter"] == 2:
+            step = s
+            break
+    assert step is not None
+    res = SyncGNNTrainer(G, CFG, checkpointer=Checkpointer(str(tmp_path)),
+                         **kw)
+    try:
+        assert res.restore_checkpoint(step) == step
+        assert res._epoch_iter == 2
+        res.run_epoch(resume=True)
+        res_params = [np.asarray(a) for a in jax.tree.leaves(res.params)]
+    finally:
+        res.close()
+    for a, b in zip(res_params, ref_params):
+        assert (a == b).all()
+
+
+def test_restore_latest_resumes_without_explicit_step(tmp_path):
+    import jax
+    from repro.checkpoint.checkpointing import Checkpointer
+    from repro.core.trainer import SyncGNNTrainer
+    ck = Checkpointer(str(tmp_path), keep=1000)
+    ref = SyncGNNTrainer(G, CFG, num_devices=2, seed=5, checkpointer=ck,
+                         checkpoint_every=3)
+    try:
+        m = ref.run_epoch()
+        ref_params = [np.asarray(a) for a in jax.tree.leaves(ref.params)]
+    finally:
+        ref.close()
+    assert m["iterations"] % 3 != 0  # the newest checkpoint is mid-epoch
+    res = SyncGNNTrainer(G, CFG, num_devices=2, seed=5,
+                         checkpointer=Checkpointer(str(tmp_path)))
+    try:
+        step = res.restore_checkpoint()  # no explicit step: latest wins
+        assert 0 < step < m["iterations"]
+        res.run_epoch(resume=True)
+        res_params = [np.asarray(a) for a in jax.tree.leaves(res.params)]
+    finally:
+        res.close()
+    for a, b in zip(res_params, ref_params):
+        assert (a == b).all()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity: truncated/corrupted files fall back
+# ---------------------------------------------------------------------------
+
+def _save_two_steps(tmp_path):
+    from repro.checkpoint.checkpointing import Checkpointer
+    ck = Checkpointer(str(tmp_path), keep=10)
+    params = {"w": np.arange(6, dtype=np.float32)}
+    ck.save(1, params, extra={"iter_no": 1}, blocking=True)
+    ck.save(2, {"w": params["w"] + 1}, extra={"iter_no": 2}, blocking=True)
+    return ck, params
+
+
+def test_truncated_newest_checkpoint_falls_back_to_previous(tmp_path):
+    ck, params = _save_two_steps(tmp_path)
+    assert ck.latest_step() == 2
+    npz = os.path.join(str(tmp_path), "ckpt_00000002.npz")
+    with open(npz, "r+b") as fh:  # tear the file like a crashed write
+        fh.truncate(os.path.getsize(npz) // 2)
+    assert ck.latest_step() == 1
+    out = ck.restore(2, params)
+    assert out["step"] == 1 and out["extra"]["iter_no"] == 1
+    assert (np.asarray(out["params"]["w"])
+            == np.arange(6, dtype=np.float32)).all()
+
+
+def test_corrupted_array_bytes_detected_by_crc(tmp_path):
+    ck, params = _save_two_steps(tmp_path)
+    npz = os.path.join(str(tmp_path), "ckpt_00000002.npz")
+    data = dict(np.load(npz))
+    data["params/w"] = data["params/w"] + 1.0  # silent bit-rot
+    np.savez(npz, **data)
+    assert ck.latest_step() == 1
+    assert ck.restore(2, params)["step"] == 1
+
+
+def test_corrupted_manifest_detected_by_checksum(tmp_path):
+    ck, params = _save_two_steps(tmp_path)
+    meta_path = os.path.join(str(tmp_path), "ckpt_00000002.json")
+    with open(meta_path) as fh:
+        meta = json.load(fh)
+    meta["extra"]["iter_no"] = 99  # tampered/torn manifest
+    with open(meta_path, "w") as fh:
+        json.dump(meta, fh)
+    assert ck.latest_step() == 1
+    assert ck.restore(2, params)["step"] == 1
+
+
+def test_restore_raises_when_no_checkpoint_verifies(tmp_path):
+    from repro.checkpoint.checkpointing import Checkpointer
+    ck = Checkpointer(str(tmp_path))
+    params = {"w": np.zeros(3, np.float32)}
+    ck.save(1, params, blocking=True)
+    npz = os.path.join(str(tmp_path), "ckpt_00000001.npz")
+    with open(npz, "r+b") as fh:
+        fh.truncate(10)
+    assert ck.latest_step() is None
+    with pytest.raises(FileNotFoundError):
+        ck.restore(1, params)

@@ -96,14 +96,16 @@ def test_reorder_buffer_handles_none_items():
     assert rob.pop() == "b"
 
 
-def test_reorder_buffer_rejects_duplicates():
+def test_reorder_buffer_drops_duplicates():
+    """Speculative resubmission means a task can legitimately complete
+    twice: the first result wins, the loser is dropped (False), and stale
+    completions of already-consumed sequence numbers are dropped too."""
     rob = ReorderBuffer()
-    rob.put(0, "a")
-    with pytest.raises(ValueError, match="duplicate"):
-        rob.put(0, "again")
+    assert rob.put(0, "a") is True
+    assert rob.put(0, "again") is False  # pending duplicate
     assert rob.pop() == "a"
-    with pytest.raises(ValueError, match="duplicate"):
-        rob.put(0, "stale")
+    assert rob.put(0, "stale") is False  # already consumed
+    assert rob.pop() is None and rob.next_seq == 1
 
 
 # ---------------------------------------------------------------------------
