@@ -1,6 +1,6 @@
 PYTHONPATH := src
 
-.PHONY: verify test test-faults lint bench bench-smoke
+.PHONY: verify test test-faults test-mesh lint bench bench-smoke
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -15,6 +15,16 @@ test-faults:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q \
 		$$(python -c "import importlib.util as u; print('--timeout=300 --timeout-method=thread' if u.find_spec('pytest_timeout') else '')") \
 		tests/test_fault_tolerance.py
+
+# Multi-device mesh suite in isolation (shard_map step, sharded feature
+# store, P3 all-to-all, 1/2/4 simulated-device scaling). The scaling tests
+# spawn benchmarks/mesh_child.py, which sets
+# XLA_FLAGS=--xla_force_host_platform_device_count itself — it must be in
+# the child's environment BEFORE jax imports, which is why the sweep never
+# runs in-process.
+test-mesh:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q \
+		tests/test_mesh.py tests/test_config_migration.py
 
 # ruff check = the semantic lint gate (pyflakes/pycodestyle families per
 # pyproject). The per-file `ruff format --check` gate was dropped: the
@@ -34,7 +44,9 @@ bench:
 # bitwise) for the perf trajectory across PRs, then gates the fresh
 # numbers against the committed baseline (>25% NVTPS drop, ANY H2D or
 # densified-HBM bytes increase — pallas_edges must record literal 0 —
-# fails; on >=4-CPU hosts the workers=4 sampling speedup must reach 1.5x).
+# fails; on >=4-CPU hosts the workers=4 sampling speedup must reach 1.5x;
+# the mesh_scaling section must show NVTPS increasing monotonically over
+# 1/2/4 simulated devices with equivalent losses).
 bench-smoke:
 	@cp BENCH_pipeline.json BENCH_pipeline.baseline.json 2>/dev/null || true
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only pipeline
@@ -44,6 +56,7 @@ bench-smoke:
 	d = json.load(open(os.environ.get('BENCH_PIPELINE_JSON', 'BENCH_pipeline.json'))); \
 	print('bench-smoke:', json.dumps(d['layout'], sort_keys=True)); \
 	print('bench-smoke:', json.dumps(d['aggregate_backends'], sort_keys=True)); \
-	print('bench-smoke:', json.dumps(d['feature_cache'], sort_keys=True))"
+	print('bench-smoke:', json.dumps(d['feature_cache'], sort_keys=True)); \
+	print('bench-smoke:', json.dumps(d['mesh_scaling'], sort_keys=True))"
 
 verify: test bench-smoke

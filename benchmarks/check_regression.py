@@ -226,6 +226,35 @@ def compare(baseline: dict, fresh: dict, nvtps_tolerance: float,
                     f"ceiling (recovery path likely waiting out a "
                     f"timeout per fault)")
 
+    # mesh scaling: required-presence contract (its absence means the
+    # multi-device data-parallel measurement silently vanished from the
+    # bench) + monotonic NVTPS over 1/2/4 simulated devices + the
+    # loss-equivalence property. Both are computed in-run by the bench
+    # (monotonicity is best-of-rounds with retry, so a recorded False
+    # means the scaling signal is really gone, not one noisy round).
+    fresh_ms = _get(fresh, "mesh_scaling")
+    if not isinstance(fresh_ms, dict):
+        failures.append(
+            "fresh report lacks the mesh_scaling section (multi-device "
+            "NVTPS-vs-device-count contract cannot be checked)")
+    else:
+        nvtps = fresh_ms.get("nvtps") or {}
+        missing = [str(p) for p in (fresh_ms.get("device_counts") or [])
+                   if str(p) not in nvtps]
+        if missing:
+            failures.append(
+                f"mesh_scaling.nvtps lacks device counts {missing}")
+        if fresh_ms.get("monotonic") is not True:
+            failures.append(
+                f"mesh_scaling: NVTPS not monotonically increasing with "
+                f"device count: {nvtps}")
+        if fresh_ms.get("losses_equivalent") is not True:
+            failures.append(
+                f"mesh_scaling: losses not equivalent across device "
+                f"counts (spread "
+                f"{fresh_ms.get('final_loss_spread')}, losses "
+                f"{fresh_ms.get('losses')})")
+
     cpus = _get(fresh, "sampler_pool.host_cpu_count") or 0
     s41 = _get(fresh, "sampler_pool.speedup_4v1")
     sbest = _get(fresh, "sampler_pool.speedup_best")

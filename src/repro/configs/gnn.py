@@ -5,109 +5,321 @@ target vertices, neighbor fanouts (25, 10), on Reddit / Yelp / Amazon /
 ogbn-products. Dataset stats are from paper Table 4; at laptop scale we train
 on scaled-down synthetic RMAT graphs with the same degree character and use
 the FULL stats for the analytic DSE / simulator benchmarks.
+
+Config layout (the paper's "algorithm + model + platform metadata" split):
+``GNNModelConfig`` holds the model/datapath fields flat and groups the host
+runtime knobs into three nested dataclasses — ``host`` (sampling service),
+``cache`` (HBM feature cache / ring sizing) and ``fault`` (supervised-pool
+fault tolerance) — while ``PlatformConfig`` carries the platform metadata
+(device count, host cores, HBM, bus bandwidths) that the ``repro.gnn.train``
+facade maps onto a trainer.
+
+Config migration (old flat knob -> new home). The old flat keyword arguments
+still construct (and ``dataclasses.replace`` still accepts them), but each
+emits a DeprecationWarning once per process; reads like
+``cfg.num_sampler_workers`` stay silent and permanent:
+
+    ==========================  ============================
+    old flat kwarg              new home
+    ==========================  ============================
+    num_sampler_workers         host.num_sampler_workers
+    balance_policy              host.balance_policy
+    gather_in_workers           host.gather_in_workers
+    worker_affinity             host.worker_affinity
+    cache_capacity              cache.capacity
+    cache_refresh_every         cache.refresh_every
+    ship_rows_cap               cache.ship_rows_cap
+    max_respawns                fault.max_respawns
+    straggler_timeout_s         fault.straggler_timeout_s
+    speculative_sampling        fault.speculative_sampling
+    fault_spec                  fault.fault_spec
+    ==========================  ============================
+
+Old and new spellings are the SAME configuration: a flat construction and
+its nested equivalent compare equal and train bit-identically
+(tests/test_config_migration.py).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import dataclasses
+import warnings
+from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
 
 @dataclass(frozen=True)
+class HostConfig:
+    """Host sampling-service knobs (paper §4.2: the CPU host runs sampling,
+    layout build and feature gathering so p accelerators only ever see
+    ready-to-consume payloads).
+
+    * ``num_sampler_workers`` — 0 = sample in-process (single thread);
+      N >= 1 = spawn N sampler worker processes over a shared-memory graph
+      store (core/sampler_pool.py). Bit-identical training for every value.
+    * ``balance_policy`` — how sampled mini-batches map to devices within a
+      synchronous iteration: "round_robin" keeps the scheduler's static
+      assignment; "load" re-assigns by the per-batch work estimate
+      (vertices + edges traversed + gathered feature rows x dim, Eq. 5).
+    * ``gather_in_workers`` — with the sampling service active, gather each
+      batch's feature rows inside the worker that sampled it and ship only
+      the rows non-resident on the target device through the shared-memory
+      ring. Ignored (a no-op) when ``num_sampler_workers == 0``.
+    * ``worker_affinity`` — pin sampler workers round-robin over the
+      parent's allowed cores (Linux-only, silent no-op elsewhere).
+    """
+
+    num_sampler_workers: int = 0
+    balance_policy: str = "round_robin"
+    gather_in_workers: bool = False
+    worker_affinity: bool = False
+
+
+@dataclass(frozen=True)
+class CacheConfig:
+    """Frequency-driven per-device HBM feature cache + ring sizing (paper §V
+    static cache + PaGraph/HyScale-GNN admission; core/feature_cache.py).
+
+    * ``capacity`` — None = cache OFF: residency is the algorithm's static
+      partition, exactly the pre-cache behavior. An int is the per-device
+      row budget. P3 bypasses the cache entirely.
+    * ``refresh_every`` — admission/eviction cadence: 0 = refresh at epoch
+      boundaries only; K >= 1 = refresh every K synchronous iterations.
+    * ``ship_rows_cap`` — max feature rows one payload may ship through the
+      sampling service's shared-memory ring (None = worst-case layer-0 node
+      capacity). Under the sharded mesh step the same cap bounds the
+      per-batch miss-row segment shipped to each device.
+    """
+
+    capacity: Optional[int] = None
+    refresh_every: int = 0
+    ship_rows_cap: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class FaultConfig:
+    """Supervised sampling-service fault tolerance (core/sampler_pool.py).
+
+    * ``max_respawns`` — lifetime worker-respawn budget before the pool
+      degrades to in-process sampling (slower, never wrong).
+    * ``straggler_timeout_s`` — head-of-line task age that arms speculative
+      re-execution (None = no straggler watch).
+    * ``speculative_sampling`` — master switch for speculation.
+    * ``fault_spec`` — fault-injection spec (core/faults.py grammar;
+      test/bench harness only, never set in real training).
+    """
+
+    max_respawns: int = 2
+    straggler_timeout_s: Optional[float] = None
+    speculative_sampling: bool = True
+    fault_spec: Optional[str] = None
+
+
+@dataclass(frozen=True)
+class PlatformConfig:
+    """The paper's platform metadata: what the user states about the
+    hardware so the framework maps the algorithm onto it (HitGNN §4.1 /
+    HP-GNN's "handful of lines" framing).
+
+    ``repro.gnn.train`` consumes one of these to size the trainer (device
+    count, data-parallel mesh) and the host runtime (sampler workers from
+    ``host_cores``); the simulator/DSE consume the bandwidth numbers via
+    :meth:`to_metadata`.
+    """
+
+    num_devices: int = 1
+    host_cores: Optional[int] = None     # None = os.cpu_count() at use site
+    hbm_bytes_per_device: int = 8 << 30
+    pcie_bw: float = 16e9                # bytes/s per device link
+    host_bw: float = 205e9               # CPU memory bandwidth
+    # Run the synchronous step as a real jax-mesh shard_map over the
+    # devices (core/trainer.py). False = the single-device vmap simulation.
+    data_parallel: bool = False
+
+    def to_metadata(self):
+        """The analytic-model twin (core/dse.PlatformMetadata)."""
+        from repro.core.dse import PlatformMetadata
+        return PlatformMetadata(num_devices=self.num_devices,
+                                pcie_bw=self.pcie_bw, host_bw=self.host_bw)
+
+
+# old flat kwarg -> (nested group field, field inside the group)
+_FLAT_TO_NESTED = {
+    "num_sampler_workers": ("host", "num_sampler_workers"),
+    "balance_policy": ("host", "balance_policy"),
+    "gather_in_workers": ("host", "gather_in_workers"),
+    "worker_affinity": ("host", "worker_affinity"),
+    "cache_capacity": ("cache", "capacity"),
+    "cache_refresh_every": ("cache", "refresh_every"),
+    "ship_rows_cap": ("cache", "ship_rows_cap"),
+    "max_respawns": ("fault", "max_respawns"),
+    "straggler_timeout_s": ("fault", "straggler_timeout_s"),
+    "speculative_sampling": ("fault", "speculative_sampling"),
+    "fault_spec": ("fault", "fault_spec"),
+}
+
+# flat kwargs that already warned this process (once per FIELD, not per call)
+_WARNED_FLAT: set = set()
+
+
+def _reset_deprecation_warnings() -> None:
+    """Test hook: forget which flat kwargs already warned."""
+    _WARNED_FLAT.clear()
+
+
+def nest_flat_kwargs(flat: dict, *, warn: bool = False,
+                     host: Optional[HostConfig] = None,
+                     cache: Optional[CacheConfig] = None,
+                     fault: Optional[FaultConfig] = None) -> dict:
+    """Map old flat runtime kwargs onto the nested config groups.
+
+    Returns ``{"host": ..., "cache": ..., "fault": ...}`` with the flat
+    values applied ON TOP of the given (or default) groups. With
+    ``warn=True`` each flat NAME emits one DeprecationWarning per process —
+    the external-construction shim; internal callers (the trainer's
+    override plumbing) pass ``warn=False``.
+    """
+    groups = {"host": host or HostConfig(), "cache": cache or CacheConfig(),
+              "fault": fault or FaultConfig()}
+    for name, value in flat.items():
+        try:
+            group, fld = _FLAT_TO_NESTED[name]
+        except KeyError:
+            raise TypeError(
+                f"GNNModelConfig got an unexpected keyword argument "
+                f"{name!r}") from None
+        if warn and name not in _WARNED_FLAT:
+            _WARNED_FLAT.add(name)
+            warnings.warn(
+                f"GNNModelConfig({name}=...) is deprecated; pass "
+                f"{group}={type(groups[group]).__name__}({fld}=...) "
+                f"instead (reads like cfg.{name} remain supported)",
+                DeprecationWarning, stacklevel=3)
+        groups[group] = dataclasses.replace(groups[group], **{fld: value})
+    return groups
+
+
+@dataclass(frozen=True, init=False)
 class GNNModelConfig:
-    name: str            # "gcn" | "graphsage" | "gin" | "gat"
+    """Model + datapath fields (flat) plus the grouped host runtime.
+
+    Model fields:
+      name             "gcn" | "graphsage" | "gin" | "gat"
+      num_layers, hidden, fanouts, batch_targets — paper Table 5 shapes.
+
+    Datapath fields:
+      aggregate_backend — which aggregation datapath the forward uses
+        (gnn/models.py):
+        "reference"    — jnp segment_sum scatter-gather (runs everywhere)
+        "pallas"       — block-CSR SpMM kernel (kernels/aggregate.py); the
+                         compact edge-centric layout is precomputed
+                         host-side and the dense tiles are scatter-added in
+                         device HBM inside the jit'd step.
+        "pallas_edges" — edge-streaming SpMM: per-tile edge segments
+                         densified in a VMEM scratch inside the grid step —
+                         zero dense tile bytes in HBM, fwd and bwd.
+        GAT always uses the reference path.
+      kernel_interpret — Pallas execution mode: None = auto-detect
+        (compiled Mosaic on a real TPU backend, interpret elsewhere);
+        True/False pins it.
+
+    Host runtime groups: ``host`` (:class:`HostConfig`), ``cache``
+    (:class:`CacheConfig`), ``fault`` (:class:`FaultConfig`). The old flat
+    kwargs still construct via a deprecation shim (see the module docstring
+    migration table) and read-only attribute access (``cfg.cache_capacity``)
+    is permanent API.
+    """
+
+    name: str
     num_layers: int = 2
     hidden: int = 128
     fanouts: Tuple[int, ...] = (25, 10)  # neighbor sampling sizes per layer
     batch_targets: int = 1024            # |V^t| per mini-batch
-    # Which aggregation datapath the forward uses (gnn/models.py):
-    #   "reference"    — jnp segment_sum scatter-gather (runs everywhere)
-    #   "pallas"       — block-CSR SpMM kernel (kernels/aggregate.py); the
-    #                    compact edge-centric layout is precomputed host-side
-    #                    by the trainer's pipeline stage and the dense tiles
-    #                    are scatter-added in device HBM inside the jit'd
-    #                    step (densify_tiles) before the kernel runs.
-    #   "pallas_edges" — edge-streaming SpMM (aggregate_edges): the layout
-    #                    builder re-sorts the compact triples into per-tile
-    #                    segments and the kernel densifies each 128x128 tile
-    #                    in a VMEM scratch inside the grid step — zero dense
-    #                    tile bytes in HBM, forward and backward. Trains
-    #                    bit-identically per seed to "pallas" in interpret
-    #                    mode.
-    # GAT always uses the reference path (edge softmax weights are
-    # device-computed).
     aggregate_backend: str = "reference"
-    # Pallas execution mode: None = auto-detect (compiled Mosaic on a real
-    # TPU backend, interpret mode elsewhere); True/False pins it — False
-    # forces compilation (hardware validation), True forces the interpreter.
     kernel_interpret: Optional[bool] = None
-    # Host sampling service (paper §4.2: sampling must keep p accelerators
-    # fed, Eq. 5). 0 = sample in-process (single thread); N >= 1 = spawn N
-    # sampler worker processes over a shared-memory graph store
-    # (core/sampler_pool.py). Bit-identical training for every value.
-    num_sampler_workers: int = 0
-    # How sampled mini-batches map to devices within a synchronous
-    # iteration: "round_robin" keeps the scheduler's static assignment;
-    # "load" re-assigns by the per-batch work estimate (vertices + edges
-    # traversed + gathered feature rows x dim, Eq. 5) — heaviest batch to
-    # the least-loaded device.
-    balance_policy: str = "round_robin"
-    # Stage-2 offload (paper §4.2: the host prepares READY-TO-CONSUME
-    # payloads): with the sampling service active, gather each batch's
-    # feature rows inside the worker that sampled it and ship only the
-    # rows non-resident on the target device through the shared-memory
-    # ring — the training thread keeps just device placement. Ignored (a
-    # no-op) when num_sampler_workers == 0; training stays bit-identical
-    # per seed either way.
-    gather_in_workers: bool = False
-    # Pin sampler workers round-robin over the parent's allowed cores
-    # (os.sched_setaffinity; Linux-only, silent no-op elsewhere) so N
-    # gather streams do not migrate across cores/NUMA domains mid-epoch.
-    worker_affinity: bool = False
-    # Frequency-driven per-device HBM feature cache (paper §V static cache +
-    # PaGraph/HyScale-GNN admission; core/feature_cache.py). None = cache
-    # OFF: residency is the algorithm's static partition, exactly the
-    # pre-cache behavior (bit-identical training AND metrics). An int is the
-    # per-device row budget: the cache seeds with the static partition's
-    # highest-out-degree rows up to the budget, counts per-batch accesses,
-    # and periodically promotes hot uncached rows / evicts cold ones —
-    # training math is unchanged by construction (cached rows are device
-    # copies of host rows), only which rows cross the host->device bus.
-    # P3 bypasses the cache entirely (every row already resident as a
-    # feature-dimension slice).
-    cache_capacity: Optional[int] = None
-    # Admission/eviction cadence: 0 = refresh at epoch boundaries only;
-    # K >= 1 = refresh every K synchronous iterations (the admission set is
-    # computed on an async thread one iteration ahead and installed between
-    # iterations; sampler workers handshake on the cache generation).
-    cache_refresh_every: int = 0
-    # Ring sizing: max feature rows one payload may ship through the
-    # sampling service's shared-memory ring. None = the worst-case layer-0
-    # node capacity (every row a miss). Sizing it from a measured miss-row
-    # distribution (core/sampler_pool.suggest_ship_rows_cap) shrinks the
-    # shm footprint per ring slot several-fold; a batch shipping more rows
-    # raises a clear error naming this knob.
-    ship_rows_cap: Optional[int] = None
-    # Supervised sampling service (fault tolerance; core/sampler_pool.py).
-    # A sampler worker that dies is respawned against the existing shared
-    # segments and its in-flight tasks are resubmitted (counter-based RNG
-    # makes the re-executed payloads bit-identical, so recovery is
-    # invisible to training). After max_respawns lifetime deaths the pool
-    # DEGRADES to in-process sampling — training finishes slower instead
-    # of dying.
-    max_respawns: int = 2
-    # Straggler watch: when the head-of-line task has been in flight
-    # longer than this many seconds, speculatively re-execute it on a
-    # healthy worker (first result wins; the reorder buffer drops the
-    # loser). None = no straggler watch.
-    straggler_timeout_s: Optional[float] = None
-    # Master switch for speculative re-execution (straggler_timeout_s is
-    # inert when this is False).
-    speculative_sampling: bool = True
-    # Fault-injection spec (core/faults.py grammar, e.g. "kill@0.0.3" or
-    # "encode_overflow#8"); None falls back to the HITGNN_FAULT_SPEC
-    # environment variable. Test/bench harness only — never set in real
-    # training.
-    fault_spec: Optional[str] = None
+    host: HostConfig = field(default_factory=HostConfig)
+    cache: CacheConfig = field(default_factory=CacheConfig)
+    fault: FaultConfig = field(default_factory=FaultConfig)
+
+    def __init__(self, name: str, num_layers: int = 2, hidden: int = 128,
+                 fanouts: Tuple[int, ...] = (25, 10),
+                 batch_targets: int = 1024,
+                 aggregate_backend: str = "reference",
+                 kernel_interpret: Optional[bool] = None,
+                 host: Optional[HostConfig] = None,
+                 cache: Optional[CacheConfig] = None,
+                 fault: Optional[FaultConfig] = None,
+                 **flat):
+        groups = nest_flat_kwargs(flat, warn=True, host=host, cache=cache,
+                                  fault=fault)
+        object.__setattr__(self, "name", name)
+        object.__setattr__(self, "num_layers", num_layers)
+        object.__setattr__(self, "hidden", hidden)
+        object.__setattr__(self, "fanouts", tuple(fanouts))
+        object.__setattr__(self, "batch_targets", batch_targets)
+        object.__setattr__(self, "aggregate_backend", aggregate_backend)
+        object.__setattr__(self, "kernel_interpret", kernel_interpret)
+        object.__setattr__(self, "host", groups["host"])
+        object.__setattr__(self, "cache", groups["cache"])
+        object.__setattr__(self, "fault", groups["fault"])
+
+    def replace_flat(self, **flat) -> "GNNModelConfig":
+        """``dataclasses.replace`` accepting old flat knob names WITHOUT the
+        deprecation warning — the internal override path (trainer kwargs
+        land here). Nested names ("host", "cache", "fault") and model
+        fields pass straight through."""
+        nested = {k: v for k, v in flat.items() if k not in _FLAT_TO_NESTED}
+        plain_flat = {k: v for k, v in flat.items() if k in _FLAT_TO_NESTED}
+        groups = nest_flat_kwargs(
+            plain_flat, warn=False,
+            host=nested.pop("host", self.host),
+            cache=nested.pop("cache", self.cache),
+            fault=nested.pop("fault", self.fault))
+        return dataclasses.replace(self, **nested, **groups)
+
+    # -- silent read-through compatibility (permanent API) --------------------
+    @property
+    def num_sampler_workers(self) -> int:
+        return self.host.num_sampler_workers
+
+    @property
+    def balance_policy(self) -> str:
+        return self.host.balance_policy
+
+    @property
+    def gather_in_workers(self) -> bool:
+        return self.host.gather_in_workers
+
+    @property
+    def worker_affinity(self) -> bool:
+        return self.host.worker_affinity
+
+    @property
+    def cache_capacity(self) -> Optional[int]:
+        return self.cache.capacity
+
+    @property
+    def cache_refresh_every(self) -> int:
+        return self.cache.refresh_every
+
+    @property
+    def ship_rows_cap(self) -> Optional[int]:
+        return self.cache.ship_rows_cap
+
+    @property
+    def max_respawns(self) -> int:
+        return self.fault.max_respawns
+
+    @property
+    def straggler_timeout_s(self) -> Optional[float]:
+        return self.fault.straggler_timeout_s
+
+    @property
+    def speculative_sampling(self) -> bool:
+        return self.fault.speculative_sampling
+
+    @property
+    def fault_spec(self) -> Optional[str]:
+        return self.fault.fault_spec
 
 
 @dataclass(frozen=True)

@@ -163,6 +163,53 @@ class FeatureStore:
         self.account_p3_full(int(valid.sum()))
         return out
 
+    # -- mesh shard materialization -------------------------------------------
+    def shard_rows(self) -> int:
+        """Row capacity of the per-device HBM shard (max over devices, so
+        the stacked (p, rows, width) matrix is rectangular). Non-P3 this is
+        the largest resident BUFFER (capacity, not live length — a feature
+        cache refills up to capacity); P3 every device holds all V rows."""
+        if any(self.core._all_resident):
+            return self.core.num_vertices
+        return max(self.core.capacities) if self.core.capacities else 0
+
+    def shard_width(self) -> int:
+        """Column width of the per-device shard: full f for row-resident
+        strategies, the (uniform, last-device zero-padded) 1/p feature-dim
+        chunk for P3."""
+        f = self.g.features.shape[1]
+        if any(self.core._all_resident):
+            return max(self.core.slice_width(d) for d in range(self.p))
+        return f
+
+    def build_shard_matrix(self) -> np.ndarray:
+        """Materialize every device's HBM-resident feature block as one
+        (p, shard_rows, shard_width) float32 matrix — the host-side image of
+        the sharded store the mesh trainer ``device_put``s with a
+        ``P("data")`` sharding, so device d's slab lands in device d's
+        memory and stays there across iterations.
+
+        Non-P3: row d holds ``features[resident_ids(d)]`` in sorted-id
+        order, zero-padded to the buffer capacity — the same order
+        ``ResidencyCore.resident_positions`` indexes into. P3: row d holds
+        the device's feature-dimension slice of ALL vertices (zero-padded to
+        the uniform chunk width), the operand of the on-device layer-1
+        all-to-all. Rebuilt (and re-uploaded) whenever a feature-cache
+        refresh changes residency — the mesh path restricts refreshes to
+        epoch boundaries, so this is a per-epoch cost at worst."""
+        rows, width = self.shard_rows(), self.shard_width()
+        out = np.zeros((self.p, rows, width), np.float32)
+        for d in range(self.p):
+            if self.core._all_resident[d]:
+                sl = self.core.feature_slice(d)
+                w = self.core.slice_width(d)
+                out[d, :, :w] = self.g.features[:, sl]
+            else:
+                rid = self.core._resident_ids[d]
+                if len(rid):
+                    out[d, :len(rid)] = self.g.features[rid]
+        return out
+
     def reset_stats(self) -> None:
         """Fresh per-device Eq. 7 accounting. The trainer calls this at
         every epoch start so beta / hit-rate / miss-bytes are PER-EPOCH

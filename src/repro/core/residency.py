@@ -176,6 +176,32 @@ class ResidencyCore:
         pos_clip = np.minimum(pos, len(r) - 1)
         return (pos < len(r)) & (r[pos_clip] == ids)
 
+    def resident_positions(self, device: int, vertex_ids: np.ndarray,
+                           mask: Optional[np.ndarray] = None
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+        """Positions of a batch's rows inside ``device``'s resident buffer.
+
+        Returns ``(pos, hit)``: ``pos[i]`` is the index of ``vertex_ids[i]``
+        in the device's sorted resident-id array (its row in the device-HBM
+        shard built by ``FeatureStore.build_shard_matrix``) and ``hit[i]``
+        is True where the id is resident AND valid. Where ``hit`` is False,
+        ``pos`` is 0 — callers mask the gathered row, so the placeholder
+        index only has to be in bounds. ``all_resident`` devices (P3) index
+        the full feature matrix directly: pos == id."""
+        ids = np.asarray(vertex_ids)
+        valid = (np.ones(len(ids), bool) if mask is None
+                 else np.asarray(mask, bool))
+        if self._all_resident[device]:
+            return (np.where(valid, ids, 0).astype(np.int32), valid.copy())
+        r = self._resident_ids[device]
+        if len(r) == 0:
+            return (np.zeros(len(ids), np.int32),
+                    np.zeros(len(ids), bool))
+        pos = np.searchsorted(r, ids)
+        pos_clip = np.minimum(pos, len(r) - 1)
+        hit = (pos < len(r)) & (r[pos_clip] == ids) & valid
+        return np.where(hit, pos_clip, 0).astype(np.int32), hit
+
     def miss_count(self, device: int, vertex_ids: np.ndarray,
                    mask: Optional[np.ndarray] = None) -> int:
         """How many of the (valid) rows would cross the bus to ``device`` —

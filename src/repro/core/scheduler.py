@@ -173,8 +173,21 @@ class LoadBalancer:
 
 
 def schedule_stats(schedule: List[Assignment], p: int) -> dict:
-    """Iteration count + device utilization (for the WB ablation)."""
+    """Iteration count + device utilization (for the WB ablation).
+
+    ``fill_slots`` counts the idle device slots across the epoch — each one
+    runs a zero-weight fill batch in the synchronous step, and under the
+    mesh trainer that is a real device executing a wasted computation, so
+    the mesh bench reports it alongside the scaling curve.
+    ``per_device_batches`` is the real-batch count per device slot (the
+    static two-stage assignment; the dynamic balancer can still move
+    batches at assembly time)."""
     n_it = max(a.iteration for a in schedule) + 1 if schedule else 0
     slots = n_it * p
+    per_dev = [0] * p
+    for a in schedule:
+        per_dev[a.device] += 1
     return {"iterations": n_it, "batches": len(schedule),
-            "utilization": len(schedule) / slots if slots else 1.0}
+            "utilization": len(schedule) / slots if slots else 1.0,
+            "fill_slots": slots - len(schedule),
+            "per_device_batches": per_dev}

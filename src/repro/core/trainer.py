@@ -49,7 +49,8 @@ from repro.core.partition import Partition, get_partitioner
 from repro.core.feature_cache import FeatureCache
 from repro.core.feature_store import FeatureStore
 from repro.core.pipeline import PipelineStats, PrefetchExecutor
-from repro.core.sampler import NeighborSampler, MiniBatch
+from repro.core.sampler import (NeighborSampler, MiniBatch,
+                                layer_capacities)
 from repro.core.sampler_pool import SamplerPool
 from repro.core import scheduler as sched
 from repro.gnn import models as gnn_models
@@ -63,6 +64,7 @@ from repro.nn.param import materialize
 from repro.optim.adam import AdamW, SGDM
 from repro.optim.schedules import get_schedule
 from repro.distributed import compression
+from repro.distributed.sharding import make_data_mesh, require_data_axis
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 
@@ -74,9 +76,13 @@ ALGORITHMS = {
 }
 
 
-def batch_to_arrays(mb: MiniBatch, feats: np.ndarray) -> dict:
+def batch_to_arrays(mb: MiniBatch, feats: Optional[np.ndarray]) -> dict:
+    # feats=None is the mesh path: the layer-0 block is assembled ON DEVICE
+    # from the residency shard + the batch's index/miss payload, so no
+    # pre-gathered (N_0, f) block rides the stacked pytree at all
+    out = {} if feats is None else {"feats": feats.astype(np.float32)}
     return {
-        "feats": feats.astype(np.float32),
+        **out,
         "edge_src": [np.asarray(a) for a in mb.edge_src],
         "edge_dst": [np.asarray(a) for a in mb.edge_dst],
         "edge_mask": [np.asarray(a) for a in mb.edge_mask],
@@ -104,7 +110,15 @@ class SyncGNNTrainer:
     workload_balancing: bool = True        # paper WB optimization
     host_direct_fetch: bool = True         # paper DC optimization
     grad_compression: bool = False
+    # Multi-device execution: a mesh with a "data" axis of extent
+    # num_devices switches the step to the shard_map path — per-device
+    # feature shards in HBM, genuinely concurrent per-device batches, and a
+    # cross-device gradient psum (P3 additionally runs its layer-1 exchange
+    # as an on-device all_to_all). data_parallel=True builds the mesh from
+    # the process's first num_devices jax devices. mesh=None keeps the
+    # single-device vmap step, bit-identical to the pre-mesh trainer.
     mesh: Optional[jax.sharding.Mesh] = None
+    data_parallel: bool = False
     optimizer_name: str = "adam"
     pipeline: bool = True                  # overlap host stages w/ device step
     prefetch_depth: int = 2
@@ -175,7 +189,10 @@ class SyncGNNTrainer:
         if self.fault_spec is not None:
             overrides["fault_spec"] = self.fault_spec
         if overrides:
-            self.model_cfg = dataclasses.replace(self.model_cfg, **overrides)
+            # replace_flat: the warning-free internal spelling — these are
+            # trainer-level overrides, not user code to be nudged off the
+            # deprecated flat kwargs
+            self.model_cfg = self.model_cfg.replace_flat(**overrides)
         self.num_sampler_workers = self.model_cfg.num_sampler_workers
         self.balance_policy = self.model_cfg.balance_policy
         self.gather_in_workers = (self.model_cfg.gather_in_workers
@@ -216,6 +233,29 @@ class SyncGNNTrainer:
                 self.store.core, self.graph.out_degree(),
                 self.model_cfg.cache_capacity,
                 self.model_cfg.cache_refresh_every)
+        # -- multi-device mesh (tentpole): validate BEFORE any jit so a
+        # phantom-device misconfiguration fails at construction, loudly
+        if self.data_parallel and self.mesh is None:
+            self.mesh = make_data_mesh(self.num_devices)
+        self._shard = None  # per-device HBM feature shard (mesh path)
+        self._miss_cap = 0
+        if self.mesh is not None:
+            require_data_axis(self.mesh, self.num_devices)
+            if self.cache is not None and \
+                    self.model_cfg.cache_refresh_every > 0:
+                raise ValueError(
+                    "mid-epoch cache refresh (cache_refresh_every > 0) is "
+                    "not supported under the sharded mesh step: the device "
+                    "shards upload once per epoch. Use epoch-boundary "
+                    "refresh (cache_refresh_every=0) or drop the mesh.")
+            # static miss-segment cap: the sharded batch ships at most this
+            # many miss rows per device per iteration (shape-stable for
+            # jit). Worst case every layer-0 row misses, so the layer-0
+            # node capacity is always safe; ship_rows_cap tightens it.
+            n_caps, _ = layer_capacities(self.model_cfg)
+            self._miss_cap = (self.model_cfg.ship_rows_cap
+                              if self.model_cfg.ship_rows_cap is not None
+                              else n_caps[0])
         self._iter_no = 0  # global synchronous-iteration counter
         self._epoch_iter = 0  # iterations assembled within the current epoch
         self._pool_stats0: Dict[str, float] = {}  # epoch-start pool stats
@@ -308,10 +348,21 @@ class SyncGNNTrainer:
         ids = self.graph.train_ids[mask]
         return ids if len(ids) else self.graph.train_ids[:1]
 
+    def _upload_shards(self) -> None:
+        """Materialize every device's resident feature block and lay it
+        across the mesh with a P("data") sharding: device d's slab lands in
+        (and stays in) device d's memory — the paper's HBM-resident X_i.
+        Re-run at epoch start when a feature cache changed residency."""
+        mat = self.store.build_shard_matrix()
+        self._shard = jax.device_put(
+            mat, NamedSharding(self.mesh, P("data")))
+
     def _make_step(self):
         cfg = self.model_cfg
         opt = self.optimizer
         use_comp = self.grad_compression
+        if self.mesh is not None:
+            return self._make_mesh_step(cfg, opt, use_comp)
 
         def per_device_loss(params, batch):
             return gnn_models.loss_fn(cfg, params, batch)
@@ -336,6 +387,54 @@ class SyncGNNTrainer:
             out_metrics = {"loss": loss,
                            "acc": (metrics["acc"] * w).sum() / w_sum, **om}
             return new_p, new_s, err, out_metrics
+
+        return step
+
+    def _make_mesh_step(self, cfg, opt, use_comp):
+        """The shard_map step (tentpole): slot d of the stacked batch axis
+        runs on mesh device d against device d's HBM feature shard, as a
+        genuinely per-device computation — layer-0 features are assembled
+        ON DEVICE (resident reads + the shipped miss segment; P3 runs its
+        layer-1 exchange as a real all_to_all) and gradients cross devices
+        through one weight-scaled psum. The weighted-psum mean is exactly
+        the vmap step's weighted mean, so idle-device fill batches (weight
+        0) still contribute nothing; the optimizer update runs outside the
+        shard_map on the replicated gradient."""
+        from jax.experimental.shard_map import shard_map
+        p3 = self.algorithm == "p3"
+        feat_dim = self.graph.features.shape[1]
+
+        def device_grads(params, stacked, repl, vshard):
+            b = dict(jax.tree.map(lambda x: x[0], stacked))
+            shard = vshard[0]
+            if p3:
+                b["feats"] = gnn_models.p3_all_to_all_feats(
+                    shard, repl["ids"], repl["valid"], feat_dim)
+            else:
+                b["feats"] = gnn_models.assemble_device_feats(shard, b)
+            w = b["weight"].astype(jnp.float32)
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda q: gnn_models.loss_fn(cfg, q, b),
+                has_aux=True)(params)
+            w_sum = jnp.maximum(jax.lax.psum(w, "data"), 1.0)
+            grads = jax.tree.map(
+                lambda g: jax.lax.psum(g * w, "data") / w_sum, grads)
+            loss = jax.lax.psum(loss * w, "data") / w_sum
+            acc = jax.lax.psum(metrics["acc"] * w, "data") / w_sum
+            return grads, loss, acc
+
+        sharded_grads = shard_map(
+            device_grads, mesh=self.mesh,
+            in_specs=(P(), P("data"), P(), P("data")),
+            out_specs=(P(), P(), P()), check_rep=False)
+
+        def step(params, opt_state, stacked, repl, vshard, err):
+            grads, loss, acc = sharded_grads(params, stacked, repl, vshard)
+            if use_comp:
+                payload, err = compression.compress_tree(grads, err)
+                grads = compression.decompress_tree(payload)
+            new_p, new_s, om = opt.update(grads, opt_state, params)
+            return new_p, new_s, err, {"loss": loss, "acc": acc, **om}
 
         return step
 
@@ -424,6 +523,46 @@ class SyncGNNTrainer:
         self._pstats.ring_bytes += payload.get("ring_bytes", 0)
         return feats
 
+    def _batch_mesh_payload(self, dev: int, payload: dict) -> dict:
+        """Stage 2 under the mesh: instead of assembling the (N_0, f) block
+        host-side, emit the index payload device ``dev`` assembles it FROM —
+        hit positions into its HBM shard plus the capped miss-row segment
+        (the only feature bytes that cross the bus, exactly the paper's
+        cached-gather traffic). Worker-gathered rows (``gather_in_workers``)
+        slot straight into the miss segment when the worker gathered for
+        this device; a balancer-moved batch re-selects for the actual
+        placement. Accounting matches the host-side ``gather`` bitwise."""
+        mb = payload["minibatch"]
+        t0 = time.perf_counter()
+        ids = np.asarray(mb.nodes[0])
+        valid = np.asarray(mb.node_mask[0], bool)
+        n_valid = int(valid.sum())
+        pos, hit = self.store.core.resident_positions(dev, ids, valid)
+        fpay = payload.get("features")
+        if fpay is not None and fpay["device"] == dev:
+            mpos, mrows = fpay["pos"], fpay["rows"]
+        else:
+            mpos, mrows = self.store.core.select_ship_rows(
+                dev, self.graph.features, ids, valid)
+        self.store.account_rows(dev, n_valid - len(mpos), len(mpos))
+        cap = self._miss_cap
+        if len(mpos) > cap:
+            raise ValueError(
+                f"batch ships {len(mpos)} miss rows to device {dev} but "
+                f"the mesh step's miss segment holds {cap} "
+                f"(ship_rows_cap={self.model_cfg.ship_rows_cap}); raise "
+                f"ship_rows_cap or grow the cache")
+        # pad positions point one past the batch: the on-device scatter
+        # lands them in a discard row (gnn.models.assemble_device_feats)
+        mp = np.full(cap, len(ids), np.int32)
+        mp[:len(mpos)] = mpos
+        mr = np.zeros((cap, self.graph.features.shape[1]), np.float32)
+        mr[:len(mrows)] = mrows
+        self._pstats.gather_s += time.perf_counter() - t0
+        self._pstats.ring_bytes += payload.get("ring_bytes", 0)
+        return {"shard_pos": pos, "shard_hit": hit.astype(np.float32),
+                "miss_pos": mp, "miss_rows": mr}
+
     def _assemble_group(self, assignments: List[sched.Assignment],
                         payloads: List[dict]) -> dict:
         """Stage 2 (gather or placement of worker-gathered rows) + stacking
@@ -432,21 +571,39 @@ class SyncGNNTrainer:
         the scheduler's static assignment bit-exactly; "load" re-assigns by
         the gather-aware Eq. 5 estimate), and the stacked device axis
         follows that mapping."""
+        mesh_active = self.mesh is not None
         loads = [self._batch_load(a, p)
                  for a, p in zip(assignments, payloads)]
         devices = self._balancer.assign(assignments, loads)
         vertices = 0
         slots: List[Optional[dict]] = [None] * self.num_devices
+        slot_mb: List[Optional[MiniBatch]] = [None] * self.num_devices
         order = []  # legacy append order for the round_robin path
+        order_mb: List[MiniBatch] = []
         for dev, payload in zip(devices, payloads):
             mb = payload["minibatch"]
             vertices += mb.vertices_traversed()
-            arrs = batch_to_arrays(mb, self._batch_features(dev, payload))
+            if not mesh_active:
+                arrs = batch_to_arrays(
+                    mb, self._batch_features(dev, payload))
+            elif self.algorithm == "p3":
+                # no feature bytes ride the batch at all: the layer-1
+                # all_to_all reconstructs full rows from the slice shards
+                # on device; every contribution is a local HBM read
+                arrs = batch_to_arrays(mb, None)
+                self.store.account_p3_full(
+                    int(np.asarray(mb.node_mask[0]).sum()))
+                self._pstats.ring_bytes += payload.get("ring_bytes", 0)
+            else:
+                arrs = batch_to_arrays(mb, None)
+                arrs.update(self._batch_mesh_payload(dev, payload))
             if payload["layout"] is not None:
                 arrs.update(payload["layout"])
             slots[dev] = arrs
+            slot_mb[dev] = mb
             order.append(arrs)
-        if self.balance_policy == "round_robin":
+            order_mb.append(mb)
+        if self.balance_policy == "round_robin" and not mesh_active:
             # historical stacking: group order, idle fills appended last
             batches = order
             while len(batches) < self.num_devices:
@@ -455,13 +612,17 @@ class SyncGNNTrainer:
                 batches.append(fill)
         else:
             # device-indexed stacking: slot d holds device d's batch; empty
-            # slots run a zero-weight dup of the last real batch
+            # slots run a zero-weight dup of the last real batch. The mesh
+            # step REQUIRES this ordering (slot d executes on mesh device
+            # d, against device d's shard), so mesh mode uses it for every
+            # balance policy.
             batches = list(slots)
             for d in range(self.num_devices):
                 if batches[d] is None:
                     fill = dict(order[-1])
                     fill["weight"] = np.float32(0.0)
                     batches[d] = fill
+                    slot_mb[d] = order_mb[-1]
         if self.cache is not None:
             # fold this iteration's accesses into the admission counter in
             # CONSUMPTION order (deterministic for any worker count), then
@@ -478,6 +639,14 @@ class SyncGNNTrainer:
         self._epoch_iter += 1
         out = {"stacked": stack_batches(batches), "vertices": vertices,
                "n_batches": len(assignments)}
+        if mesh_active and self.algorithm == "p3":
+            # replicated all_to_all operands: EVERY device needs every
+            # batch's layer-0 ids/masks to serve its feature-dim slice
+            out["repl"] = {
+                "ids": np.stack([np.asarray(m.nodes[0], np.int32)
+                                 for m in slot_mb]),
+                "valid": np.stack([np.asarray(m.node_mask[0], np.float32)
+                                   for m in slot_mb])}
         if (self.checkpointer is not None and self.checkpoint_every > 0
                 and self._epoch_iter % self.checkpoint_every == 0):
             # host state LEADS params: assembly (this prefetch-thread hook)
@@ -506,15 +675,28 @@ class SyncGNNTrainer:
         thread being the first). Outstanding steps are bounded by the
         prefetch queue depth."""
         stacked = prepared["stacked"]
-        if self.mesh is not None:
-            stacked = jax.tree.map(
-                lambda x: jax.device_put(
-                    x, NamedSharding(self.mesh, P("data"))), stacked)
         if self._err is None and self.grad_compression:
             self._err = jax.tree.map(
                 lambda p: jnp.zeros_like(p, jnp.float32), self.params)
-        self.params, self.opt_state, self._err, metrics = self._jit_step(
-            self.params, self.opt_state, stacked, self._err)
+        if self.mesh is not None:
+            # slot d of every stacked leaf lands on mesh device d; the P3
+            # all_to_all operands replicate. The feature shard was uploaded
+            # once (epoch start) and stays in device HBM across iterations.
+            data = NamedSharding(self.mesh, P("data"))
+            repl = NamedSharding(self.mesh, P())
+            stacked = jax.tree.map(
+                lambda x: jax.device_put(x, data), stacked)
+            repl_ops = jax.tree.map(lambda x: jax.device_put(x, repl),
+                                    prepared.get("repl", {}))
+            if self._shard is None:
+                self._upload_shards()
+            (self.params, self.opt_state, self._err,
+             metrics) = self._jit_step(self.params, self.opt_state, stacked,
+                                       repl_ops, self._shard, self._err)
+        else:
+            (self.params, self.opt_state, self._err,
+             metrics) = self._jit_step(self.params, self.opt_state, stacked,
+                                       self._err)
         self.step_no += 1
         if not sync:
             return metrics
@@ -610,6 +792,10 @@ class SyncGNNTrainer:
         self.store.reset_stats()
         if self.cache is not None and not resume:
             self.cache.start_epoch()
+        if self.mesh is not None and self.cache is not None:
+            # epoch-boundary refresh may have changed residency: rebuild
+            # the per-device HBM shards against the new resident sets
+            self._upload_shards()
         if not resume:
             self._balancer = sched.LoadBalancer(self.num_devices,
                                                 self.balance_policy)
@@ -733,6 +919,9 @@ class SyncGNNTrainer:
                 else False,
                 "iterations": n_iter,
                 "utilization": stats["utilization"],
+                "mesh_devices": (self.num_devices if self.mesh is not None
+                                 else 0),
+                "fill_slots": stats["fill_slots"],
                 "vertices_traversed": vertices,
                 "nvtps": vertices / wall if wall > 0 else 0.0,
                 "beta": self.store.beta(),

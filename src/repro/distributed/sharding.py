@@ -114,6 +114,46 @@ def activation_sharding(mesh: Mesh, *axes: Optional[str]) -> NamedSharding:
 
 
 # ---------------------------------------------------------------------------
+# Data-parallel GNN mesh (HitGNN multi-device trainer)
+# ---------------------------------------------------------------------------
+
+def make_data_mesh(num_devices: int) -> Mesh:
+    """A 1-D ``("data",)`` mesh over the first ``num_devices`` jax devices —
+    the multi-FPGA platform the sharded GNN trainer maps the LoadBalancer's
+    per-device batch slots onto. Raises with the simulated-device escape
+    hatch spelled out when the process doesn't have enough devices."""
+    avail = jax.device_count()
+    if num_devices < 1:
+        raise ValueError(f"num_devices must be >= 1, got {num_devices}")
+    if avail < num_devices:
+        raise ValueError(
+            f"data-parallel mesh needs {num_devices} devices but this "
+            f"process has {avail}; on a CPU host simulate devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{num_devices} (set BEFORE jax is imported)")
+    return Mesh(np.array(jax.devices()[:num_devices]), ("data",))
+
+
+def require_data_axis(mesh: Mesh, num_devices: int) -> None:
+    """Validate a user-supplied mesh against the trainer's device count:
+    the mesh must carry a ``"data"`` axis whose extent equals
+    ``num_devices`` (one mesh slot per LoadBalancer device slot). Before
+    this check, an oversized ``num_devices`` silently trained zero-weight
+    fill batches on phantom devices."""
+    if "data" not in mesh.axis_names:
+        raise ValueError(
+            f"trainer mesh must have a 'data' axis; got axes "
+            f"{tuple(mesh.axis_names)}")
+    extent = int(mesh.shape["data"])
+    if extent != num_devices:
+        raise ValueError(
+            f"num_devices={num_devices} does not match the mesh's 'data' "
+            f"axis extent {extent}: the sharded step places batch slot d "
+            f"on mesh device d, so the counts must agree (resize the mesh "
+            f"or pass num_devices={extent})")
+
+
+# ---------------------------------------------------------------------------
 # Ambient mesh context: model code calls ``shard(x, "batch", None, "heads")``
 # which is an identity when no mesh is active (CPU smoke tests), and a
 # with_sharding_constraint under the launcher/dry-run mesh.

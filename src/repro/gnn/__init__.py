@@ -1,0 +1,14 @@
+"""GNN model zoo + the paper's top-level training facade.
+
+``repro.gnn.train`` is the HitGNN "handful of lines" entry point (see
+:mod:`repro.gnn.api`); :mod:`repro.gnn.models` holds the aggregate-update
+model zoo. The facade imports lazily so ``from repro.gnn import models``
+stays cycle-free (the trainer itself imports the model zoo).
+"""
+
+
+def __getattr__(name):
+    if name in ("train", "TrainResult", "evaluate"):
+        from repro.gnn import api
+        return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,101 @@
+"""The paper's "handful of lines" entry point (HitGNN Listing 1 / HP-GNN §3).
+
+HitGNN's pitch is that a user brings THREE things — a training algorithm, a
+model, and the platform metadata — and the framework maps them onto the
+CPU + multi-accelerator machine. This module is that surface:
+
+    from repro.gnn import train
+    from repro.configs.gnn import GNNModelConfig, PlatformConfig
+
+    cfg = GNNModelConfig("graphsage", num_layers=2, hidden=64,
+                         fanouts=(10, 5), batch_targets=256)
+    platform = PlatformConfig(num_devices=4)
+    result = train(cfg, platform, algorithm="distdgl", graph=g, epochs=5)
+
+Everything else — METIS-like/PaGraph/P3 partitioning + feature placement,
+the two-stage balanced schedule, the sampler pool, the (optionally sharded)
+jit'd synchronous step — is derived from those three inputs, exactly the
+paper's framing. ``platform.data_parallel=True`` additionally builds the
+jax device mesh and runs the shard_map step, one mesh device per platform
+device (simulate devices on a CPU host with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from repro.configs.gnn import GNNModelConfig, PlatformConfig
+from repro.core.trainer import ALGORITHMS, SyncGNNTrainer
+from repro.data.graphs import Graph
+
+
+@dataclass
+class TrainResult:
+    """What :func:`train` hands back: the per-epoch metric dicts (loss,
+    acc, nvtps, beta, utilization, ...) plus the live trainer for callers
+    who want to keep stepping, checkpoint, or inspect params. Close it (or
+    use it as a context manager) to tear down the sampler pool."""
+
+    trainer: SyncGNNTrainer
+    epochs: List[dict] = field(default_factory=list)
+
+    @property
+    def final(self) -> dict:
+        return self.epochs[-1] if self.epochs else {}
+
+    @property
+    def params(self):
+        return self.trainer.params
+
+    def close(self) -> None:
+        self.trainer.close()
+
+    def __enter__(self) -> "TrainResult":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def train(model_cfg: GNNModelConfig, platform: PlatformConfig,
+          algorithm: str = "distdgl", *, graph: Graph, epochs: int = 1,
+          lr: float = 1e-2, seed: int = 0, progress=None,
+          **trainer_kwargs) -> TrainResult:
+    """Map (algorithm, model, platform) onto the host + device runtime and
+    train for ``epochs`` epochs.
+
+    ``algorithm`` picks the paper-Table-1 triple (partitioner + feature
+    placement + gather path): ``"distdgl"``, ``"pagraph"`` or ``"p3"``.
+    ``platform`` carries the machine description; ``num_devices`` sizes the
+    partition/schedule and ``data_parallel=True`` makes those devices REAL
+    (mesh + shard_map step). ``progress`` is an optional callback
+    ``(epoch_index, metrics_dict)`` invoked after each epoch. Remaining
+    keyword arguments pass through to :class:`SyncGNNTrainer` (e.g.
+    ``grad_compression=True``, ``checkpointer=...``).
+    """
+    if algorithm not in ALGORITHMS:
+        raise ValueError(f"unknown algorithm {algorithm!r}; expected one "
+                         f"of {tuple(ALGORITHMS)}")
+    trainer = SyncGNNTrainer(
+        graph, model_cfg, num_devices=platform.num_devices,
+        algorithm=algorithm, lr=lr, seed=seed,
+        data_parallel=platform.data_parallel, **trainer_kwargs)
+    result = TrainResult(trainer)
+    try:
+        for e in range(epochs):
+            m = trainer.run_epoch()
+            result.epochs.append(m)
+            if progress is not None:
+                progress(e, m)
+    except BaseException:
+        trainer.close()
+        raise
+    return result
+
+
+def evaluate(result: TrainResult) -> dict:
+    """Convenience: the last epoch's headline numbers."""
+    m = result.final
+    keys = ("loss", "acc", "nvtps", "beta", "utilization", "epoch_time_s")
+    return {k: m[k] for k in keys if k in m}

@@ -189,6 +189,57 @@ def forward(cfg: GNNModelConfig, params, batch) -> jax.Array:
     return h
 
 
+# ---------------------------------------------------------------------------
+# Mesh dataflow: on-device layer-0 feature assembly
+# ---------------------------------------------------------------------------
+#
+# Under the shard_map trainer the layer-0 feature block is no longer shipped
+# pre-assembled from the host: each device holds its residency shard
+# (FeatureStore.build_shard_matrix) in HBM and the batch carries only index
+# payloads (hit positions + the capped miss-row segment), so the full (N_0, f)
+# block is materialized HERE, inside the per-device step body.
+
+def assemble_device_feats(vshard: jax.Array, batch) -> jax.Array:
+    """Row-resident strategies (DistDGL/PaGraph): HBM hits + shipped misses.
+
+    ``vshard`` is this device's (cap, f) resident block; the batch carries
+    ``shard_pos`` (N_0,) positions into it, ``shard_hit`` (N_0,) float mask,
+    and the padded miss segment ``miss_pos`` (M,) / ``miss_rows`` (M, f)
+    where pad entries point one past the batch (row N_0) so the scatter
+    lands in a discard row. Numerically identical to the host-side
+    ``FeatureStore.gather``: hit rows read the shard, miss rows memcpy the
+    shipped block, invalid rows stay zero."""
+    pos, hit = batch["shard_pos"], batch["shard_hit"]
+    mpos, mrows = batch["miss_pos"], batch["miss_rows"]
+    n = pos.shape[0]
+    base = vshard[pos] * hit[:, None].astype(vshard.dtype)
+    out = jnp.zeros((n + 1, vshard.shape[1]), vshard.dtype).at[:n].set(base)
+    out = out.at[mpos].set(mrows)
+    return out[:n]
+
+
+def p3_all_to_all_feats(vshard: jax.Array, ids_all: jax.Array,
+                        valid_all: jax.Array, feat_dim: int,
+                        axis_name: str = "data") -> jax.Array:
+    """P3 layer-1 exchange (paper Listing 3) as a REAL ``all_to_all``.
+
+    ``vshard`` is this device's (V, chunk) feature-dimension slice of every
+    vertex; ``ids_all`` / ``valid_all`` are the (p, N_0) layer-0 vertex ids
+    and masks of ALL devices' batches, replicated so device e can serve its
+    slice for everyone. Device e gathers its chunk for each batch d, the
+    all-to-all transposes the (device, batch) grid so device d receives all
+    p chunks of ITS batch, and the transpose+reshape tiles them back into
+    full (N_0, f) rows (the last device's zero padding falls off the
+    ``[:, :feat_dim]`` crop). Bitwise equal to the host-side
+    ``gather_p3_full`` reconstruction for the same batch."""
+    x = vshard[ids_all]                              # (p, N_0, chunk)
+    x = x * valid_all[..., None].astype(vshard.dtype)
+    x = jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0,
+                           tiled=True)               # x[i] = chunk i of mine
+    n = ids_all.shape[1]
+    return jnp.transpose(x, (1, 0, 2)).reshape(n, -1)[:, :feat_dim]
+
+
 def loss_fn(cfg: GNNModelConfig, params, batch):
     logits = forward(cfg, params, batch).astype(jnp.float32)
     labels = batch["labels"]

@@ -1,0 +1,168 @@
+"""Config-API migration: nested HostConfig/CacheConfig/FaultConfig groups
+must be drop-in equivalent to the deprecated flat kwargs — same construction
+semantics, same training bits — and the deprecation shim must warn exactly
+once per flat field."""
+import dataclasses
+import pickle
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.configs.gnn import (CacheConfig, FaultConfig, GNNModelConfig,
+                               HostConfig, PlatformConfig,
+                               _reset_deprecation_warnings)
+from repro.data.graphs import synthetic_graph
+
+G = synthetic_graph(scale=8, edge_factor=8, feat_dim=16, num_classes=4)
+
+
+def _flat_cfg():
+    return GNNModelConfig("graphsage", num_layers=2, hidden=32,
+                          fanouts=(4, 4), batch_targets=32,
+                          num_sampler_workers=2, balance_policy="load",
+                          gather_in_workers=True, cache_capacity=128,
+                          cache_refresh_every=3, ship_rows_cap=200,
+                          max_respawns=5, straggler_timeout_s=1.5,
+                          speculative_sampling=False)
+
+
+def _nested_cfg():
+    return GNNModelConfig(
+        "graphsage", num_layers=2, hidden=32, fanouts=(4, 4),
+        batch_targets=32,
+        host=HostConfig(num_sampler_workers=2, balance_policy="load",
+                        gather_in_workers=True),
+        cache=CacheConfig(capacity=128, refresh_every=3, ship_rows_cap=200),
+        fault=FaultConfig(max_respawns=5, straggler_timeout_s=1.5,
+                          speculative_sampling=False))
+
+
+class TestFlatNestedEquivalence:
+    def test_flat_equals_nested(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            flat = _flat_cfg()
+        nested = _nested_cfg()
+        assert flat == nested
+        assert hash(flat) == hash(nested)
+
+    def test_flat_readthrough_properties(self):
+        cfg = _nested_cfg()
+        assert cfg.num_sampler_workers == 2
+        assert cfg.balance_policy == "load"
+        assert cfg.gather_in_workers is True
+        assert cfg.worker_affinity is False
+        assert cfg.cache_capacity == 128
+        assert cfg.cache_refresh_every == 3
+        assert cfg.ship_rows_cap == 200
+        assert cfg.max_respawns == 5
+        assert cfg.straggler_timeout_s == 1.5
+        assert cfg.speculative_sampling is False
+        assert cfg.fault_spec is None
+
+    def test_flat_on_top_of_nested_group(self):
+        # a flat kwarg refines the provided group (replace() path)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            cfg = GNNModelConfig(
+                "gcn", host=HostConfig(num_sampler_workers=3),
+                cache_capacity=64)
+        assert cfg.num_sampler_workers == 3
+        assert cfg.cache_capacity == 64
+
+    def test_unknown_kwarg_raises(self):
+        with pytest.raises(TypeError, match="bogus"):
+            GNNModelConfig("gcn", bogus=1)
+
+    def test_dataclasses_replace_nested(self):
+        cfg = _nested_cfg()
+        out = dataclasses.replace(cfg, hidden=64)
+        assert out.hidden == 64 and out.cache_capacity == 128
+
+    def test_dataclasses_replace_flat_kwarg(self):
+        cfg = _nested_cfg()
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            out = dataclasses.replace(cfg, cache_capacity=7)
+        assert out.cache_capacity == 7
+        assert out.num_sampler_workers == 2  # other groups untouched
+
+    def test_replace_flat_is_silent(self):
+        _reset_deprecation_warnings()
+        cfg = _nested_cfg()
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            out = cfg.replace_flat(cache_capacity=9, num_sampler_workers=0)
+        assert out.cache_capacity == 9
+        assert out.num_sampler_workers == 0
+
+    def test_pickle_roundtrip(self):
+        cfg = _nested_cfg()
+        assert pickle.loads(pickle.dumps(cfg)) == cfg
+
+
+class TestDeprecationWarnings:
+    def test_warns_once_per_field(self):
+        _reset_deprecation_warnings()
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            GNNModelConfig("gcn", cache_capacity=8)
+            GNNModelConfig("gcn", cache_capacity=16)  # same field: silent
+            GNNModelConfig("gcn", num_sampler_workers=1)  # new field: warns
+        dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+        assert len(dep) == 2
+        msgs = [str(x.message) for x in dep]
+        assert any("cache_capacity" in m for m in msgs)
+        assert any("num_sampler_workers" in m for m in msgs)
+
+    def test_warning_names_new_home(self):
+        _reset_deprecation_warnings()
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            GNNModelConfig("gcn", cache_capacity=8)
+        assert "CacheConfig" in str(w[0].message)
+        assert "capacity" in str(w[0].message)
+
+    def test_nested_construction_never_warns(self):
+        _reset_deprecation_warnings()
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            _nested_cfg()
+
+
+class TestPlatformConfig:
+    def test_to_metadata(self):
+        pm = PlatformConfig(num_devices=4, pcie_bw=8e9).to_metadata()
+        assert pm.num_devices == 4
+        assert pm.pcie_bw == 8e9
+
+    def test_defaults(self):
+        p = PlatformConfig()
+        assert p.num_devices == 1
+        assert p.data_parallel is False
+
+
+class TestBitwiseIdenticalTraining:
+    def test_flat_and_nested_train_bitwise_identical(self):
+        from repro.core.trainer import SyncGNNTrainer
+        import jax
+
+        def run(cfg):
+            tr = SyncGNNTrainer(G, cfg, num_devices=2,
+                                pipeline=False, seed=3)
+            tr.run_epoch()
+            tr.close()
+            return tr.params
+
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            flat = GNNModelConfig("graphsage", num_layers=2, hidden=16,
+                                  fanouts=(4, 4), batch_targets=16,
+                                  cache_capacity=200)
+        nested = GNNModelConfig("graphsage", num_layers=2, hidden=16,
+                                fanouts=(4, 4), batch_targets=16,
+                                cache=CacheConfig(capacity=200))
+        pf, pn = run(flat), run(nested)
+        for a, b in zip(jax.tree.leaves(pf), jax.tree.leaves(pn)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
