@@ -39,14 +39,18 @@ bench:
 
 # CI smoke: quick host-pipeline benchmark; emits BENCH_pipeline.json
 # (stage times, NVTPS, aggregate-path H2D bytes/iter, sampling-service
-# sweep, and a training exercise of BOTH aggregate backends — "pallas"
-# HBM-densify vs "pallas_edges" in-VMEM edge streaming, losses must match
-# bitwise) for the perf trajectory across PRs, then gates the fresh
-# numbers against the committed baseline (>25% NVTPS drop, ANY H2D or
-# densified-HBM bytes increase — pallas_edges must record literal 0 —
-# fails; on >=4-CPU hosts the workers=4 sampling speedup must reach 1.5x;
-# the mesh_scaling section must show NVTPS increasing monotonically over
-# 1/2/4 simulated devices with equivalent losses).
+# sweep, and a training exercise of ALL THREE aggregate backends —
+# "pallas" HBM-densify vs "pallas_edges" in-VMEM edge streaming vs
+# "pallas_fused" single-pass densify+SpMM+update, losses must match
+# bitwise across the triple) for the perf trajectory across PRs, then
+# gates the fresh numbers against the committed baseline (>25% NVTPS
+# drop, ANY H2D or densified-HBM bytes increase — pallas_edges AND
+# pallas_fused must record literal 0, pallas_fused must also record 0
+# aggregated-intermediate bytes and epoch_s <= pallas — fails; on >=4-CPU
+# hosts the workers=4 sampling speedup must reach 1.5x; the mesh_scaling
+# section must show NVTPS increasing monotonically over 1/2/4 simulated
+# devices with equivalent losses). The printed aggregate_backends line IS
+# the three-backend comparison.
 bench-smoke:
 	@cp BENCH_pipeline.json BENCH_pipeline.baseline.json 2>/dev/null || true
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only pipeline

@@ -13,10 +13,18 @@ Checks (exit code 1 on any failure):
   so ANY increase over the baseline fails.
 * Densified-tile HBM bytes — the per-batch device-HBM footprint of
   scatter-added adjacency tiles is a pure function of the config, so ANY
-  increase per aggregate backend fails; the edge-streaming backend
-  ("pallas_edges", which densifies per-tile in VMEM) must record LITERAL
-  ZERO — any nonzero value means someone reintroduced an HBM tile tensor
-  on that path.
+  increase per aggregate backend fails; BOTH streaming backends
+  ("pallas_edges" and "pallas_fused", which densify per-tile in VMEM)
+  must record LITERAL ZERO — any nonzero value means someone reintroduced
+  an HBM tile tensor on those paths.
+* Fused datapath — ``pallas_fused`` must record LITERAL ZERO aggregated-
+  intermediate bytes (the A @ h block lives only in the kernel's VMEM
+  accumulator, forward and backward), its epoch_s must hold parity or
+  better against the ``pallas`` densify path measured in the same
+  interleaved triple, and the three-backend losses must be bitwise equal.
+* Pipeline speedup — when the pipelined epoch is SLOWER than sequential
+  (speedup < 1.0) on a same-host-class run, print a warning (wall-clock
+  ratio, so never a hard failure).
 * Gather-stage time — the per-epoch stage-2 time left ON the training
   thread with gather_in_workers must not exceed the baseline by more than
   ``--gather-tolerance`` (default 100%: the record is a min-over-rounds of
@@ -93,6 +101,17 @@ def compare(baseline: dict, fresh: dict, nvtps_tolerance: float,
         print(f"check_regression: NVTPS check skipped (baseline host has "
               f"{base_cpus} CPUs, this host {fresh_cpus})")
 
+    # pipelined-vs-sequential speedup below 1.0 means the prefetch
+    # executor made the epoch SLOWER — warn (same host class only: the
+    # ratio is wall-clock on a contended host, and the bench already
+    # damps noise with interleaved best-pair selection), don't fail.
+    fresh_speedup = _get(fresh, "epoch.speedup")
+    if fresh_speedup is not None and fresh_speedup < 1.0 \
+            and base_cpus == fresh_cpus:
+        print(f"check_regression: WARNING: pipelined epoch speedup "
+              f"{fresh_speedup:.2f} < 1.0 (prefetch pipeline slower than "
+              f"sequential on this run)")
+
     base_h2d = _get(baseline, "layout.h2d_bytes_per_iter_compact")
     fresh_h2d = _get(fresh, "layout.h2d_bytes_per_iter_compact")
     if base_h2d is not None and fresh_h2d is not None \
@@ -145,11 +164,12 @@ def compare(baseline: dict, fresh: dict, nvtps_tolerance: float,
             "densified_hbm_bytes_per_batch (pallas_edges zero-HBM "
             "contract cannot be checked)")
     else:
-        if fresh_hbm["pallas_edges"] != 0:
-            failures.append(
-                f"densified-tile HBM bytes for pallas_edges must be 0 "
-                f"(in-VMEM densification), got "
-                f"{fresh_hbm['pallas_edges']}")
+        for backend in ("pallas_edges", "pallas_fused"):
+            if fresh_hbm.get(backend, 1) != 0:
+                failures.append(
+                    f"densified-tile HBM bytes for {backend} must be 0 "
+                    f"(in-VMEM densification), got "
+                    f"{fresh_hbm.get(backend)}")
         if isinstance(base_hbm, dict):
             for backend, fval in fresh_hbm.items():
                 bval = base_hbm.get(backend)
@@ -157,6 +177,43 @@ def compare(baseline: dict, fresh: dict, nvtps_tolerance: float,
                     failures.append(
                         f"densified-tile HBM bytes increased for "
                         f"{backend}: {fval} > baseline {bval}")
+
+    # fused-datapath contracts, both baseline-free (the fresh run alone
+    # carries them): the aggregated intermediate must never touch HBM
+    # under pallas_fused, and the single-pass kernel must hold parity or
+    # better against the HBM-densify path ("pallas") measured in the SAME
+    # interleaved triple — fusing three dispatches into one grid that then
+    # runs slower than the path it replaces is a regression by definition.
+    fresh_interm = _get(
+        fresh, "aggregate_backends.aggregate_intermediate_bytes_per_batch")
+    if not isinstance(fresh_interm, dict) \
+            or "pallas_fused" not in fresh_interm:
+        failures.append(
+            "fresh report lacks aggregate_backends."
+            "aggregate_intermediate_bytes_per_batch (pallas_fused "
+            "zero-intermediate contract cannot be checked)")
+    elif fresh_interm["pallas_fused"] != 0:
+        failures.append(
+            f"aggregated-intermediate HBM bytes for pallas_fused must be "
+            f"0 (VMEM-resident accumulator), got "
+            f"{fresh_interm['pallas_fused']}")
+    agg_epoch = _get(fresh, "aggregate_backends.epoch_s")
+    if not isinstance(agg_epoch, dict) \
+            or "pallas_fused" not in agg_epoch \
+            or "pallas" not in agg_epoch:
+        failures.append(
+            "fresh report lacks aggregate_backends.epoch_s for "
+            "pallas/pallas_fused (fused parity contract cannot be "
+            "checked)")
+    elif agg_epoch["pallas_fused"] > agg_epoch["pallas"]:
+        failures.append(
+            f"pallas_fused epoch_s {agg_epoch['pallas_fused']:.3f} > "
+            f"pallas {agg_epoch['pallas']:.3f} — the single-pass kernel "
+            f"must hold parity or better with the densify path")
+    if _get(fresh, "aggregate_backends.losses_bitwise_equal") is not True:
+        failures.append(
+            "aggregate_backends.losses_bitwise_equal is not True (a "
+            "streaming backend changed the training math)")
 
     # feature cache: required-presence contract (like the pallas_edges
     # zero-HBM record above) + in-run reduction contract + deterministic
@@ -313,7 +370,11 @@ def main() -> int:
           f"miss-bytes {_get(fresh, 'feature_cache.miss_bytes_per_iter.cache') or 0:.0f} B/iter "
           f"vs static {_get(fresh, 'feature_cache.miss_bytes_per_iter.static_partition') or 0:.0f}, "
           f"densified-HBM {hbm.get('pallas', 0)}/"
-          f"{hbm.get('pallas_edges', 0)} B/batch, "
+          f"{hbm.get('pallas_edges', 0)}/{hbm.get('pallas_fused', 0)} "
+          f"B/batch, fused epoch "
+          f"{(_get(fresh, 'aggregate_backends.epoch_s') or {}).get('pallas_fused', 0):.3f}s "
+          f"vs pallas "
+          f"{(_get(fresh, 'aggregate_backends.epoch_s') or {}).get('pallas', 0):.3f}s, "
           f"max recovery overhead "
           f"{max((_get(fresh, 'fault_tolerance.recovery_overhead_s') or {'-': 0.0}).values()):.2f}s, "
           f"pool speedup_4v1 {_get(fresh, 'sampler_pool.speedup_4v1'):.2f})")

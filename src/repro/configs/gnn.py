@@ -217,6 +217,15 @@ class GNNModelConfig:
         "pallas_edges" — edge-streaming SpMM: per-tile edge segments
                          densified in a VMEM scratch inside the grid step —
                          zero dense tile bytes in HBM, fwd and bwd.
+        "pallas_fused" — single-pass fused datapath: one grid streams each
+                         tile's edge segment into VMEM in double-buffered
+                         chunks, densifies in scratch, runs the SpMM, and
+                         applies the layer's update matmul with the weights
+                         VMEM-resident on the final k-step — the aggregated
+                         intermediate never exists in HBM, forward or
+                         backward (the VJP recomputes it). Same
+                         edge-stream layout as "pallas_edges";
+                         bit-identical to it per seed in interpret mode.
         GAT always uses the reference path.
       kernel_interpret — Pallas execution mode: None = auto-detect
         (compiled Mosaic on a real TPU backend, interpret elsewhere);

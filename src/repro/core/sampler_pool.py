@@ -95,7 +95,8 @@ from repro.core.pipeline import ReorderBuffer
 from repro.core.residency import ResidencyCore, SharedResidency
 from repro.core.sampler import MiniBatch, NeighborSampler, layer_capacities
 from repro.data.graphs import Graph, SharedGraphSpec
-from repro.kernels.layout import BLK, build_layer_layouts
+from repro.kernels.layout import (BLK, EDGE_STREAM_BACKENDS,
+                                  build_layer_layouts)
 
 # (partition, epoch, batch_index[, device[, generation]]) — device defaults
 # to the partition; generation is the cache generation the batch must be
@@ -211,7 +212,8 @@ class PayloadCodec:
         # CSR-style segment offsets replace them) for the independently
         # sorted transpose values + the two offsets arrays
         self.edge_stream = (blk_caps is not None
-                            and cfg.aggregate_backend == "pallas_edges")
+                            and cfg.aggregate_backend
+                            in EDGE_STREAM_BACKENDS)
         if blk_caps is not None:
             for l, (n_src, n_dst, max_blk, max_blk_t, e_cap) in \
                     enumerate(blk_caps):
@@ -489,7 +491,8 @@ def _worker_main(worker_id: int, spec: SharedGraphSpec, cfg: GNNModelConfig,
                     layout = build_layer_layouts(
                         mb.edge_src, mb.edge_dst, mb.edge_mask, blk_caps,
                         agg_kind,
-                        edge_stream=cfg.aggregate_backend == "pallas_edges")
+                        edge_stream=(cfg.aggregate_backend
+                                     in EDGE_STREAM_BACKENDS))
                 feats = None
                 if residency is not None:
                     # generation handshake: the task names the cache
@@ -970,7 +973,8 @@ class SamplerPool:
             layout = build_layer_layouts(
                 mb.edge_src, mb.edge_dst, mb.edge_mask, self._blk_caps,
                 self._agg_kind,
-                edge_stream=self._cfg.aggregate_backend == "pallas_edges")
+                edge_stream=(self._cfg.aggregate_backend
+                             in EDGE_STREAM_BACKENDS))
         feats = None
         if self._residency is not None:
             if gen != self._residency.generation:

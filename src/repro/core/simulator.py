@@ -53,6 +53,20 @@ class SimConfig:
     # edge-streaming backend ("pallas_edges") densifies per-tile in VMEM,
     # so it sets this to 0 and the term vanishes.
     densified_hbm_bytes: float = 0.0
+    # Fused-datapath model (aggregate_backend="pallas_fused"): the UNFUSED
+    # backends run densify -> SpMM -> update MLP as separate dispatches, so
+    # the aggregated intermediate (sum over layers of Nd*128 x f_in fp32)
+    # round-trips device DRAM between the SpMM and the update matmul — one
+    # write + one read — and each layer pays an extra kernel-dispatch
+    # latency for the update. The fused grid applies the update on the
+    # final k-step with the weights VMEM-resident, so both terms vanish:
+    # model a backend by setting agg_intermediate_bytes (per-batch
+    # footprint; 0 under "pallas_fused") and update_dispatches (per-batch
+    # fused-away launches, each costing t_update_dispatch on the device
+    # side of the overlap). All default 0.0 => pre-fusion model unchanged.
+    agg_intermediate_bytes: float = 0.0
+    update_dispatches: float = 0.0
+    t_update_dispatch: float = 0.0
     sampling_overlap: bool = True    # pipelined host (prefetch executor)
     # Sampling service (core/sampler_pool.py): the sample + layout-build
     # stages parallelize over this many worker processes; gather stays on
@@ -170,9 +184,14 @@ def simulate_epoch(model: GNNModelConfig, ds: GraphDatasetConfig,
     # device side of the overlap, like the layout H2D payload — and so does
     # the cache-refresh stream installing admitted rows between iterations
     t_densify = 2 * sim.densified_hbm_bytes / pf.fpga.ddr_bw
+    # unfused aggregate->update handoff: the intermediate crosses device
+    # DRAM twice (SpMM write + update read) and each fused-away update
+    # launch pays its dispatch latency — both zero under "pallas_fused"
+    t_agg_intermediate = (2 * sim.agg_intermediate_bytes / pf.fpga.ddr_bw
+                          + sim.update_dispatches * sim.t_update_dispatch)
     t_gnn = (gnn_time()
              + (sim.h2d_layout_bytes + sim.cache_refresh_bytes) / host_share
-             + t_densify)
+             + t_densify + t_agg_intermediate)
     t_ipc = sim.t_ipc if sim.num_sampler_workers > 1 else 0.0
     if sim.gather_in_workers:
         t_host = (sim.t_placement
@@ -221,6 +240,8 @@ def simulate_epoch(model: GNNModelConfig, ds: GraphDatasetConfig,
         "h2d_layout_bytes": sim.h2d_layout_bytes,
         "densified_hbm_bytes": sim.densified_hbm_bytes,
         "t_densify": t_densify,
+        "agg_intermediate_bytes": sim.agg_intermediate_bytes,
+        "t_agg_intermediate": t_agg_intermediate,
         "host_share_gbs": host_share / 1e9,
         "beta": beta,
     }
@@ -265,6 +286,41 @@ def pipeline_speedup(model: GNNModelConfig, ds: GraphDatasetConfig,
                           imbalance, seed)
     return {"sequential": seq, "pipelined": pipe,
             "speedup": seq["epoch_time_s"] / pipe["epoch_time_s"]}
+
+
+def rank_aggregate_backends(model: GNNModelConfig, ds: GraphDatasetConfig,
+                            p: int, beta: float, sim: SimConfig,
+                            h2d_edges_bytes: float,
+                            agg_intermediate_bytes: float,
+                            update_dispatches: float,
+                            t_update_dispatch: float,
+                            imbalance: float = 0.25, seed: int = 0) -> dict:
+    """Modelled epoch time for the three Pallas aggregation datapaths.
+
+    ``sim`` describes the HBM-densify platform ("pallas":
+    ``densified_hbm_bytes`` set, compact H2D payload). "pallas_edges" drops
+    the densified-tile DRAM term (tiles live in one VMEM scratch per grid
+    step) and ships the leaner edge-stream layout, but still round-trips
+    the aggregated intermediate and dispatches the update separately.
+    "pallas_fused" additionally zeroes the intermediate + dispatch terms —
+    the single-pass datapath. The simulator therefore ranks the backends;
+    bench_pipeline asserts the SIGN of each streaming backend's modelled
+    delta vs "pallas" matches the measured one."""
+    from dataclasses import replace
+    unfused = dict(agg_intermediate_bytes=agg_intermediate_bytes,
+                   update_dispatches=update_dispatches,
+                   t_update_dispatch=t_update_dispatch)
+    cfgs = {
+        "pallas": replace(sim, **unfused),
+        "pallas_edges": replace(sim, densified_hbm_bytes=0.0,
+                                h2d_layout_bytes=h2d_edges_bytes, **unfused),
+        "pallas_fused": replace(sim, densified_hbm_bytes=0.0,
+                                h2d_layout_bytes=h2d_edges_bytes,
+                                agg_intermediate_bytes=0.0,
+                                update_dispatches=0.0),
+    }
+    return {name: simulate_epoch(model, ds, p, beta, c, imbalance, seed)
+            for name, c in cfgs.items()}
 
 
 def scaling_curve(model: GNNModelConfig, ds: GraphDatasetConfig,

@@ -54,7 +54,8 @@ from repro.core.sampler import (NeighborSampler, MiniBatch,
 from repro.core.sampler_pool import SamplerPool
 from repro.core import scheduler as sched
 from repro.gnn import models as gnn_models
-from repro.kernels.aggregate import (BLK, block_capacities,
+from repro.kernels.aggregate import (BLK, EDGE_STREAM_BACKENDS,
+                                     block_capacities,
                                      build_layer_layouts,
                                      compact_layout_bytes,
                                      dense_layout_bytes,
@@ -274,7 +275,13 @@ class SyncGNNTrainer:
         self.opt_state = self.optimizer.init(self.params)
         self._err = None  # compression error feedback
         self.step_no = 0
-        self._jit_step = jax.jit(self._make_step())
+        # the stacked per-device batch (argnum 2 in BOTH step signatures) is
+        # rebuilt host-side every iteration and never read after dispatch,
+        # so its device buffers are donated — XLA reuses them for outputs
+        # instead of holding batch + outputs live simultaneously. Params /
+        # opt state / the feature shard are NOT donated (persistent), and
+        # donation cannot change values: tests pin the step bitwise at p=1.
+        self._jit_step = jax.jit(self._make_step(), donate_argnums=(2,))
         # static block-CSR capacities per layer (pallas aggregate backend):
         # one shape per config => one compiled executable across the epoch
         # (kernels/layout.block_capacities — SHARED with the sampler-pool
@@ -310,18 +317,40 @@ class SyncGNNTrainer:
                 and gnn_models.AGG_KIND[self.model_cfg.name] is not None)
 
     def _edge_stream(self) -> bool:
-        return self.model_cfg.aggregate_backend == "pallas_edges"
+        return self.model_cfg.aggregate_backend in EDGE_STREAM_BACKENDS
 
     def densified_hbm_bytes(self) -> int:
         """Transient DEVICE-HBM bytes per batch spent on densified dense
         tile tensors: the full (Nd, max_blk, 128, 128) A + A^T footprint
-        under ``aggregate_backend="pallas"``; ZERO under ``"pallas_edges"``
-        (tiles exist only as one VMEM scratch per grid step) and under the
+        under ``aggregate_backend="pallas"``; ZERO under the streaming
+        backends ``"pallas_edges"`` / ``"pallas_fused"`` (tiles exist only
+        as one VMEM scratch per grid step — and the fused backend keeps the
+        aggregated intermediate out of HBM too) and under the
         reference backend (no tiles at all). Tracked by
         ``BENCH_pipeline.json`` schema 5 and gated by check_regression."""
         if not self._blk_caps or self._edge_stream():
             return 0
         return densified_tile_bytes(self._blk_caps)
+
+    def aggregate_intermediate_bytes(self) -> int:
+        """Per-batch DEVICE-HBM bytes of the AGGREGATED intermediate — the
+        (n_dstb*128, f_in) fp32 layer aggregates the unfused kernel paths
+        ("pallas" / "pallas_edges") hand from the SpMM to the update matmul
+        through device memory (one write + one read each). ZERO under
+        ``"pallas_fused"``: the fused grid applies the update on the final
+        k-step while the aggregate is still in VMEM, forward and backward
+        (the VJP recomputes it). Feeds the simulator's fused-datapath model
+        (SimConfig.agg_intermediate_bytes)."""
+        if (not self._blk_caps
+                or self.model_cfg.aggregate_backend == "pallas_fused"):
+            return 0
+        f_in = self.graph.features.shape[1]
+        total = 0
+        for (_, n_dst, _, _, _) in self._blk_caps:
+            n_dstb = (n_dst + BLK - 1) // BLK
+            total += n_dstb * BLK * f_in * 4
+            f_in = self.model_cfg.hidden
+        return total
 
     def aggregate_h2d_bytes(self, layout: str = "compact") -> int:
         """Per-batch host->device bytes for the aggregate-path layout.
@@ -370,16 +399,28 @@ class SyncGNNTrainer:
         def step(params, opt_state, stacked, err):
             # per-batch loss weights: real batches 1.0, idle-device fill
             # batches 0.0 — the weighted mean keeps sync-SGD semantics equal
-            # to averaging over only the REAL batches of the iteration
+            # to averaging over only the REAL batches of the iteration.
+            # Grads are taken PER DEVICE inside the vmap and combined with
+            # one explicit weighted contraction (mirroring the mesh step's
+            # per-device grads + psum) rather than differentiating the
+            # weighted mean directly: the latter lets jax fold the device
+            # sum into each dw dot_general (one merged contraction), a
+            # reduction regrouping the opaque fused-kernel VJP cannot
+            # reproduce — per-device grads are bitwise identical across all
+            # aggregate backends, so this form keeps the whole step bitwise
+            # at any device count.
             w = stacked["weight"].astype(jnp.float32)
             w_sum = jnp.maximum(w.sum(), 1.0)
 
-            def mean_loss(p):
-                losses, metrics = jax.vmap(
-                    lambda b: per_device_loss(p, b))(stacked)
-                return (losses * w).sum() / w_sum, metrics
-            (loss, metrics), grads = jax.value_and_grad(
-                mean_loss, has_aux=True)(params)
+            def device_val_grad(b):
+                (l, m), g = jax.value_and_grad(
+                    per_device_loss, has_aux=True)(params, b)
+                return l, m, g
+
+            losses, metrics, per_dev = jax.vmap(device_val_grad)(stacked)
+            loss = (losses * w).sum() / w_sum
+            grads = jax.tree.map(
+                lambda g: jnp.tensordot(w, g, axes=1) / w_sum, per_dev)
             if use_comp:
                 payload, err = compression.compress_tree(grads, err)
                 grads = compression.decompress_tree(payload)

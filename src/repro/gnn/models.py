@@ -14,16 +14,18 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.gnn import GNNModelConfig
 from repro.kernels.aggregate import (BLK, aggregate_compact_vjp,
-                                     aggregate_edges_vjp, resolve_interpret)
+                                     aggregate_edges_vjp,
+                                     aggregate_fused_vjp, resolve_interpret)
 from repro.nn.param import PSpec
 
 
 # aggregate_backend values that route through the Pallas SpMM datapath (and
 # therefore need the stage-2b layout arrays in the batch)
-KERNEL_BACKENDS = ("pallas", "pallas_edges")
+KERNEL_BACKENDS = ("pallas", "pallas_edges", "pallas_fused")
 
 
 # Aggregation semantics per model. "mean"/"sum" models can run through the
@@ -31,6 +33,59 @@ KERNEL_BACKENDS = ("pallas", "pallas_edges")
 # host-side); GAT's attention weights are device-computed, so it always uses
 # the reference edge-list path.
 AGG_KIND = {"graphsage": "mean", "gcn": "mean", "gin": "sum", "gat": None}
+
+
+def _mul_host(a, b):
+    """Single-rounding elementwise product, evaluated on the host."""
+    out = np.multiply(np.asarray(a), np.asarray(b))
+    return np.asarray(out, dtype=np.asarray(b).dtype)
+
+
+def _pinned_mul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """``a * b`` with its rounding pinned against XLA FMA contraction.
+
+    XLA CPU freely contracts a multiply into whichever add consumes it as a
+    single-rounding FMA, and the contraction decision depends on the whole
+    surrounding program.  ``lax.optimization_barrier`` does NOT help: the CPU
+    pipeline runs OptimizationBarrierExpander, which deletes the barrier
+    before fusion, and trivial Pallas interpret kernels get inlined the same
+    way.  A host callback is a genuinely opaque custom call, so the product
+    is rounded exactly once no matter what consumes it.
+    """
+    return jax.pure_callback(
+        _mul_host, jax.ShapeDtypeStruct(b.shape, b.dtype), a, b,
+        vectorized=True)
+
+
+@jax.custom_vjp
+def _gin_scaled_self(eps: jax.Array, h_self: jax.Array) -> jax.Array:
+    """GIN's ``(1+eps) * h_self`` with every rounding pinned, fwd and bwd.
+
+    Left visible to XLA, the scale multiply contracts into whichever add
+    consumes it — ``(1+eps)*h + agg`` forward, the dh accumulation and the
+    ``sum(g*h)`` eps-cotangent backward.  The fused-aggregation backend
+    swaps that surrounding program (the add runs inside the Pallas grid), so
+    the same mul+add chain compiles with different roundings and the
+    backends drift by an ulp once eps leaves exactly 0.  Pinning the product
+    (and the cotangent products) to their own rounding makes the value
+    independent of the consumer, keeping all aggregate backends bitwise
+    equal.
+    """
+    return _pinned_mul(1.0 + eps, h_self)
+
+
+def _gin_scaled_self_fwd(eps, h_self):
+    return _gin_scaled_self(eps, h_self), (eps, h_self)
+
+
+def _gin_scaled_self_bwd(res, g):
+    eps, h_self = res
+    dh = _pinned_mul(1.0 + eps, g)
+    de = _pinned_mul(g, h_self).sum().astype(eps.dtype)
+    return de, dh
+
+
+_gin_scaled_self.defvjp(_gin_scaled_self_fwd, _gin_scaled_self_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -139,6 +194,49 @@ def _blockcsr_aggregate(cfg: GNNModelConfig, batch, l: int, h: jax.Array,
     return out[:n_dst].astype(h.dtype)
 
 
+def _fused_aggregate_update(cfg: GNNModelConfig, batch, l: int, h: jax.Array,
+                            n_dst: int, w: jax.Array,
+                            s: jax.Array | None = None) -> jax.Array:
+    """Layer-l ``(A @ h [+ s]) @ w`` through the single-pass fused kernel.
+
+    ``aggregate_backend="pallas_fused"``: one grid streams the tile's edge
+    segment into VMEM (double-buffered DMA), densifies in scratch, runs the
+    SpMM against the feature block, and applies the update matmul with ``w``
+    VMEM-resident on the final k-step — the aggregated intermediate
+    ``(Nd*BLK, F)`` never exists in HBM, forward or backward.
+
+    Bitwise contract vs the unfused ``pallas_edges`` composition
+    (``agg = kernel(h)[:n_dst].astype(h.dtype)``; ``(agg [+ s]) @ w``):
+    the kernel replays the exact edge-stream grid order and fp32
+    accumulator, applies the same ``astype`` at the same point
+    (``z_dtype=h.dtype``), and the row/lane zero-padding is bitwise-neutral
+    for matmuls on this backend (see the design notes in
+    kernels/aggregate.py). Bias + activation epilogues deliberately stay in
+    XLA out here so their gradient reductions keep the unfused bit pattern.
+    ``s`` (the self/residual term added to the aggregate BEFORE the update
+    matmul) is padded AFTER any scaling so its cotangent reduces over
+    exactly the unfused rows."""
+    cols_t = batch["agg_cols_t"][l]
+    n_src_pad = cols_t.shape[0] * BLK
+    h32 = h.astype(jnp.float32)
+    h_pad = jnp.pad(h32, ((0, n_src_pad - h32.shape[0]), (0, 0)))
+    n_dst_pad = batch["agg_cols"][l].shape[0] * BLK
+    has_self = s is not None
+    if has_self:
+        s_pad = jnp.pad(s, ((0, n_dst_pad - s.shape[0]), (0, 0)))
+    else:  # dummy operand: keeps the custom-vjp arg structure static
+        s_pad = jnp.zeros((1, h.shape[1]), h.dtype)
+    b_dummy = jnp.zeros((w.shape[1],), w.dtype)
+    interpret = resolve_interpret(cfg.kernel_interpret)
+    out = aggregate_fused_vjp(
+        batch["agg_tile_off"][l], batch["agg_val"][l],
+        batch["agg_tile_seg"][l], batch["agg_cols"][l],
+        batch["agg_tile_off_t"][l], batch["agg_val_t"][l],
+        batch["agg_tile_seg_t"][l], cols_t, h_pad, w, b_dummy, s_pad,
+        "none", False, has_self, h.dtype, interpret=interpret)
+    return out[:n_dst]
+
+
 def _layer(cfg: GNNModelConfig, p, h, batch, l: int, n_dst: int):
     src, dst = batch["edge_src"][l], batch["edge_dst"][l]
     emask = batch["edge_mask"][l]
@@ -146,22 +244,37 @@ def _layer(cfg: GNNModelConfig, p, h, batch, l: int, n_dst: int):
     use_kernel = (cfg.aggregate_backend in KERNEL_BACKENDS
                   and AGG_KIND.get(cfg.name) is not None
                   and "agg_tile_off" in batch)
+    use_fused = use_kernel and cfg.aggregate_backend == "pallas_fused"
 
     def _agg(kind: str) -> jax.Array:
         if use_kernel:
             return _blockcsr_aggregate(cfg, batch, l, h, n_dst)
         return aggregate(h, src, dst, emask, n_dst, kind)
 
+    def _fused(w, s=None):
+        return _fused_aggregate_update(cfg, batch, l, h, n_dst, w, s)
+
     if cfg.name == "graphsage":
-        agg = _agg("mean")
-        out = h_self @ p["w_self"] + agg @ p["w_neigh"] + p["b"]
+        if use_fused:
+            out = h_self @ p["w_self"] + _fused(p["w_neigh"]) + p["b"]
+        else:
+            agg = _agg("mean")
+            out = h_self @ p["w_self"] + agg @ p["w_neigh"] + p["b"]
     elif cfg.name == "gcn":
-        agg = _agg("mean")
-        out = (agg + h_self) @ p["w"] * 0.5 + p["b"]
+        if use_fused:
+            out = _fused(p["w"], s=h_self) * 0.5 + p["b"]
+        else:
+            agg = _agg("mean")
+            out = (agg + h_self) @ p["w"] * 0.5 + p["b"]
     elif cfg.name == "gin":
-        agg = _agg("sum")
-        z = (1.0 + p["eps"]) * h_self + agg
-        out = jax.nn.relu(z @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+        hs = _gin_scaled_self(p["eps"], h_self)
+        if use_fused:
+            y = _fused(p["w1"], s=hs)
+        else:
+            agg = _agg("sum")
+            z = hs + agg
+            y = z @ p["w1"]
+        out = jax.nn.relu(y + p["b1"]) @ p["w2"] + p["b2"]
     elif cfg.name == "gat":
         hw = h @ p["w"]
         hw_dst = hw[batch["self_idx"][l]]

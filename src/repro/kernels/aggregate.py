@@ -29,6 +29,7 @@ before the Pallas SpMM.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -37,10 +38,11 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.layout import (  # noqa: F401  (re-exported host builders)
-    BLK, block_capacities, build_block_coo_pair, build_block_csr,
-    build_block_csr_pair, build_layer_layouts, compact_layout_bytes,
-    dense_layout_bytes, densified_tile_bytes, densify_tiles_np,
-    edge_stream_layout_bytes)
+    BLK, EDGE_STREAM_BACKENDS, block_capacities, build_block_coo_pair,
+    build_block_csr, build_block_csr_pair, build_layer_layouts,
+    chunk_schedule, compact_layout_bytes, dense_layout_bytes,
+    densified_tile_bytes, densify_tiles_np, edge_stream_layout_bytes)
+from repro.kernels.update_mlp import update_epilogue
 
 
 def densify_tiles(tile_id: jax.Array, tile_off: jax.Array, val: jax.Array,
@@ -64,9 +66,17 @@ def resolve_interpret(override: bool | None = None) -> bool:
     """Pallas execution mode: compiled Mosaic on real TPU, interpret mode
     elsewhere. ``override`` (e.g. ``GNNModelConfig.kernel_interpret``) pins
     the mode explicitly — set False to force compilation, True to force the
-    interpreter even on hardware."""
+    interpreter even on hardware.
+
+    ``HITGNN_COMPILED_KERNELS=1`` in the environment is the explicit
+    compiled-shakedown opt-in: it forces compiled mode everywhere an
+    ``override`` hasn't pinned one, so the compiled-vs-interpret smoke test
+    (tests/test_compiled_kernels.py, auto-skipped off-TPU) and ad-hoc runs
+    on real hardware exercise the Mosaic lowering of every kernel."""
     if override is not None:
         return bool(override)
+    if os.environ.get("HITGNN_COMPILED_KERNELS", "") == "1":
+        return False
     return jax.default_backend() != "tpu"
 
 
@@ -243,8 +253,28 @@ aggregate_compact_vjp.defvjp(_agg_compact_fwd, _agg_compact_bwd)
 EDGE_CHUNK = 128  # edges densified per MXU outer-product step
 
 
+def _densify_scatter(a_tile, off, v, start, end, c, chunk, base):
+    """Interpret-mode chunk densify: scatter the window's edges into the tile.
+
+    ``off`` IS the flat cell offset inside the BLK x BLK tile, so the chunk
+    densifies as a 1D scatter-add — O(chunk) work instead of the
+    chunk x BLK x BLK one-hot contraction the MXU path uses.  Bitwise-equal
+    to that contraction whenever tile cells are single-edge (the sampler's
+    distinct-pair contract): around the one real product the contraction
+    only ever adds +0.0 terms, which are fp32 addition identities for every
+    value the cell can hold (a -0.0 edge value lands as +0.0 on the
+    0.0-initialised cell under both formulations)."""
+    idx = base + jax.lax.broadcasted_iota(jnp.int32, (chunk,), 0)
+    valid = (idx >= start + c * chunk) & (idx < end)
+    tgt = jnp.where(valid, off.reshape(chunk), BLK * BLK)
+    contrib = jnp.where(valid, v.reshape(chunk), 0.0)
+    return a_tile.reshape(-1).at[tgt].add(
+        contrib, mode="drop").reshape(BLK, BLK)
+
+
 def _edges_kernel(cols_ref, seg_ref, off_ref, val_ref, h_ref, o_ref,
-                  acc_ref, *, n_blk: int, chunk: int, n_edges: int):
+                  acc_ref, *, n_blk: int, chunk: int, n_edges: int,
+                  interpret: bool = False):
     del cols_ref  # consumed by the index_map (scalar prefetch)
     i, k = pl.program_id(0), pl.program_id(2)
 
@@ -261,9 +291,12 @@ def _edges_kernel(cols_ref, seg_ref, off_ref, val_ref, h_ref, o_ref,
     def densify_chunk(c, a_tile):
         # clamp the window into bounds; validity below re-masks the overlap
         base = jnp.minimum(start + c * chunk, n_edges - chunk)
-        idx = base + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)
         off = off_ref[0, pl.ds(base, chunk)].reshape(chunk, 1)
         v = val_ref[0, pl.ds(base, chunk)].reshape(chunk, 1)
+        if interpret:
+            return _densify_scatter(a_tile, off, v, start, end, c, chunk,
+                                    base)
+        idx = base + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)
         valid = (idx >= start + c * chunk) & (idx < end)
         rv = jnp.where((off // BLK == lane) & valid, v, 0.0)
         cm = (off % BLK == lane).astype(jnp.float32)
@@ -326,7 +359,7 @@ def aggregate_edges(tile_off: jax.Array, val: jax.Array, seg: jax.Array,
     )
     out = pl.pallas_call(
         functools.partial(_edges_kernel, n_blk=max_blk, chunk=chunk,
-                          n_edges=E),
+                          n_edges=E, interpret=interpret),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_dstb * BLK, F_pad), h_in.dtype),
         interpret=interpret,
@@ -377,3 +410,663 @@ def _agg_edges_bwd(feat_block, interpret, res, g):
 
 
 aggregate_edges_vjp.defvjp(_agg_edges_fwd, _agg_edges_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused single-pass datapath: densify + SpMM + update MLP in one grid
+# ---------------------------------------------------------------------------
+# ``pallas_edges`` holds the zero-densified-HBM record but still runs the
+# layer as separate dispatches: aggregate kernel -> (Nd*BLK, F) intermediate
+# in HBM -> XLA matmul against the update weights. This kernel is HitGNN's
+# full on-chip datapath (and GenGNN's single-pass message passing) on the
+# TPU memory hierarchy: each grid step (i, k) DMAs tile (i, k)'s edge
+# segment from HBM into a two-slot VMEM scratch in ``chunk``-edge windows —
+# window c+1 is prefetched while the MXU densifies window c — densifies the
+# 128x128 adjacency tile via the same outer-product contraction as
+# ``_edges_kernel``, and multiplies it against the feature block into the
+# fp32 row-block accumulator. On the FINAL k-step of each output row-block
+# the update MLP runs right there with its weights resident in VMEM
+# (``update_mlp.update_epilogue`` — the shared update-stage tail), so the
+# aggregated intermediate ``(Nd, BLK, F)`` never exists in HBM.
+#
+# Bitwise contract (the property tests pin it): with ``act="none"`` and no
+# bias — how the GNN layers call it, keeping their bias/activation epilogue
+# in XLA, whose reduce strategy is M-dependent and therefore NOT
+# bitwise-reproducible from padded shapes — the fused layer term is
+# bit-identical in interpret mode to ``pallas_edges`` + the XLA matmul:
+# the aggregation reuses the exact grid order and fp32 accumulator, and XLA
+# CPU matmuls are row/column-independent and zero-padding-neutral (measured
+# properties; see ARCHITECTURE.md "fused stage-2c datapath"). The backward
+# ``dw`` contraction accumulates one partial per 128-row dst block, which
+# matches the unfused single-dot order whenever the dst capacity fits one
+# row block (zero-padded rows are bitwise-neutral); multi-block dst layers
+# get allclose, not bitwise, ``dw``.
+
+def _pad_lanes(x: jax.Array, axis: int) -> jax.Array:
+    """Zero-pad ``axis`` up to a multiple of BLK (MXU lane alignment)."""
+    n = x.shape[axis]
+    pad = -n % BLK
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _stream_densify_tile(seg_ref, off_hbm, val_hbm, obuf, vbuf, osem, vsem,
+                         *, t, chunk: int, n_edges: int,
+                         interpret: bool = False) -> jax.Array:
+    """Densify tile ``t``'s edge segment into a (BLK, BLK) fp32 tile.
+
+    The segment ``[seg[t], seg[t+1])`` streams from HBM through the two-slot
+    VMEM scratch ``(obuf, vbuf)``: the DMA for window c+1 is issued BEFORE
+    the wait on window c, so the copy engine fills one slot while the MXU
+    consumes the other (the double-buffer timeline in ARCHITECTURE.md).
+    The densify math — clamped window base, validity re-mask, one-hot
+    outer-product contraction — is the same chunk recurrence as
+    ``_edges_kernel``, so the produced tile (and everything accumulated
+    from it) is bit-identical to the edge-streaming kernel's.
+
+    Under ``interpret=True`` (the CPU path) the async-copy machinery is a
+    sequential emulation — every start/wait pair costs real work and
+    overlaps nothing — so the windows are read straight off the refs
+    instead. The window base, masking, and contraction are shared, so the
+    two paths produce identical bits; the compiled TPU path keeps the DMA
+    double buffer."""
+    start = seg_ref[0, t]
+    end = seg_ref[0, t + 1]
+    n_chunks = (end - start + chunk - 1) // chunk
+    lane = jax.lax.broadcasted_iota(jnp.int32, (chunk, BLK), 1)
+
+    def _base(c):
+        # clamp the window into bounds; validity below re-masks the overlap
+        return jnp.minimum(start + c * chunk, n_edges - chunk)
+
+    def _copy(c, ref, buf, sem):
+        slot = jax.lax.rem(c, 2)
+        return pltpu.make_async_copy(ref.at[0, pl.ds(_base(c), chunk)],
+                                     buf.at[slot], sem.at[slot])
+
+    if not interpret:
+        @pl.when(n_chunks > 0)
+        def _prefetch_first():
+            _copy(0, off_hbm, obuf, osem).start()
+            _copy(0, val_hbm, vbuf, vsem).start()
+
+    def densify_chunk(c, a_tile):
+        if interpret:
+            off = pl.load(off_hbm, (pl.ds(0, 1),
+                                    pl.ds(_base(c), chunk))).reshape(chunk, 1)
+            v = pl.load(val_hbm, (pl.ds(0, 1),
+                                  pl.ds(_base(c), chunk))).reshape(chunk, 1)
+            return _densify_scatter(a_tile, off, v, start, end, c, chunk,
+                                    _base(c))
+        else:
+            @pl.when(c + 1 < n_chunks)
+            def _prefetch_next():
+                _copy(c + 1, off_hbm, obuf, osem).start()
+                _copy(c + 1, val_hbm, vbuf, vsem).start()
+            _copy(c, off_hbm, obuf, osem).wait()
+            _copy(c, val_hbm, vbuf, vsem).wait()
+            slot = jax.lax.rem(c, 2)
+            off = obuf[slot].reshape(chunk, 1)
+            v = vbuf[slot].reshape(chunk, 1)
+        idx = _base(c) + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)
+        valid = (idx >= start + c * chunk) & (idx < end)
+        rv = jnp.where((off // BLK == lane) & valid, v, 0.0)
+        cm = (off % BLK == lane).astype(jnp.float32)
+        return a_tile + jax.lax.dot_general(
+            rv, cm, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    return jax.lax.fori_loop(0, n_chunks, densify_chunk,
+                             jnp.zeros((BLK, BLK), jnp.float32))
+
+
+def _fused_kernel(*refs, n_blk: int, chunk: int, n_edges: int, act: str,
+                  has_bias: bool, has_self: bool, z_dtype,
+                  interpret: bool = False):
+    (cols_ref, seg_ref, off_hbm, val_hbm, h_ref, w_ref) = refs[:6]
+    rest = list(refs[6:])
+    del cols_ref  # consumed by the index_map (scalar prefetch)
+    b_ref = rest.pop(0) if has_bias else None
+    s_ref = rest.pop(0) if has_self else None
+    o_ref, acc_ref, obuf, vbuf, osem, vsem = rest
+    i, k = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a_tile = _stream_densify_tile(seg_ref, off_hbm, val_hbm, obuf, vbuf,
+                                  osem, vsem, t=i * n_blk + k, chunk=chunk,
+                                  n_edges=n_edges, interpret=interpret)
+    acc_ref[...] += jnp.dot(a_tile, h_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_blk - 1)
+    def _update():
+        # the row-block's aggregate leaves VMEM only THROUGH the update MLP
+        z = acc_ref[...].astype(z_dtype)
+        if has_self:
+            z = z + s_ref[...]
+        y = jnp.dot(z, w_ref[...])
+        b = b_ref[...] if has_bias else None
+        o_ref[...] = update_epilogue(y, b, act).astype(o_ref.dtype)
+
+
+def _fused_bwd_kernel(*refs, n_blk: int, chunk: int, n_edges: int,
+                      act: str, has_bias: bool, has_self: bool, z_dtype,
+                      interpret: bool = False):
+    (cols_ref, seg_ref, off_hbm, val_hbm, h_ref, g_ref) = refs[:6]
+    rest = list(refs[6:])
+    del cols_ref
+    w_ref = rest.pop(0) if act != "none" else None
+    b_ref = rest.pop(0) if act != "none" and has_bias else None
+    s_ref = rest.pop(0) if has_self else None
+    dw_ref = rest.pop(0)
+    db_ref = rest.pop(0) if has_bias else None
+    dy_ref = rest.pop(0) if act != "none" else None
+    acc_ref, dw_acc, obuf, vbuf, osem, vsem = rest[:6]
+    db_acc = rest[6] if has_bias else None
+    i, k = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a_tile = _stream_densify_tile(seg_ref, off_hbm, val_hbm, obuf, vbuf,
+                                  osem, vsem, t=i * n_blk + k, chunk=chunk,
+                                  n_edges=n_edges, interpret=interpret)
+    acc_ref[...] += jnp.dot(a_tile, h_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_blk - 1)
+    def _grads():
+        # recompute the MLP pre-activation from the VMEM aggregate — it was
+        # never saved (and never touched HBM) in the forward
+        z = acc_ref[...].astype(z_dtype)
+        if has_self:
+            z = z + s_ref[...]
+        if act == "none":
+            dy = g_ref[...]
+        else:
+            y = jnp.dot(z, w_ref[...])
+            if has_bias:
+                y = y + b_ref[...].astype(jnp.float32)[None, :]
+            if act == "relu":
+                dy = g_ref[...] * (y > 0.0).astype(g_ref.dtype)
+            elif act == "gelu":
+                dy = g_ref[...] * jax.grad(
+                    lambda q: jax.nn.gelu(q).sum())(y).astype(g_ref.dtype)
+            else:
+                raise ValueError(f"unknown activation: {act!r}")
+            dy_ref[...] = dy.astype(dy_ref.dtype)
+        # dw partial for this row block; the first block ASSIGNS (so a
+        # single-block dst — the bitwise-pinned case — is one contraction,
+        # not 0 + partial)
+        partial = jax.lax.dot_general(z, dy, (((0,), (0,)), ((), ())))
+
+        @pl.when(i == 0)
+        def _first():
+            dw_acc[...] = partial.astype(jnp.float32)
+
+        @pl.when(i != 0)
+        def _accum():
+            dw_acc[...] += partial.astype(jnp.float32)
+
+        if has_bias:
+            dbp = jnp.sum(dy.astype(jnp.float32), axis=0, keepdims=True)
+
+            @pl.when(i == 0)
+            def _db_first():
+                db_acc[...] = dbp
+
+            @pl.when(i != 0)
+            def _db_accum():
+                db_acc[...] += dbp
+
+        @pl.when(i == pl.num_programs(0) - 1)
+        def _emit():
+            dw_ref[...] = dw_acc[...].astype(dw_ref.dtype)
+            if has_bias:
+                db_ref[...] = db_acc[...].astype(db_ref.dtype)
+
+
+def _fused_operands(tile_off, val, seg, cols, h_in, w, b, s, edge_chunk,
+                    interpret=False):
+    """Shared fwd/bwd operand prep: lane-pad the MLP operands and shape the
+    edge stream for the HBM-resident (memory_space=ANY) DMA source.
+
+    Lane padding exists only for Mosaic's 128-lane tiling; interpret mode
+    accepts any block width, and the pad columns are all-zero (bitwise
+    neutral in every contraction), so the CPU path skips them — at F=64
+    that halves the per-grid-step copy and dot volume."""
+    E = tile_off.shape[0]
+    chunk = min(edge_chunk, E)
+    if interpret:
+        h_k, w_k, b_k, s_k = h_in, w, b, s
+    else:
+        h_k = _pad_lanes(h_in, 1)
+        w_k = _pad_lanes(_pad_lanes(w, 0), 1)
+        b_k = _pad_lanes(b, 0) if b is not None else None
+        s_k = _pad_lanes(s, 1) if s is not None else None
+    F_pad = h_k.shape[1]
+    off2 = tile_off.reshape(1, E).astype(jnp.int32)
+    val2 = val.reshape(1, E).astype(jnp.float32)
+    seg2 = seg.reshape(1, -1)
+    return chunk, h_k, F_pad, w_k, b_k, s_k, off2, val2, seg2
+
+
+def aggregate_fused(tile_off: jax.Array, val: jax.Array, seg: jax.Array,
+                    cols: jax.Array, h_in: jax.Array, w: jax.Array,
+                    b: jax.Array | None = None, s: jax.Array | None = None,
+                    *, act: str = "none", z_dtype=None,
+                    edge_chunk: int = EDGE_CHUNK, interpret: bool = True
+                    ) -> jax.Array:
+    """out = act((A @ h_in [+ s]) @ w [+ b]) in ONE Pallas grid.
+
+    A streams from the per-tile edge segments (``tile_off``/``val``/``seg``
+    as in ``aggregate_edges``); ``w`` (F, N) and optional ``b`` (N,) are the
+    update-MLP parameters, resident in VMEM for the whole grid; optional
+    ``s`` (n_dstb*BLK, F) is an additive self/skip term folded in before
+    the MLP (GCN's ``agg + h_self``, GIN's ``(1+eps)*h_self + agg``).
+    ``z_dtype`` is the dtype the row-block aggregate is cast to before the
+    MLP matmul (default ``h_in.dtype``) — it mirrors the unfused path's
+    ``agg.astype(h.dtype)`` so mixed-precision callers keep bitwise parity.
+    Returns (n_dstb * BLK, N). The aggregated intermediate exists only as
+    the kernel's fp32 VMEM accumulator — never in HBM."""
+    n_dstb, max_blk = cols.shape
+    F = h_in.shape[1]
+    N = w.shape[1]
+    E = tile_off.shape[0]
+    if z_dtype is None:
+        z_dtype = h_in.dtype
+    out_dtype = jnp.result_type(z_dtype, w.dtype)
+    if E == 0:  # zero-capacity layer: mirror the unfused XLA composition
+        z = jnp.zeros((n_dstb * BLK, F), z_dtype)
+        if s is not None:
+            z = z + s
+        return update_epilogue(jnp.dot(z, w), b, act).astype(out_dtype)
+    chunk, h_k, F_pad, w_k, b_k, s_k, off2, val2, seg2 = _fused_operands(
+        tile_off, val, seg, cols, h_in, w, b, s, edge_chunk,
+        interpret=interpret)
+    N_pad = w_k.shape[1]
+    has_bias, has_self = b is not None, s is not None
+
+    in_specs = [
+        pl.BlockSpec((1, seg2.shape[1]), lambda i, k, cols: (0, 0)),
+        pl.BlockSpec(memory_space=pltpu.ANY),  # tile_off: DMA'd per chunk
+        pl.BlockSpec(memory_space=pltpu.ANY),  # val: DMA'd per chunk
+        pl.BlockSpec((BLK, F_pad), lambda i, k, cols: (cols[i, k], 0)),
+        pl.BlockSpec((F_pad, N_pad), lambda i, k, cols: (0, 0)),
+    ]
+    operands = [seg2, off2, val2, h_k, w_k]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((N_pad,), lambda i, k, cols: (0,)))
+        operands.append(b_k)
+    if has_self:
+        in_specs.append(pl.BlockSpec((BLK, F_pad), lambda i, k, cols: (i, 0)))
+        operands.append(s_k)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_dstb, max_blk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((BLK, N_pad), lambda i, k, cols: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((BLK, F_pad), jnp.float32),   # row-block aggregate
+            pltpu.VMEM((2, chunk), jnp.int32),       # off double buffer
+            pltpu.VMEM((2, chunk), jnp.float32),     # val double buffer
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, n_blk=max_blk, chunk=chunk,
+                          n_edges=E, act=act, has_bias=has_bias,
+                          has_self=has_self, z_dtype=z_dtype,
+                          interpret=interpret),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_dstb * BLK, N_pad), out_dtype),
+        interpret=interpret,
+    )(cols, *operands)
+    return out[:, :N] if N_pad != N else out
+
+
+def _fused_bwd_call(tile_off, val, seg, cols, h_in, g, w, b, s, *, act,
+                    z_dtype, edge_chunk, interpret):
+    """Backward recompute pass: streams the SAME A segments through the same
+    grid, rebuilds each row-block aggregate (and, for activated MLPs, the
+    pre-activation) in VMEM, and contracts it against the incoming cotangent.
+    Returns (dw (F, N), db (N,) | None, dy (n_dstb*BLK, N) | None)."""
+    n_dstb, max_blk = cols.shape
+    F = h_in.shape[1]
+    N = w.shape[1]
+    E = tile_off.shape[0]
+    chunk, h_k, F_pad, w_k, b_k, s_k, off2, val2, seg2 = _fused_operands(
+        tile_off, val, seg, cols, h_in, w, b, s, edge_chunk,
+        interpret=interpret)
+    N_pad = w_k.shape[1]
+    has_bias, has_self = b is not None, s is not None
+    g_k = g if interpret else _pad_lanes(g, 1)
+
+    in_specs = [
+        pl.BlockSpec((1, seg2.shape[1]), lambda i, k, cols: (0, 0)),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+        pl.BlockSpec((BLK, F_pad), lambda i, k, cols: (cols[i, k], 0)),
+        pl.BlockSpec((BLK, N_pad), lambda i, k, cols: (i, 0)),
+    ]
+    operands = [seg2, off2, val2, h_k, g_k]
+    if act != "none":
+        in_specs.append(pl.BlockSpec((F_pad, N_pad),
+                                     lambda i, k, cols: (0, 0)))
+        operands.append(w_k)
+        if has_bias:
+            in_specs.append(pl.BlockSpec((N_pad,), lambda i, k, cols: (0,)))
+            operands.append(b_k)
+    if has_self:
+        in_specs.append(pl.BlockSpec((BLK, F_pad), lambda i, k, cols: (i, 0)))
+        operands.append(s_k)
+
+    out_specs = [pl.BlockSpec((F_pad, N_pad), lambda i, k, cols: (0, 0))]
+    out_shapes = [jax.ShapeDtypeStruct((F_pad, N_pad), jnp.float32)]
+    if has_bias:
+        out_specs.append(pl.BlockSpec((1, N_pad), lambda i, k, cols: (0, 0)))
+        out_shapes.append(jax.ShapeDtypeStruct((1, N_pad), jnp.float32))
+    if act != "none":
+        out_specs.append(pl.BlockSpec((BLK, N_pad),
+                                      lambda i, k, cols: (i, 0)))
+        out_shapes.append(jax.ShapeDtypeStruct((n_dstb * BLK, N_pad),
+                                               g.dtype))
+
+    scratch = [
+        pltpu.VMEM((BLK, F_pad), jnp.float32),
+        pltpu.VMEM((F_pad, N_pad), jnp.float32),
+        pltpu.VMEM((2, chunk), jnp.int32),
+        pltpu.VMEM((2, chunk), jnp.float32),
+        pltpu.SemaphoreType.DMA((2,)),
+        pltpu.SemaphoreType.DMA((2,)),
+    ]
+    if has_bias:
+        scratch.append(pltpu.VMEM((1, N_pad), jnp.float32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_dstb, max_blk),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch,
+    )
+    outs = pl.pallas_call(
+        functools.partial(_fused_bwd_kernel, n_blk=max_blk, chunk=chunk,
+                          n_edges=E, act=act, has_bias=has_bias,
+                          has_self=has_self, z_dtype=z_dtype,
+                          interpret=interpret),
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(cols, *operands)
+    outs = list(outs)
+    dw = outs.pop(0)[:F, :N]
+    db = outs.pop(0)[0, :N] if has_bias else None
+    dy = outs.pop(0)[:, :N] if act != "none" else None
+    return dw, db, dy
+
+
+def _fused_bwd_merged_kernel(*refs, n_blk: int, n_blk_t: int, chunk: int,
+                             chunk_t: int, n_edges: int, n_edges_t: int,
+                             has_bias: bool, has_self: bool, z_dtype,
+                             interpret: bool = False):
+    """Single-dst-block backward: dw recompute AND dh in ONE grid pass.
+
+    With one destination row block (``n_dstb == 1``, the bitwise-pinned
+    regime) every source block is touched by at most one tile, so the
+    k-step that re-streams tile ``(0, k)`` for the z recompute can ALSO
+    emit the dh row block of that tile's source block ``cols[0, k]`` —
+    the two backward passes collapse into one grid.  The dh block replays
+    the edge-streaming kernel's recurrence verbatim (same TRANSPOSED
+    segments, same 0-initialised accumulate over all ``n_blk_t`` slots of
+    the block's transposed row), so its bits match ``aggregate_edges`` for
+    any edge multiplicity.  Padded ``cols`` slots re-derive the same block
+    from the same transposed segments — duplicate writes are idempotent.
+    Source blocks no tile touches are masked to +0.0 by the caller
+    (exactly the reference's zero-segment output)."""
+    (cols_ref, seg_ref, off_hbm, val_hbm, seg_t_ref, offt_hbm, valt_hbm,
+     h_ref, g_ref, dz_ref) = refs[:10]
+    rest = list(refs[10:])
+    s_ref = rest.pop(0) if has_self else None
+    dw_ref = rest.pop(0)
+    db_ref = rest.pop(0) if has_bias else None
+    dh_ref = rest.pop(0)
+    (acc_ref, obuf, vbuf, osem, vsem,
+     obuf2, vbuf2, osem2, vsem2) = rest
+    i, k = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a_tile = _stream_densify_tile(seg_ref, off_hbm, val_hbm, obuf, vbuf,
+                                  osem, vsem, t=i * n_blk + k, chunk=chunk,
+                                  n_edges=n_edges, interpret=interpret)
+    acc_ref[...] += jnp.dot(a_tile, h_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    src_blk = cols_ref[i, k]
+    dh_acc = jnp.zeros_like(dh_ref[...])
+    for k2 in range(n_blk_t):
+        at_tile = _stream_densify_tile(seg_t_ref, offt_hbm, valt_hbm,
+                                       obuf2, vbuf2, osem2, vsem2,
+                                       t=src_blk * n_blk_t + k2,
+                                       chunk=chunk_t, n_edges=n_edges_t,
+                                       interpret=interpret)
+        dh_acc = dh_acc + jnp.dot(at_tile, dz_ref[...],
+                                  preferred_element_type=jnp.float32)
+    dh_ref[...] = dh_acc.astype(dh_ref.dtype)
+
+    @pl.when(k == n_blk - 1)
+    def _grads():
+        z = acc_ref[...].astype(z_dtype)
+        if has_self:
+            z = z + s_ref[...]
+        dy = g_ref[...]
+        dw_ref[...] = jax.lax.dot_general(
+            z, dy, (((0,), (0,)), ((), ()))).astype(dw_ref.dtype)
+        if has_bias:
+            db_ref[...] = jnp.sum(dy.astype(jnp.float32), axis=0,
+                                  keepdims=True).astype(db_ref.dtype)
+
+
+def _fused_bwd_merged_call(tile_off, val, seg, cols, tile_off_t, val_t,
+                           seg_t, cols_t, h_in, g, dz32, w, b, s, *,
+                           z_dtype, edge_chunk, interpret):
+    """Single-pass backward for the ``n_dstb == 1`` / ``act == "none"``
+    case: one grid computes dw (z recompute off the FORWARD segments) and
+    dh (the TRANSPOSED segments' edge-streaming recurrence, inlined per
+    source block).  Returns (dw (F, N), db (N,) | None, dh (n_src, F))."""
+    n_dstb, max_blk = cols.shape
+    max_blk_t = cols_t.shape[1]
+    F = h_in.shape[1]
+    N = w.shape[1]
+    E = tile_off.shape[0]
+    E_t = tile_off_t.shape[0]
+    chunk, h_k, F_pad, w_k, b_k, s_k, off2, val2, seg2 = _fused_operands(
+        tile_off, val, seg, cols, h_in, w, b, s, edge_chunk,
+        interpret=interpret)
+    N_pad = w_k.shape[1]
+    has_bias, has_self = b is not None, s is not None
+    g_k = g if interpret else _pad_lanes(g, 1)
+    dz_k = dz32 if interpret else _pad_lanes(dz32, 1)
+    chunk_t = min(edge_chunk, E_t)
+    off2_t = tile_off_t.reshape(1, E_t).astype(jnp.int32)
+    val2_t = val_t.reshape(1, E_t).astype(jnp.float32)
+    seg2_t = seg_t.reshape(1, -1)
+    n_srcb = h_k.shape[0] // BLK
+
+    in_specs = [
+        pl.BlockSpec((1, seg2.shape[1]), lambda i, k, cols: (0, 0)),
+        pl.BlockSpec(memory_space=pltpu.ANY),  # fwd tile_off
+        pl.BlockSpec(memory_space=pltpu.ANY),  # fwd val
+        pl.BlockSpec((1, seg2_t.shape[1]), lambda i, k, cols: (0, 0)),
+        pl.BlockSpec(memory_space=pltpu.ANY),  # transposed tile_off
+        pl.BlockSpec(memory_space=pltpu.ANY),  # transposed val
+        pl.BlockSpec((BLK, F_pad), lambda i, k, cols: (cols[i, k], 0)),
+        pl.BlockSpec((BLK, N_pad), lambda i, k, cols: (i, 0)),
+        pl.BlockSpec((BLK, F_pad), lambda i, k, cols: (i, 0)),
+    ]
+    operands = [seg2, off2, val2, seg2_t, off2_t, val2_t, h_k, g_k, dz_k]
+    if has_self:
+        in_specs.append(pl.BlockSpec((BLK, F_pad), lambda i, k, cols: (i, 0)))
+        operands.append(s_k)
+
+    out_specs = [pl.BlockSpec((F_pad, N_pad), lambda i, k, cols: (0, 0))]
+    out_shapes = [jax.ShapeDtypeStruct((F_pad, N_pad), jnp.float32)]
+    if has_bias:
+        out_specs.append(pl.BlockSpec((1, N_pad), lambda i, k, cols: (0, 0)))
+        out_shapes.append(jax.ShapeDtypeStruct((1, N_pad), jnp.float32))
+    out_specs.append(pl.BlockSpec((BLK, F_pad),
+                                  lambda i, k, cols: (cols[i, k], 0)))
+    out_shapes.append(jax.ShapeDtypeStruct((n_srcb * BLK, F_pad),
+                                           jnp.float32))
+
+    scratch = [
+        pltpu.VMEM((BLK, F_pad), jnp.float32),
+        pltpu.VMEM((2, chunk), jnp.int32),
+        pltpu.VMEM((2, chunk), jnp.float32),
+        pltpu.SemaphoreType.DMA((2,)),
+        pltpu.SemaphoreType.DMA((2,)),
+        pltpu.VMEM((2, chunk_t), jnp.int32),
+        pltpu.VMEM((2, chunk_t), jnp.float32),
+        pltpu.SemaphoreType.DMA((2,)),
+        pltpu.SemaphoreType.DMA((2,)),
+    ]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_dstb, max_blk),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch,
+    )
+    outs = pl.pallas_call(
+        functools.partial(_fused_bwd_merged_kernel, n_blk=max_blk,
+                          n_blk_t=max_blk_t, chunk=chunk, chunk_t=chunk_t,
+                          n_edges=E, n_edges_t=E_t, has_bias=has_bias,
+                          has_self=has_self, z_dtype=z_dtype,
+                          interpret=interpret),
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(cols, *operands)
+    outs = list(outs)
+    dw = outs.pop(0)[:F, :N]
+    db = outs.pop(0)[0, :N] if has_bias else None
+    dh_raw = outs.pop(0)[:, :F]
+    # untouched source blocks never get a grid-step write; the reference's
+    # zero-segment recurrence leaves them at exactly +0.0
+    covered = jnp.zeros((n_srcb,), bool).at[cols[0]].set(True, mode="drop")
+    dh = jnp.where(jnp.repeat(covered, BLK)[:, None], dh_raw, 0.0)
+    return dw, db, dh
+
+
+# Differentiable wrapper. ``b`` and ``s`` are ALWAYS passed (dummy arrays
+# when ``has_bias``/``has_self`` are off) so the cotangent structure stays
+# static; the flags — not array identity — decide what the kernels consume.
+# Backward strategy (mirrors the unfused composition op-for-op so the
+# bitwise contract holds):
+#   dy = g                     (act="none"; else recomputed in-kernel)
+#   dz = dot_general(dy, w)    (one XLA dot — row-independent of padding)
+#   dh = A^T @ dz              (the SAME edge-streaming grid, transposed
+#                               segments — aggregate_edges)
+#   ds = dz
+#   dw = sum_i z_i^T dy_i      (in-kernel recompute of z, per-row-block)
+#   db = sum_rows dy           (in-kernel, only when the bias is fused)
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(12, 13, 14, 15, 16, 17))
+def aggregate_fused_vjp(tile_off: jax.Array, val: jax.Array, seg: jax.Array,
+                        cols: jax.Array, tile_off_t: jax.Array,
+                        val_t: jax.Array, seg_t: jax.Array,
+                        cols_t: jax.Array, h_in: jax.Array, w: jax.Array,
+                        b: jax.Array, s: jax.Array, act: str = "none",
+                        has_bias: bool = False, has_self: bool = False,
+                        z_dtype=None, edge_chunk: int = EDGE_CHUNK,
+                        interpret: bool = True) -> jax.Array:
+    """Differentiable ``act((A @ h [+ s]) @ w [+ b])``, A in segment form."""
+    return aggregate_fused(tile_off, val, seg, cols, h_in, w,
+                           b if has_bias else None,
+                           s if has_self else None, act=act,
+                           z_dtype=z_dtype, edge_chunk=edge_chunk,
+                           interpret=interpret)
+
+
+def _fused_fwd(tile_off, val, seg, cols, tile_off_t, val_t, seg_t, cols_t,
+               h_in, w, b, s, act, has_bias, has_self, z_dtype, edge_chunk,
+               interpret):
+    out = aggregate_fused_vjp(tile_off, val, seg, cols, tile_off_t, val_t,
+                              seg_t, cols_t, h_in, w, b, s, act, has_bias,
+                              has_self, z_dtype, edge_chunk, interpret)
+    return out, (tile_off, val, seg, cols, tile_off_t, val_t, seg_t, cols_t,
+                 h_in, w, b, s)
+
+
+def _fused_bwd(act, has_bias, has_self, z_dtype, edge_chunk, interpret,
+               res, g):
+    (tile_off, val, seg, cols, tile_off_t, val_t, seg_t, cols_t,
+     h_in, w, b, s) = res
+    zd = h_in.dtype if z_dtype is None else z_dtype
+    n_dstb = cols.shape[0]
+    F = h_in.shape[1]
+    if tile_off.shape[0] == 0:
+        # zero-capacity layer: A is empty and independent of h, so the
+        # cotangents are exactly the XLA composition's on a zero aggregate
+        def _f(w_, b_, s_):
+            z = jnp.zeros((n_dstb * BLK, F), zd)
+            if has_self:
+                z = z + s_
+            y = jnp.dot(z, w_)
+            return update_epilogue(y, b_ if has_bias else None,
+                                   act).astype(jnp.result_type(zd, w_.dtype))
+        _, pullback = jax.vjp(_f, w, b, s)
+        dw, db, ds = pullback(g)
+        dh = jnp.zeros_like(h_in)
+    elif (n_dstb == 1 and act == "none" and F <= 256
+          and tile_off_t.shape[0] > 0):
+        # single-dst-block fast path: dw recompute and dh share ONE grid
+        # (see _fused_bwd_merged_kernel) — bits identical to the two-pass
+        # composition below
+        dz = jax.lax.dot_general(g, w, (((1,), (1,)), ((), ())))
+        dw, db, dh = _fused_bwd_merged_call(
+            tile_off, val, seg, cols, tile_off_t, val_t, seg_t, cols_t,
+            h_in, g, dz.astype(jnp.float32), w,
+            b if has_bias else None, s if has_self else None,
+            z_dtype=zd, edge_chunk=edge_chunk, interpret=interpret)
+        dh = dh.astype(h_in.dtype)
+        dw = dw.astype(w.dtype)
+        db = db.astype(b.dtype) if has_bias else jnp.zeros_like(b)
+        ds = dz.astype(s.dtype) if has_self else jnp.zeros_like(s)
+    else:
+        dw, db, dy = _fused_bwd_call(
+            tile_off, val, seg, cols, h_in, g, w,
+            b if has_bias else None, s if has_self else None,
+            act=act, z_dtype=zd, edge_chunk=edge_chunk, interpret=interpret)
+        if act == "none":
+            dy = g
+        dz = jax.lax.dot_general(dy, w, (((1,), (1,)), ((), ())))
+        dh = aggregate_edges(tile_off_t, val_t, seg_t, cols_t,
+                             dz.astype(jnp.float32), edge_chunk=edge_chunk,
+                             interpret=interpret).astype(h_in.dtype)
+        dw = dw.astype(w.dtype)
+        db = db.astype(b.dtype) if has_bias else jnp.zeros_like(b)
+        ds = dz.astype(s.dtype) if has_self else jnp.zeros_like(s)
+
+    def f0(a):
+        return np.zeros(a.shape, jax.dtypes.float0)
+
+    return (f0(tile_off), jnp.zeros_like(val), f0(seg), f0(cols),
+            f0(tile_off_t), jnp.zeros_like(val_t), f0(seg_t), f0(cols_t),
+            dh, dw, db, ds)
+
+
+aggregate_fused_vjp.defvjp(_fused_fwd, _fused_bwd)

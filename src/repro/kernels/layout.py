@@ -32,6 +32,12 @@ import numpy as np
 
 BLK = 128
 
+# aggregate_backend values that consume the per-tile SEGMENT layout (the
+# ``edge_stream=True`` builder output) instead of the scatter-densify
+# triples. Lives here — not in gnn/models.py — because the sampler-pool
+# codec and its worker processes must branch on it without importing jax.
+EDGE_STREAM_BACKENDS = ("pallas_edges", "pallas_fused")
+
 
 def build_block_csr(edge_src: np.ndarray, edge_dst: np.ndarray,
                     edge_mask: np.ndarray, n_src: int, n_dst: int,
@@ -233,6 +239,25 @@ def _edge_stream_sort(coo: dict, mask: np.ndarray, n_tiles: int,
         sorted_fields[f"val{suffix}"] = coo["val"][order]
         sorted_fields[f"tile_seg{suffix}"] = seg
     return sorted_fields
+
+
+def chunk_schedule(tile_seg: np.ndarray, edge_chunk: int
+                   ) -> Tuple[np.ndarray, int]:
+    """Per-tile DMA chunk counts for the fused kernel's double buffer.
+
+    The fused aggregation kernel streams tile ``t``'s segment
+    ``[tile_seg[t], tile_seg[t+1])`` from HBM into a two-slot VMEM scratch
+    in ``edge_chunk``-edge windows, prefetching window ``c+1`` while the MXU
+    densifies window ``c``. This host-side twin of that schedule returns
+    ``(counts, max_chunks)``: ``counts[t]`` is the number of DMA windows
+    tile ``t`` issues (``ceil(seg_len / edge_chunk)``) and ``max_chunks``
+    the worst tile — the simulator prices the fused datapath from it
+    (``core/simulator.py``) and the bench reports it, while the kernel
+    itself walks the same counts dynamically from ``tile_seg`` in VMEM."""
+    seg = np.asarray(tile_seg, np.int64)
+    lens = seg[1:] - seg[:-1]
+    counts = ((lens + edge_chunk - 1) // edge_chunk).astype(np.int32)
+    return counts, int(counts.max()) if len(counts) else 0
 
 
 def compact_layout_bytes(n_edges: int, n_dstb: int, max_blk: int,

@@ -13,8 +13,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.update_mlp import update_epilogue
 from repro.kernels.update_mlp import update_mlp as _update_pallas
 from repro.kernels.aggregate import (aggregate_blockcsr as _agg_pallas,
+                                     aggregate_edges as _agg_edges_pallas,
+                                     aggregate_fused as _agg_fused_pallas,
                                      build_block_csr, resolve_interpret, BLK)
 from repro.kernels.flash_attention import flash_attention_fwd as _flash_pallas
 from repro.kernels.wkv6 import wkv6_chunk as _wkv6_pallas
@@ -35,6 +38,26 @@ def aggregate(blocks, cols, h_in, *, feat_block: int = 256,
         return _agg_pallas(blocks, cols, h_in, feat_block=feat_block,
                            interpret=resolve_interpret())
     return jnp.asarray(ref.aggregate_dense_ref(blocks, cols, h_in))
+
+
+@functools.partial(jax.jit, static_argnames=("act", "use_pallas"))
+def aggregate_update(tile_off, val, seg, cols, h_in, w, b=None, s=None, *,
+                     act: str = "none", use_pallas: bool = True):
+    """Single-pass fused aggregate + update: ``act((A @ h [+ s]) @ w [+ b])``
+    with A in tile-sorted edge-segment form. The Pallas path runs ONE grid
+    (stream segment -> densify in VMEM -> SpMM -> update on the final
+    k-step, weights VMEM-resident); the reference path is the unfused
+    composition: edge-streaming SpMM, then the XLA matmul + epilogue."""
+    if use_pallas:
+        return _agg_fused_pallas(tile_off, val, seg, cols, h_in, w, b, s,
+                                 act=act, interpret=resolve_interpret())
+    agg = _agg_edges_pallas(tile_off, val, seg, cols,
+                            h_in.astype(jnp.float32),
+                            interpret=resolve_interpret())
+    z = agg.astype(h_in.dtype)
+    if s is not None:
+        z = z + s
+    return update_epilogue(jnp.dot(z, w), b, act)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "use_pallas"))

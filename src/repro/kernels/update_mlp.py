@@ -15,6 +15,26 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def update_epilogue(y: jax.Array, b: jax.Array | None, act: str) -> jax.Array:
+    """Bias + activation tail of the update MLP.
+
+    ``y`` is one row-block of the pre-activation (``z @ w``); ``b`` is the
+    (block_n,) bias slice or None. This is THE update-stage epilogue, shared
+    between the standalone ``update_mlp`` kernel below and the fused
+    aggregation kernel (``kernels/aggregate.aggregate_fused``), which runs
+    it on the final k-step of each output row-block with the MLP weights
+    resident in VMEM — so both paths apply bit-identical update math."""
+    if b is not None:
+        y = y + b.astype(jnp.float32)[None, :]
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "gelu":
+        y = jax.nn.gelu(y)
+    elif act != "none":
+        raise ValueError(f"unknown activation: {act!r}")
+    return y
+
+
 def _kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_k: int, act: str):
     @pl.when(pl.program_id(2) == 0)
     def _init():
@@ -25,11 +45,7 @@ def _kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_k: int, act: str):
 
     @pl.when(pl.program_id(2) == n_k - 1)
     def _done():
-        r = acc_ref[...] + b_ref[...].astype(jnp.float32)[None, :]
-        if act == "relu":
-            r = jnp.maximum(r, 0.0)
-        elif act == "gelu":
-            r = jax.nn.gelu(r)
+        r = update_epilogue(acc_ref[...], b_ref[...], act)
         o_ref[...] = r.astype(o_ref.dtype)
 
 
