@@ -1,6 +1,7 @@
 PYTHONPATH := src
 
-.PHONY: verify test test-faults test-mesh lint bench bench-smoke
+.PHONY: verify test test-faults test-mesh test-serve lint bench \
+	bench-smoke bench-serve
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -25,6 +26,16 @@ test-faults:
 test-mesh:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q \
 		tests/test_mesh.py tests/test_config_migration.py
+
+# Scheduling-core + serving suite in isolation (batch-source seam,
+# SLO micro-batching, bucket ladder, request-path chaos). Same
+# conditional pytest-timeout idiom as test-faults: the chaos tests kill
+# and hang sampler workers, so a wedged recovery path should fail one
+# test with a stack dump, not hang the job.
+test-serve:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q \
+		$$(python -c "import importlib.util as u; print('--timeout=300 --timeout-method=thread' if u.find_spec('pytest_timeout') else '')") \
+		tests/test_scheduling.py tests/test_serving.py
 
 # ruff check = the semantic lint gate (pyflakes/pycodestyle families per
 # pyproject). The per-file `ruff format --check` gate was dropped: the
@@ -62,5 +73,16 @@ bench-smoke:
 	print('bench-smoke:', json.dumps(d['aggregate_backends'], sort_keys=True)); \
 	print('bench-smoke:', json.dumps(d['feature_cache'], sort_keys=True)); \
 	print('bench-smoke:', json.dumps(d['mesh_scaling'], sort_keys=True))"
+
+# Serving latency benchmark: closed-loop p50/p99 vs offered load through
+# the request frontend (coalesce under the SLO -> supervised pool ->
+# bucketed compiled forward). Emits BENCH_serve.json (>= 3 load points,
+# warmup compile count, steady-state recompiles) and gates it: required
+# presence, literal-zero steady-state recompiles, and an absolute p99
+# ceiling.
+bench-serve:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only serve
+	PYTHONPATH=$(PYTHONPATH) python benchmarks/check_regression.py \
+		--serve-only --require-serve
 
 verify: test bench-smoke

@@ -1,0 +1,103 @@
+"""Serving-latency benchmark: p50/p99 vs offered load on the request-driven
+frontend (ROADMAP item 3 — the north-star "heavy traffic" scenario).
+
+A closed-loop load generator sweeps client counts over a served model
+(fresh parameters — serving latency does not depend on the weights'
+values), measuring per-request latency through the full path: coalesce
+under the SLO, sample on the supervised pool, gather, bucketed compiled
+forward. Alongside the CSV ``report`` lines the run writes
+``BENCH_serve.json`` (path overridable via the BENCH_SERVE_JSON env var):
+
+* ``load_points`` — >= 3 client counts, each with offered_rps / p50_ms /
+  p99_ms / slo_miss_rate / completed
+* ``warmup_compiles`` / ``steady_state_recompiles`` — the bucket-ladder
+  contract: after one warmup trace per bucket, the load sweep must add
+  ZERO compiles no matter how request sizes fluctuate
+
+``check_regression.py`` gates the report: required presence, a p99
+ceiling, and literal-zero steady-state recompiles.
+"""
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.configs.gnn import GNNModelConfig
+from repro.core.serving import closed_loop_load
+from repro.data.graphs import synthetic_graph
+
+JSON_PATH_ENV = "BENCH_SERVE_JSON"
+JSON_DEFAULT = "BENCH_serve.json"
+
+SCHEMA = 1
+
+
+def run(report, quick: bool = True) -> None:
+    from repro.gnn import serve
+
+    cpus = os.cpu_count() or 1
+    workers = 1 if quick or cpus < 4 else 2
+    scale = 11 if quick else 14
+    slo_ms = 50.0
+    graph = synthetic_graph(scale=scale, feat_dim=32, num_classes=8, seed=0,
+                            name="serve-bench")
+    cfg = GNNModelConfig("graphsage", fanouts=(5, 5), batch_targets=128)
+
+    client_sweep = (1, 2, 4)
+    requests_per_client = 20 if quick else 60
+
+    with serve(cfg, graph=graph, params=None, slo_ms=slo_ms,
+               num_workers=workers, seed=0) as server:
+        warmup_compiles = server.forward_compiles
+        report("serve_warmup_compiles", float(warmup_compiles),
+               f"buckets={list(server.buckets)}")
+
+        points = []
+        for clients in client_sweep:
+            t0 = time.time()
+            point = closed_loop_load(server, graph.train_ids,
+                                     clients=clients,
+                                     requests_per_client=requests_per_client,
+                                     ids_per_request=4, seed=0)
+            points.append(point)
+            report(f"serve_p99_ms_c{clients}", point["p99_ms"],
+                   f"rps={point['offered_rps']:.0f} "
+                   f"p50={point['p50_ms']:.1f}ms "
+                   f"miss={point['slo_miss_rate']:.2%} "
+                   f"wall={time.time() - t0:.1f}s")
+
+        recompiles = server.forward_compiles - warmup_compiles
+        report("serve_steady_state_recompiles", float(recompiles),
+               "must be 0")
+        stats = server.stats()
+
+    doc = {
+        "schema": SCHEMA,
+        "host_cpu_count": cpus,
+        "graph": {"name": graph.name, "vertices": int(graph.num_vertices)},
+        "model": {"name": cfg.name, "fanouts": list(cfg.fanouts),
+                  "batch_targets": cfg.batch_targets},
+        "slo_ms": slo_ms,
+        "buckets": list(server.buckets),
+        "pool_workers": workers,
+        "warmup_compiles": int(warmup_compiles),
+        "steady_state_recompiles": int(recompiles),
+        "load_points": points,
+        "pool_stats": {k: int(v) for k, v in
+                       (stats.get("pool") or {}).items()},
+    }
+    path = os.environ.get(JSON_PATH_ENV, JSON_DEFAULT)
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+    report("serve_json", 0.0, path)
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+    def _report(name, v, derived=""):
+        print(f"{name},{v:.3f},{derived}", flush=True)
+
+    run(_report, quick="--full" not in sys.argv)

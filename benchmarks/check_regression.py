@@ -55,6 +55,24 @@ Checks (exit code 1 on any failure):
   count beats workers=1 at all (>= 1.02x) and 1-CPU hosts skip the check
   entirely.
 
+Serving gates (``BENCH_serve.json``, produced by ``bench_serve``; checked
+whenever the file exists, required under ``--require-serve`` /
+``--serve-only``):
+
+* Required presence — >= 3 load points, each carrying offered_rps /
+  p50_ms / p99_ms / slo_miss_rate (a shrunken sweep means the latency
+  curve silently vanished from the bench).
+* Steady-state recompiles — LITERAL ZERO: after one warmup trace per
+  bucket, the whole load sweep must not add a single XLA compile; any
+  nonzero value means a request shape escaped the bucket ladder.
+* p99 ceiling — the worst load point's p99 must stay under
+  ``--serve-p99-ceiling`` milliseconds (default 2000 — an absolute
+  pathological-regression ceiling like the recovery gate, not a
+  wall-clock tolerance).
+
+``--serve-only`` checks only the serving report (the CI serve job's
+mode); otherwise serving gates run after the pipeline gates.
+
 A missing or schema-incompatible baseline passes with a warning (first run
 of a new schema), so the gate never blocks the PR that introduces it.
 
@@ -330,6 +348,67 @@ def compare(baseline: dict, fresh: dict, nvtps_tolerance: float,
     return failures
 
 
+def compare_serve(fresh: dict, p99_ceiling_ms: float) -> list:
+    """Serving gates on a fresh BENCH_serve.json (no committed baseline —
+    the contracts are absolute: presence, zero recompiles, a p99
+    ceiling)."""
+    failures = []
+    points = fresh.get("load_points")
+    if not isinstance(points, list) or len(points) < 3:
+        failures.append(
+            f"BENCH_serve.json must carry >= 3 load points, got "
+            f"{len(points) if isinstance(points, list) else 'none'} "
+            f"(latency-vs-load curve vanished from the bench)")
+        points = points if isinstance(points, list) else []
+    for i, p in enumerate(points):
+        missing = [k for k in ("offered_rps", "p50_ms", "p99_ms",
+                               "slo_miss_rate") if k not in p]
+        if missing:
+            failures.append(
+                f"serve load point {i} lacks {missing}")
+    recompiles = fresh.get("steady_state_recompiles")
+    if recompiles is None:
+        failures.append(
+            "BENCH_serve.json records no steady_state_recompiles (the "
+            "bucket-ladder zero-recompile contract cannot be checked)")
+    elif recompiles != 0:
+        failures.append(
+            f"steady-state serving recompiled {recompiles}x — after "
+            f"warmup the bucket ladder must absorb every request shape")
+    worst = max((p.get("p99_ms", 0.0) for p in points), default=0.0)
+    if worst > p99_ceiling_ms:
+        failures.append(
+            f"serving p99 {worst:.0f}ms exceeds the "
+            f"{p99_ceiling_ms:.0f}ms ceiling")
+    return failures
+
+
+def _check_serve(args) -> int:
+    """Run only the serving gates. Exit code semantics match main()."""
+    if not os.path.exists(args.serve_fresh):
+        if args.require_serve or args.serve_only:
+            print(f"check_regression: FAIL: required serving report "
+                  f"{args.serve_fresh} is missing")
+            return 1
+        print(f"check_regression: no serving report at "
+              f"{args.serve_fresh}; serve gates skipped")
+        return 0
+    with open(args.serve_fresh) as fh:
+        serve_fresh = json.load(fh)
+    failures = compare_serve(serve_fresh, args.serve_p99_ceiling)
+    if failures:
+        for f in failures:
+            print(f"check_regression: FAIL: {f}")
+        return 1
+    points = serve_fresh.get("load_points") or []
+    worst = max((p.get("p99_ms", 0.0) for p in points), default=0.0)
+    print(f"check_regression: serve PASS ({len(points)} load points, "
+          f"worst p99 {worst:.0f}ms, "
+          f"{serve_fresh.get('steady_state_recompiles')} steady-state "
+          f"recompiles)")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default="BENCH_pipeline.baseline.json")
@@ -338,25 +417,38 @@ def main() -> int:
     ap.add_argument("--pool-speedup", type=float, default=1.5)
     ap.add_argument("--gather-tolerance", type=float, default=1.0)
     ap.add_argument("--recovery-ceiling", type=float, default=10.0)
+    ap.add_argument("--serve-fresh", default="BENCH_serve.json")
+    ap.add_argument("--serve-only", action="store_true",
+                    help="check only the serving report")
+    ap.add_argument("--require-serve", action="store_true",
+                    help="fail when the serving report is missing")
+    ap.add_argument("--serve-p99-ceiling", type=float, default=2000.0,
+                    help="worst-load-point p99 ceiling, milliseconds")
     args = ap.parse_args()
+
+    if args.serve_only:
+        return _check_serve(args)
 
     with open(args.fresh) as fh:
         fresh = json.load(fh)
+    serve_rc = _check_serve(args)
     if not os.path.exists(args.baseline):
         print(f"check_regression: no baseline at {args.baseline}; "
               f"PASS (first run)")
-        return 0
+        return serve_rc
     with open(args.baseline) as fh:
         baseline = json.load(fh)
     if baseline.get("schema") != fresh.get("schema"):
         print(f"check_regression: baseline schema "
               f"{baseline.get('schema')} != fresh {fresh.get('schema')}; "
               f"PASS (schema migration)")
-        return 0
+        return serve_rc
 
     failures = compare(baseline, fresh, args.nvtps_tolerance,
                        args.pool_speedup, args.gather_tolerance,
                        args.recovery_ceiling)
+    if serve_rc:
+        failures.append("serving gates failed (see above)")
     if failures:
         for f in failures:
             print(f"check_regression: FAIL: {f}")

@@ -24,7 +24,7 @@ def main() -> None:
 
     from benchmarks import (bench_dse, bench_cross_platform, bench_ablation,
                             bench_scalability, bench_kernels, bench_pipeline,
-                            bench_roofline)
+                            bench_roofline, bench_serve)
     suites = {
         "dse": lambda: bench_dse.run(report),
         "cross_platform": lambda: bench_cross_platform.run(report, quick),
@@ -33,6 +33,7 @@ def main() -> None:
         "kernels": lambda: bench_kernels.run(report, quick),
         "pipeline": lambda: bench_pipeline.run(report, quick),
         "roofline": lambda: bench_roofline.run(report, quick),
+        "serve": lambda: bench_serve.run(report, quick),
     }
     only = [s for s in args.only.split(",") if s]
     print("name,us_per_call,derived")

@@ -85,14 +85,25 @@ class CacheConfig:
     * ``refresh_every`` — admission/eviction cadence: 0 = refresh at epoch
       boundaries only; K >= 1 = refresh every K synchronous iterations.
     * ``ship_rows_cap`` — max feature rows one payload may ship through the
-      sampling service's shared-memory ring (None = worst-case layer-0 node
-      capacity). Under the sharded mesh step the same cap bounds the
-      per-batch miss-row segment shipped to each device.
+      sampling service's shared-memory ring. Under the sharded mesh step
+      the same cap bounds the per-batch miss-row segment shipped to each
+      device. None defers to ``auto_ship_rows_cap`` (ring) or the
+      worst-case layer-0 node capacity (mesh miss segment).
+    * ``auto_ship_rows_cap`` — with ``ship_rows_cap`` unset, size the ring
+      slot from a MEASURED miss-row distribution instead of the worst case:
+      the trainer replays the next few epochs' schedules through the pure
+      ``batch_at`` streams, counts the rows each batch would ship, and
+      applies ``core.sampler_pool.suggest_ship_rows_cap`` with headroom
+      (see ``SyncGNNTrainer._ring_rows_cap``). A batch that later outgrows
+      the measured cap fails loudly in ``PayloadCodec.encode``, naming
+      ``ship_rows_cap`` as the escape hatch; ``False`` restores worst-case
+      sizing outright.
     """
 
     capacity: Optional[int] = None
     refresh_every: int = 0
     ship_rows_cap: Optional[int] = None
+    auto_ship_rows_cap: bool = True
 
 
 @dataclass(frozen=True)

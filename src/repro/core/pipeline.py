@@ -27,6 +27,12 @@ Design notes:
     WITH the worker's original traceback attached (the frames inside
     ``prepare`` stay visible, and the formatted worker trace is appended to
     the exception so it survives even if a later handler re-wraps it).
+
+WHERE the iteration items come from is no longer this module's concern:
+``core/scheduling.py`` owns the submit/fetch seam (epoch permutations and
+serving request queues both feed the same ``SchedulingCore``), and this
+executor overlaps whatever payload stream that seam yields with device
+compute. See also ``core/serving.py`` for the request-driven frontend.
 """
 from __future__ import annotations
 

@@ -65,16 +65,25 @@ class MiniBatch:
         return float(self.vertices_traversed() + self.edges_traversed())
 
 
-def layer_capacities(cfg: GNNModelConfig) -> Tuple[List[int], List[int]]:
-    """Static padded sizes per layer: node caps + edge caps (fanout bound).
-    Node caps include the frontier itself (self vertices stay resident)."""
-    n_caps = [cfg.batch_targets]
+def layer_capacities_for(batch_targets: int, fanouts: Sequence[int]
+                         ) -> Tuple[List[int], List[int]]:
+    """Static padded sizes per layer for an arbitrary target count: node
+    caps + edge caps (fanout bound). Node caps include the frontier itself
+    (self vertices stay resident). The serving path calls this with BUCKET
+    sizes smaller than ``cfg.batch_targets`` so each bucket gets its own
+    fixed-shape compiled forward."""
+    n_caps = [int(batch_targets)]
     e_caps = []
-    for fan in cfg.fanouts:
+    for fan in fanouts:
         e_caps.append(n_caps[-1] * fan)
         n_caps.append(n_caps[-1] * (fan + 1))
     # reverse into input->output order: nodes[0] is the deepest layer
     return n_caps[::-1], e_caps[::-1]
+
+
+def layer_capacities(cfg: GNNModelConfig) -> Tuple[List[int], List[int]]:
+    """Layer capacities at the config's full training batch shape."""
+    return layer_capacities_for(cfg.batch_targets, cfg.fanouts)
 
 
 class NeighborSampler:
@@ -197,13 +206,41 @@ class NeighborSampler:
         self._seq += 1
         return mb
 
-    def _materialize(self, targets: np.ndarray, rng: np.random.Generator,
-                     seq_no: int = 0) -> MiniBatch:
-        cfg = self.cfg
+    def request_batch(self, epoch: int, index: int,
+                      targets: np.ndarray) -> MiniBatch:
+        """Materialize an EXPLICIT-TARGET batch at the targets' own shape.
+
+        The serving frontend's twin of :meth:`batch_at`: ``(epoch, index)``
+        are pure RNG coordinates (the runtime reserves an epoch value
+        disjoint from training epochs and a monotonically increasing
+        micro-batch index), so a resubmitted or speculatively re-executed
+        request task re-samples the bit-identical neighborhood — the fault
+        tolerance contract carries over to serving unchanged. The batch is
+        padded to capacities derived from ``len(targets)`` (the bucket
+        size), NOT ``cfg.batch_targets``, so each bucket keeps one
+        fixed-shape compiled forward."""
         targets = np.asarray(targets, np.int32)
-        if len(targets) < cfg.batch_targets:  # pad tail batch
+        if not 1 <= len(targets) <= self.cfg.batch_targets:
+            raise ValueError(
+                f"request batch carries {len(targets)} targets; expected "
+                f"1..{self.cfg.batch_targets} (= batch_targets)")
+        n_caps, e_caps = layer_capacities_for(len(targets), self.cfg.fanouts)
+        return self._materialize(targets, self._stream(epoch, index + 1),
+                                 seq_no=index, node_caps=n_caps,
+                                 edge_caps=e_caps)
+
+    def _materialize(self, targets: np.ndarray, rng: np.random.Generator,
+                     seq_no: int = 0,
+                     node_caps: List[int] | None = None,
+                     edge_caps: List[int] | None = None) -> MiniBatch:
+        cfg = self.cfg
+        if node_caps is None:
+            node_caps, edge_caps = self.node_caps, self.edge_caps
+        targets = np.asarray(targets, np.int32)
+        target_cap = node_caps[-1]  # top-layer frontier = the targets
+        if len(targets) < target_cap:  # pad tail batch
             pad = rng.choice(self.train_ids,
-                             cfg.batch_targets - len(targets))
+                             target_cap - len(targets))
             targets = np.concatenate([targets, pad.astype(np.int32)])
 
         # sample from the top layer down
@@ -218,7 +255,7 @@ class NeighborSampler:
         edges = edges[::-1]
 
         nodes, node_mask = [], []
-        for cap, f in zip(self.node_caps, frontiers):
+        for cap, f in zip(node_caps, frontiers):
             n = np.zeros(cap, np.int32)
             m = np.zeros(cap, bool)
             k = min(len(f), cap)
@@ -228,7 +265,7 @@ class NeighborSampler:
             node_mask.append(m)
 
         edge_src, edge_dst, edge_mask, self_idx = [], [], [], []
-        for li, (cap, (src, dst)) in enumerate(zip(self.edge_caps, edges)):
+        for li, (cap, (src, dst)) in enumerate(zip(edge_caps, edges)):
             # frontiers[li] is sorted (np.unique) for every li < L, so
             # searchsorted maps global src ids -> local indices vectorized
             base = frontiers[li]
@@ -244,7 +281,7 @@ class NeighborSampler:
             edge_mask.append(em)
             # self index of each upper-layer vertex within this layer
             upper = frontiers[li + 1]
-            cap_up = self.node_caps[li + 1]
+            cap_up = node_caps[li + 1]
             si = np.zeros(cap_up, np.int32)
             kk = min(len(upper), cap_up)
             si[:kk] = np.searchsorted(base, upper[:kk]).astype(np.int32)
@@ -253,3 +290,55 @@ class NeighborSampler:
         return MiniBatch(nodes, node_mask, edge_src, edge_dst, edge_mask,
                          self_idx, targets, self.g.labels[targets],
                          self.partition_id, seq_no)
+
+
+# ---------------------------------------------------------------------------
+# Bucket-shape adapters (serving path)
+# ---------------------------------------------------------------------------
+# Request batches are materialized at BUCKET capacities (see
+# NeighborSampler.request_batch) but the sampler-pool ring carries exactly
+# one codec geometry — the full training shape. A worker therefore
+# zero-pads a bucket batch up to the codec's capacities before encode, and
+# the serving consumer slices the decoded batch back down to the bucket
+# before the bucket's compiled forward sees it. Padding is all-zeros with
+# all-False masks, so slice(pad(mb)) == mb bitwise.
+
+def _pad1(arr: np.ndarray, cap: int) -> np.ndarray:
+    out = np.zeros(cap, arr.dtype)
+    out[:len(arr)] = arr
+    return out
+
+
+def pad_minibatch(mb: MiniBatch, node_caps: Sequence[int],
+                  edge_caps: Sequence[int]) -> MiniBatch:
+    """Zero-pad a bucket-shaped batch up to ``node_caps``/``edge_caps``
+    (the codec's full training geometry). Real content stays a prefix;
+    the padding rows carry False masks so every consumer ignores them."""
+    t_cap = node_caps[-1]
+    return MiniBatch(
+        nodes=[_pad1(a, c) for a, c in zip(mb.nodes, node_caps)],
+        node_mask=[_pad1(a, c) for a, c in zip(mb.node_mask, node_caps)],
+        edge_src=[_pad1(a, c) for a, c in zip(mb.edge_src, edge_caps)],
+        edge_dst=[_pad1(a, c) for a, c in zip(mb.edge_dst, edge_caps)],
+        edge_mask=[_pad1(a, c) for a, c in zip(mb.edge_mask, edge_caps)],
+        self_idx=[_pad1(a, c) for a, c in zip(mb.self_idx, node_caps[1:])],
+        targets=_pad1(mb.targets, t_cap),
+        labels=_pad1(mb.labels, t_cap),
+        partition_id=mb.partition_id, seq_no=mb.seq_no)
+
+
+def slice_minibatch(mb: MiniBatch, node_caps: Sequence[int],
+                    edge_caps: Sequence[int]) -> MiniBatch:
+    """Inverse of :func:`pad_minibatch`: take the bucket-sized prefix of
+    every array. Exact because the pad was a pure suffix of zeros."""
+    t_cap = node_caps[-1]
+    return MiniBatch(
+        nodes=[a[:c] for a, c in zip(mb.nodes, node_caps)],
+        node_mask=[a[:c] for a, c in zip(mb.node_mask, node_caps)],
+        edge_src=[a[:c] for a, c in zip(mb.edge_src, edge_caps)],
+        edge_dst=[a[:c] for a, c in zip(mb.edge_dst, edge_caps)],
+        edge_mask=[a[:c] for a, c in zip(mb.edge_mask, edge_caps)],
+        self_idx=[a[:c] for a, c in zip(mb.self_idx, node_caps[1:])],
+        targets=mb.targets[:t_cap],
+        labels=mb.labels[:t_cap],
+        partition_id=mb.partition_id, seq_no=mb.seq_no)

@@ -93,16 +93,20 @@ from repro.configs.gnn import GNNModelConfig
 from repro.core.faults import FaultInjector, FaultSpec, resolve_fault_spec
 from repro.core.pipeline import ReorderBuffer
 from repro.core.residency import ResidencyCore, SharedResidency
-from repro.core.sampler import MiniBatch, NeighborSampler, layer_capacities
+from repro.core.sampler import (MiniBatch, NeighborSampler, layer_capacities,
+                                pad_minibatch)
 from repro.data.graphs import Graph, SharedGraphSpec
 from repro.kernels.layout import (BLK, EDGE_STREAM_BACKENDS,
                                   build_layer_layouts)
 
-# (partition, epoch, batch_index[, device[, generation]]) — device defaults
-# to the partition; generation is the cache generation the batch must be
-# gathered against (0 = the immutable static residency)
+# (partition, epoch, batch_index[, device[, generation[, targets]]]) —
+# device defaults to the partition; generation is the cache generation the
+# batch must be gathered against (0 = the immutable static residency);
+# targets (serving path) is an explicit target-id array that replaces the
+# epoch permutation's slice, with (epoch, index) still the RNG coordinates
 Task = Union[Tuple[int, int, int], Tuple[int, int, int, int],
-             Tuple[int, int, int, int, int]]
+             Tuple[int, int, int, int, int],
+             Tuple[int, int, int, int, int, Optional[np.ndarray]]]
 
 # bytes reserved at the head of every ring slot for [crc32, used_bytes]
 # (two uint32 — already 8-byte aligned, so the payload entries follow
@@ -293,10 +297,11 @@ class PayloadCodec:
                 raise ValueError(
                     f"feature ring capacity overflow: batch ships {m} rows "
                     f"but the slot holds rows_cap={self.feat.rows_cap}; "
-                    f"raise GNNModelConfig.ship_rows_cap (None = worst-case "
-                    f"layer-0 node cap), or re-derive it from measured miss "
-                    f"distributions with "
-                    f"core.sampler_pool.suggest_ship_rows_cap")
+                    f"set GNNModelConfig.ship_rows_cap explicitly (it "
+                    f"overrides the measured default), or disable the "
+                    f"measured sizing with CacheConfig."
+                    f"auto_ship_rows_cap=False to fall back to the "
+                    f"worst-case layer-0 node cap")
         for key, l, shape, dtype, off in self.entries:
             if key == "slot_crc":
                 continue
@@ -469,7 +474,7 @@ def _worker_main(worker_id: int, spec: SharedGraphSpec, cfg: GNNModelConfig,
             task = task_q.get()
             if task is None:
                 return
-            seq, part, epoch, index, device, gen = task
+            seq, part, epoch, index, device, gen, targets = task
             try:
                 inject = None
                 if injector is not None:
@@ -485,7 +490,15 @@ def _worker_main(worker_id: int, spec: SharedGraphSpec, cfg: GNNModelConfig,
                         inject = "encode_overflow"
                     elif injector.fire("corrupt_slot", tid) is not None:
                         inject = "corrupt_slot"
-                mb = samplers[part].batch_at(epoch, index)
+                if targets is None:
+                    mb = samplers[part].batch_at(epoch, index)
+                else:
+                    # serving path: bucket-shaped explicit-target batch,
+                    # zero-padded up to the ring codec's single geometry
+                    # (the consumer slices the prefix back down)
+                    mb = pad_minibatch(
+                        samplers[part].request_batch(epoch, index, targets),
+                        *layer_capacities(cfg))
                 layout = None
                 if blk_caps is not None:
                     layout = build_layer_layouts(
@@ -540,14 +553,23 @@ def _worker_main(worker_id: int, spec: SharedGraphSpec, cfg: GNNModelConfig,
 
 
 class _TaskRecord:
-    """Supervisor bookkeeping for one submitted-but-undelivered task."""
+    """Supervisor bookkeeping for one submitted-but-undelivered task.
 
-    __slots__ = ("task", "attempts", "submitted_at")
+    ``dup_causes`` records WHY extra live copies of this task may exist —
+    one entry per copy beyond the first: ``"speculative"`` for a straggler
+    race, ``"resubmit"`` for a post-death blanket resubmission (which also
+    re-enqueues tasks a LIVE worker still holds). When the winner delivers,
+    the causes move to the pool's expected-duplicate table so each late
+    copy is attributed to its cause exactly once — a resubmission overlap
+    must never inflate the speculative-hit count."""
 
-    def __init__(self, task: Tuple[int, int, int, int, int]):
+    __slots__ = ("task", "attempts", "submitted_at", "dup_causes")
+
+    def __init__(self, task: tuple):
         self.task = task
         self.attempts = 1
         self.submitted_at = time.monotonic()
+        self.dup_causes: List[str] = []
 
 
 class SamplerPool:
@@ -655,9 +677,14 @@ class SamplerPool:
         self._local_samplers: Optional[List[NeighborSampler]] = None
         self._last_supervise = 0.0
         self.stats = {"respawns": 0, "resubmissions": 0, "speculative": 0,
-                      "duplicates_dropped": 0, "retried_errors": 0,
+                      "duplicates_dropped": 0, "stale_results": 0,
+                      "retried_errors": 0,
                       "crc_failures": 0, "degraded_tasks": 0,
                       "gen_stalls": 0, "recovery_s": 0.0}
+        # seq -> ([remaining duplicate causes], registered_at): filled when
+        # a task with extra live copies delivers, consumed as the losers
+        # land, purged by _supervise if a loser died with its worker
+        self._dup_expected: dict[int, Tuple[List[str], float]] = {}
         self._affinity_cores: Optional[List[int]] = None
         if worker_affinity and hasattr(os, "sched_getaffinity"):
             self._affinity_cores = sorted(os.sched_getaffinity(0))
@@ -710,19 +737,26 @@ class SamplerPool:
         return self._outstanding
 
     def submit(self, partition: int, epoch: int, index: int,
-               device: Optional[int] = None, generation: int = 0) -> int:
+               device: Optional[int] = None, generation: int = 0,
+               targets: Optional[np.ndarray] = None) -> int:
         """Enqueue one batch task. ``device`` is the target device whose
         residency decides which feature rows ship (defaults to the
         partition, the scheduler's static stage-1 mapping); ``generation``
         is the cache generation the worker must gather against (0 = the
         residency as shared — the only generation an immutable core ever
-        has). Both are ignored when the pool gathers no features."""
+        has). Both are ignored when the pool gathers no features.
+        ``targets`` (serving path) replaces the epoch permutation's slice
+        with explicit target ids — ``(epoch, index)`` stay the RNG
+        coordinates, so resubmission/speculation re-execute bit-identically;
+        the payload comes back padded to the codec geometry with the bucket
+        prefix real."""
         if self._closed:
             raise RuntimeError("SamplerPool is closed")
         seq = self._seq
         self._seq += 1
         dev = partition if device is None else device
-        task = (partition, epoch, index, dev, generation)
+        task = (partition, epoch, index, dev, generation,
+                None if targets is None else np.asarray(targets, np.int32))
         self._inflight[seq] = _TaskRecord(task)
         if not self._degraded:
             self._task_q.put((seq,) + task)
@@ -783,12 +817,25 @@ class SamplerPool:
         seq, kind, payload = msg
         rec = self._inflight.get(seq)
         if rec is None:
-            # already delivered by a speculative twin — first result won;
-            # the payloads are bit-identical (counter-based RNG), so just
-            # recycle the loser's slot
+            # already delivered — the payloads are bit-identical
+            # (counter-based RNG), so just recycle the loser's slot and
+            # attribute the duplicate to its cause: a lost speculative race
+            # counts as a speculative hit (duplicates_dropped), a
+            # post-death resubmission overlap is a stale result. Never
+            # guess: an untracked duplicate is stale, so speculative hits
+            # can never exceed speculative launches.
             if kind == "ok":
                 self._recycle_slot(payload[0])
-            self.stats["duplicates_dropped"] += 1
+            causes, _ = self._dup_expected.get(seq, ([], 0.0))
+            if "speculative" in causes:
+                causes.remove("speculative")
+                self.stats["duplicates_dropped"] += 1
+            else:
+                if causes:
+                    causes.pop()
+                self.stats["stale_results"] += 1
+            if not causes:
+                self._dup_expected.pop(seq, None)
             return
         if kind == "error":
             if isinstance(payload[0], GenerationStallError):
@@ -821,10 +868,17 @@ class SamplerPool:
         self._recycle_slot(slot)
         if feats is not None:
             feats["device"] = device
+        self._expect_duplicates(seq, rec)
         del self._inflight[seq]
         self._rob.put(seq, ("ok", {"minibatch": mb, "layout": layout,
                                    "features": feats, "ring_bytes": used,
                                    "load": load}))
+
+    def _expect_duplicates(self, seq: int, rec: _TaskRecord) -> None:
+        """On delivery, remember which extra copies of ``seq`` may still
+        land (and why), so each late arrival is attributed once."""
+        if rec.dup_causes:
+            self._dup_expected[seq] = (rec.dup_causes, time.monotonic())
 
     def _recycle_slot(self, slot: int) -> None:
         if self._lease is not None:
@@ -837,6 +891,7 @@ class SamplerPool:
         error through the reorder buffer once it runs out (a deterministic
         bug fails every attempt — it must reach the caller)."""
         if rec.attempts >= self.max_task_retries:
+            self._expect_duplicates(seq, rec)
             del self._inflight[seq]
             self._rob.put(seq, ("error", err_payload))
             return
@@ -853,6 +908,11 @@ class SamplerPool:
         the head-of-line task for straggling. Called from ``fetch``'s poll
         loop at most every 0.2 s."""
         self._last_supervise = time.monotonic()
+        # expected duplicates whose copy died with its worker never arrive —
+        # drop stale entries so the table stays bounded
+        for seq in [s for s, (_, t) in self._dup_expected.items()
+                    if self._last_supervise - t > 60.0]:
+            del self._dup_expected[seq]
         if self._degraded or self._closed:
             return
         dead = [w for w, p in enumerate(self._procs)
@@ -887,6 +947,7 @@ class SamplerPool:
             # on a healthy worker; ReorderBuffer drops whichever loses
             rec.attempts += 1
             rec.submitted_at = time.monotonic()
+            rec.dup_causes.append("speculative")
             self.stats["speculative"] += 1
             self.stats["resubmissions"] += 1
             self._task_q.put((seq,) + rec.task)
@@ -920,10 +981,17 @@ class SamplerPool:
         attempts increment: a crash is not the task's fault, and the
         respawn budget already bounds crash loops. The sequence numbers are
         unchanged, so delivery order — and therefore training — is
-        bit-identical to the fault-free run."""
+        bit-identical to the fault-free run.
+
+        Only ONE of the resubmitted tasks died with the worker; the rest
+        are still queued or held by live workers, so each resubmission is a
+        potential duplicate — recorded as a ``"resubmit"`` cause so its
+        late copy lands in ``stale_results``, never in the speculative-hit
+        count."""
         now = time.monotonic()
         for seq, rec in sorted(self._inflight.items()):
             rec.submitted_at = now
+            rec.dup_causes.append("resubmit")
             self.stats["resubmissions"] += 1
             self._task_q.put((seq,) + rec.task)
 
@@ -962,12 +1030,18 @@ class SamplerPool:
         """The workers=0 twin of ``_worker_main``'s task body, against the
         parent-held graph/residency (no ring, ring_bytes=0). Counter-based
         RNG makes the payload bit-identical to a worker's."""
-        part, epoch, index, device, gen = task
+        part, epoch, index, device, gen, targets = task
         if self._local_samplers is None:
             self._local_samplers = [
                 NeighborSampler(self._graph, self._cfg, ids, p, self._seed)
                 for p, ids in enumerate(self._ids)]
-        mb = self._local_samplers[part].batch_at(epoch, index)
+        if targets is None:
+            mb = self._local_samplers[part].batch_at(epoch, index)
+        else:
+            mb = pad_minibatch(
+                self._local_samplers[part].request_batch(epoch, index,
+                                                         targets),
+                *layer_capacities(self._cfg))
         layout = None
         if self._blk_caps is not None:
             layout = build_layer_layouts(
@@ -989,8 +1063,8 @@ class SamplerPool:
     def map_tasks(self, tasks: Iterable[Task],
                   window: Optional[int] = None,
                   fetch_timeout: float = 300.0) -> Iterator[dict]:
-        """Run ``(partition, epoch, index[, device[, generation]])`` tasks
-        with a bounded
+        """Run ``(partition, epoch, index[, device[, generation[,
+        targets]]])`` tasks with a bounded
         submission window, yielding payloads in task order. The window
         (default ``4 * num_workers``) caps staged-but-unconsumed batches,
         bounding host memory exactly like the prefetch executor's queue

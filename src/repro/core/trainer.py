@@ -51,7 +51,8 @@ from repro.core.feature_store import FeatureStore
 from repro.core.pipeline import PipelineStats, PrefetchExecutor
 from repro.core.sampler import (NeighborSampler, MiniBatch,
                                 layer_capacities)
-from repro.core.sampler_pool import SamplerPool
+from repro.core.sampler_pool import SamplerPool, suggest_ship_rows_cap
+from repro.core.scheduling import BatchTask, EpochSource, SchedulingCore
 from repro.core import scheduler as sched
 from repro.gnn import models as gnn_models
 from repro.kernels.aggregate import (BLK, EDGE_STREAM_BACKENDS,
@@ -507,13 +508,24 @@ class SyncGNNTrainer:
                                    gnn_models.AGG_KIND[self.model_cfg.name],
                                    edge_stream=self._edge_stream())
 
-    def _sample_payload(self, a: sched.Assignment) -> dict:
-        """In-process twin of one SamplerPool task: stage 1 (sample) plus
-        stage 2b (compact layout build) for one scheduled batch."""
-        mb = self.samplers[a.partition].next_batch()
+    def _local_payload(self, task: BatchTask) -> dict:
+        """The scheduling core's workers=0 runner: stage 1 through the
+        partition's CURSOR-stateful sampler — bit-identical to
+        ``batch_at(task.epoch, task.index)`` here, because the schedule
+        visits each partition's batches in index order, while keeping the
+        checkpointable cursor advancing exactly as before the scheduling-
+        core extraction — plus stage 2b (compact layout build)."""
+        mb = self.samplers[task.partition].next_batch()
         layout = self._block_csr_arrays(mb) if self._blk_caps else None
         return {"minibatch": mb, "layout": layout,
                 "load": mb.work_estimate()}
+
+    def _sample_payload(self, a: sched.Assignment) -> dict:
+        """In-process twin of one SamplerPool task: stage 1 (sample) plus
+        stage 2b (compact layout build) for one scheduled batch."""
+        return self._local_payload(
+            BatchTask(a.partition, self.samplers[a.partition].epoch,
+                      a.batch_index, a.device))
 
     def _batch_load(self, a: sched.Assignment, payload: dict) -> float:
         """Eq. 5 load estimate for the dynamic balancer, INCLUDING stage 2:
@@ -764,7 +776,7 @@ class SyncGNNTrainer:
                 residency=(self.store.core if self.gather_in_workers
                            else None),
                 p3_full=self.algorithm == "p3",
-                feat_rows_cap=self.model_cfg.ship_rows_cap,
+                feat_rows_cap=self._ring_rows_cap(),
                 worker_affinity=self.worker_affinity,
                 max_respawns=self.model_cfg.max_respawns,
                 straggler_timeout_s=self.model_cfg.straggler_timeout_s,
@@ -772,32 +784,48 @@ class SyncGNNTrainer:
                 fault_spec=self.model_cfg.fault_spec)
         return self._pool
 
-    def _pool_prepared_items(self, groups: List[List[sched.Assignment]],
-                             epoch: int):
-        """(group, payloads) stream through the sampling service. Batches
-        are addressed as (partition, epoch, batch_index) — pure RNG
-        coordinates — and come back in submission order via the pool's
-        reorder buffer, so this stream is bit-identical to the in-process
-        sampler whatever the worker count or completion order. The bounded
-        submission window caps staged batches exactly like prefetch depth."""
-        pool = self._ensure_pool()
-        window = max(4 * self.num_sampler_workers,
-                     (self.prefetch_depth + 1) * self.num_devices)
-        # a.device is the scheduler's static target — exact under
-        # round_robin; under "load" it is the residency HINT the worker
-        # gathers for (placement re-accounts if the balancer moves the
-        # batch; values are device-independent so training is unaffected).
-        # The generation stamp names the cache contents the worker must
-        # gather against — a pure function of the batch's global iteration
-        # number, so the hit/miss split is identical for every worker
-        # count and completion order.
-        base = self._iter_no
-        tasks = ((a.partition, epoch, a.batch_index, a.device,
-                  self._task_gen(base + gi))
-                 for gi, g in enumerate(groups) for a in g)
-        payload_iter = pool.map_tasks(tasks, window)
-        for g in groups:
-            yield g, [next(payload_iter) for _ in g]
+    def _ring_rows_cap(self) -> Optional[int]:
+        """Ring-slot rows capacity for the sampling service's codec.
+
+        An explicit ``GNNModelConfig.ship_rows_cap`` always wins; with the
+        knob unset and ``CacheConfig.auto_ship_rows_cap`` on (the default),
+        the cap is MEASURED instead of worst-case: replay the next few
+        epochs' schedules through the pure ``batch_at`` streams, count the
+        rows each batch would actually ship (misses for the target device;
+        every valid layer-0 row under P3 full-row shipping), and size the
+        slot from that distribution via ``suggest_ship_rows_cap`` — the
+        PR-5 carry-over that shrinks shm well below the worst-case layer-0
+        node cap. A later batch that outgrows the measured cap fails
+        loudly in ``PayloadCodec.encode`` naming the knob;
+        ``auto_ship_rows_cap=False`` restores worst-case sizing."""
+        cfg = self.model_cfg
+        if cfg.ship_rows_cap is not None:
+            return cfg.ship_rows_cap
+        if not self.gather_in_workers or not cfg.cache.auto_ship_rows_cap:
+            return None
+        p3 = self.algorithm == "p3"
+        fn = (sched.two_stage_schedule if self.workload_balancing
+              else sched.naive_schedule)
+        schedule = fn([s.epoch_batches() for s in self.samplers])
+        counts = []
+        epoch0 = self.samplers[0].epoch
+        for epoch in range(epoch0, epoch0 + 3):
+            for a in schedule:
+                mb = self.samplers[a.partition].batch_at(epoch,
+                                                         a.batch_index)
+                ids = np.asarray(mb.nodes[0])
+                valid = np.asarray(mb.node_mask[0], bool)
+                if p3:  # p3_full ships every valid row's reconstruction
+                    counts.append(int(valid.sum()))
+                else:
+                    counts.append(self.store.core.miss_count(
+                        a.device, ids, valid))
+        # max + headroom: epochs beyond the calibration window permute the
+        # same train set, so their per-batch ship counts concentrate around
+        # the measured ones — 25% slack absorbs the drift (and a cache's
+        # later evictions), and the result never exceeds the worst case
+        cap = suggest_ship_rows_cap(counts, percentile=100.0, margin=1.25)
+        return min(cap, layer_capacities(cfg)[0][0])
 
     def _task_gen(self, global_iter: int) -> int:
         """Cache generation the batch of synchronous iteration
@@ -854,19 +882,44 @@ class SyncGNNTrainer:
         run_groups = groups[self._epoch_iter:] if resume else groups
         t0 = time.time()
         pstats = self._pstats = PipelineStats()
+        # the scheduling core streams the epoch's batch source — one unit
+        # per iteration group, tasks addressed by pure RNG coordinates
+        # (partition, epoch, batch_index). a.device is the scheduler's
+        # static target — exact under round_robin; under "load" it is the
+        # residency HINT the worker gathers for (placement re-accounts if
+        # the balancer moves the batch; values are device-independent so
+        # training is unaffected). The generation stamp names the cache
+        # contents the worker must gather against — a pure function of the
+        # batch's global iteration number, so the hit/miss split is
+        # identical for every worker count and completion order.
+        base = self._iter_no
+        source = EpochSource(run_groups, self.samplers[0].epoch,
+                             gen_for_group=lambda gi: self._task_gen(
+                                 base + gi))
         if self.num_sampler_workers > 0:
             # stage 1+2b run in the sampler worker processes; the prefetch
             # thread only gathers features, stacks, and keeps the reorder
-            # buffer drained while the main thread dispatches device steps
-            self._ensure_pool()
-            items = self._pool_prepared_items(run_groups,
-                                              self.samplers[0].epoch)
+            # buffer drained while the main thread dispatches device steps.
+            # Payloads come back in submission order via the pool's reorder
+            # buffer, so the stream is bit-identical to the in-process
+            # sampler whatever the worker count or completion order; the
+            # bounded submission window caps staged batches exactly like
+            # prefetch depth.
+            core = SchedulingCore(
+                pool=self._ensure_pool(),
+                window=max(4 * self.num_sampler_workers,
+                           (self.prefetch_depth + 1) * self.num_devices))
+            items = core.payload_stream(source)
 
             def prepare(item):
                 return self._assemble_group(*item)
         else:
-            items = run_groups
-            prepare = self._prepare_group
+            items = source.units()
+
+            def prepare(item):
+                group, tasks = item
+                return self._assemble_group(
+                    group, [self._local_payload(t) for t in tasks])
         # per-epoch recovery metrics = the pool's lifetime counters deltaed
         # against this snapshot
         self._pool_stats0 = (dict(self._pool.stats)
@@ -946,13 +999,18 @@ class SyncGNNTrainer:
         pstat = pool.stats if pool is not None else {}
         recov = {k: pstat.get(k, 0) - base.get(k, 0)
                  for k in ("respawns", "resubmissions", "speculative",
-                           "duplicates_dropped", "crc_failures",
+                           "duplicates_dropped", "stale_results",
+                           "crc_failures",
                            "degraded_tasks", "recovery_s")}
         return {**metrics, "epoch_time_s": wall, "batches": n_batches,
                 "pool_respawns": recov["respawns"],
                 "pool_resubmissions": recov["resubmissions"],
+                # duplicates_dropped now counts ONLY resolved speculative
+                # races (post-death resubmission overlaps land in
+                # stale_results), so hits can never exceed launches
                 "pool_speculative_hits": recov["duplicates_dropped"],
                 "pool_speculative_launched": recov["speculative"],
+                "pool_stale_results": recov["stale_results"],
                 "pool_crc_failures": recov["crc_failures"],
                 "pool_degraded_batches": recov["degraded_tasks"],
                 "pool_recovery_s": recov["recovery_s"],

@@ -11,4 +11,7 @@ def __getattr__(name):
     if name in ("train", "TrainResult", "evaluate"):
         from repro.gnn import api
         return getattr(api, name)
+    if name in ("serve", "GNNServer"):
+        from repro.gnn import serving
+        return getattr(serving, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

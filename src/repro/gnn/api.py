@@ -19,6 +19,18 @@ paper's framing. ``platform.data_parallel=True`` additionally builds the
 jax device mesh and runs the shard_map step, one mesh device per platform
 device (simulate devices on a CPU host with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+
+The same trio also stands up the request-driven serving frontend
+(``repro.gnn.serve`` — the north-star "heavy traffic" scenario): trained
+parameters answer target-node inference requests, coalesced into
+SLO-bounded micro-batches on the same fault-tolerant sampler pool:
+
+    from repro.gnn import serve
+
+    with serve(cfg, graph=g, params=result.params,
+               slo_ms=50.0, num_workers=2) as server:
+        logits = server.predict([123, 456])   # synchronous path
+        fut = server.submit([789])            # coalesced, returns a Future
 """
 from __future__ import annotations
 

@@ -522,3 +522,62 @@ def test_restore_raises_when_no_checkpoint_verifies(tmp_path):
     assert ck.latest_step() is None
     with pytest.raises(FileNotFoundError):
         ck.restore(1, params)
+
+
+# ---------------------------------------------------------------------------
+# duplicate-cause reconciliation: speculative hits vs stale resubmit copies
+# ---------------------------------------------------------------------------
+
+def _drain_until(pool, pred, timeout=8.0):
+    """Poll the result queue until ``pred()`` holds (late duplicate copies
+    land asynchronously, after the winners were already fetched)."""
+    t0 = time.time()
+    while time.time() - t0 < timeout:
+        pool._drain_results()
+        if pred():
+            return True
+        time.sleep(0.02)
+    return pred()
+
+
+def test_speculative_loser_counts_once_per_launch():
+    """Every speculative LAUNCH accounts for at most one dropped duplicate
+    (the losing copy), and a resolved race never lands in stale_results —
+    speculative hits can never exceed speculative launches."""
+    with SamplerPool(G, CFG, [G.train_ids], seed=3, num_workers=2,
+                     straggler_timeout_s=0.3,
+                     fault_spec="hang:1.2@0.0.0") as pool:
+        outs = list(pool.map_tasks([(0, 0, i) for i in range(4)],
+                                   fetch_timeout=120.0))
+        assert len(outs) == 4
+        launches = pool.stats["speculative"]
+        assert launches >= 1
+        # the hung worker eventually delivers the losing copies
+        assert _drain_until(
+            pool, lambda: pool.stats["duplicates_dropped"] == launches)
+        assert pool.stats["duplicates_dropped"] == launches
+        assert pool.stats["stale_results"] == 0
+
+
+def test_resubmit_duplicates_after_kill_are_stale_not_speculative():
+    """A worker death resubmits EVERY in-flight task, but only the copy
+    the worker was holding actually died — the still-queued originals run
+    too, and their late twins must land in stale_results, NOT in
+    duplicates_dropped (the old accounting reported them as phantom
+    speculative hits with zero speculative launches)."""
+    ref = NeighborSampler(G, CFG, G.train_ids, 0, seed=3)
+    with SamplerPool(G, CFG, [G.train_ids], seed=3, num_workers=1,
+                     fault_spec="kill@0.0.0") as pool:
+        for i in range(4):
+            pool.submit(0, 0, i)
+        outs = [pool.fetch(timeout=120.0) for _ in range(4)]
+        assert pool.stats["respawns"] == 1
+        assert pool.stats["resubmissions"] == 4
+        assert pool.stats["speculative"] == 0
+        # the 3 queued-and-also-resubmitted tasks each deliver a late twin
+        assert _drain_until(pool,
+                            lambda: pool.stats["stale_results"] == 3)
+        assert pool.stats["stale_results"] == 3
+        assert pool.stats["duplicates_dropped"] == 0
+    for i, out in enumerate(outs):
+        _assert_payload_matches(ref, out, 0, i)

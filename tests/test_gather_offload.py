@@ -325,3 +325,70 @@ def test_batch_load_includes_gathered_feature_bytes():
     load = LoadBalancer.batch_load(mb.work_estimate(), miss0,
                                    G.features.shape[1])
     assert load == mb.work_estimate() + miss0 * G.features.shape[1]
+
+
+# ---------------------------------------------------------------------------
+# ring-slot sizing: measured default, explicit override, worst-case fallback
+# ---------------------------------------------------------------------------
+
+def test_ring_rows_cap_auto_measured_below_worst_case():
+    """With ship_rows_cap unset, the trainer sizes the ring slot from the
+    replayed schedule's actual ship counts — strictly below the worst-case
+    layer-0 node cap on a partitioned graph, and deterministic per seed."""
+    from repro.core.trainer import SyncGNNTrainer
+    worst = layer_capacities(CFG)[0][0]
+    caps = []
+    for _ in range(2):
+        t = SyncGNNTrainer(G, CFG, num_devices=2, seed=3,
+                           num_sampler_workers=2, gather_in_workers=True)
+        try:
+            caps.append(t._ring_rows_cap())
+        finally:
+            t.close()
+    assert caps[0] == caps[1]
+    assert caps[0] is not None and 0 < caps[0] < worst
+
+
+def test_ring_rows_cap_explicit_override_wins():
+    from repro.core.trainer import SyncGNNTrainer
+    cfg = GNNModelConfig("graphsage", num_layers=2, hidden=8,
+                         fanouts=(3, 2), batch_targets=16,
+                         ship_rows_cap=7)
+    t = SyncGNNTrainer(G, cfg, num_devices=2, seed=3,
+                       num_sampler_workers=2, gather_in_workers=True)
+    try:
+        assert t._ring_rows_cap() == 7
+    finally:
+        t.close()
+
+
+def test_ring_rows_cap_auto_disabled_falls_back_to_worst_case():
+    from repro.configs.gnn import CacheConfig
+    from repro.core.trainer import SyncGNNTrainer
+    cfg = GNNModelConfig("graphsage", num_layers=2, hidden=8,
+                         fanouts=(3, 2), batch_targets=16,
+                         cache=CacheConfig(auto_ship_rows_cap=False))
+    t = SyncGNNTrainer(G, cfg, num_devices=2, seed=3,
+                       num_sampler_workers=2, gather_in_workers=True)
+    try:
+        # None -> the pool falls back to the worst-case layer-0 node cap
+        assert t._ring_rows_cap() is None
+    finally:
+        t.close()
+
+
+def test_ring_overflow_error_names_the_knobs():
+    """An explicit cap too small for the stream surfaces the codec's
+    overflow error — naming ship_rows_cap and the auto-sizing escape
+    hatch — instead of wedging the ring."""
+    from repro.core.trainer import SyncGNNTrainer
+    cfg = GNNModelConfig("graphsage", num_layers=2, hidden=8,
+                         fanouts=(3, 2), batch_targets=16,
+                         ship_rows_cap=1)
+    t = SyncGNNTrainer(G, cfg, num_devices=2, seed=3,
+                       num_sampler_workers=1, gather_in_workers=True)
+    try:
+        with pytest.raises(ValueError, match="ship_rows_cap"):
+            t.run_epoch()
+    finally:
+        t.close()
